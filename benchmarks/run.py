@@ -1,0 +1,41 @@
+"""Benchmark aggregator: one line of CSV per benchmark —
+``name,us_per_call,derived``.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table2     # one suite
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import fig2_decay, periter, roofline, table1_rates, \
+    table2_times
+
+SUITES = {
+    "table1": table1_rates,
+    "table2": table2_times,
+    "fig2": fig2_decay,
+    "periter": periter,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    names = argv if argv else list(SUITES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in names:
+        mod = SUITES[name]
+        try:
+            for row in mod.csv_rows():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception as e:  # report, keep going
+            print(f"{name}/ERROR,0,{e!r}")
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

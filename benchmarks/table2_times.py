@@ -1,0 +1,89 @@
+"""Table 2 reproduction: optimal convergence times T = 1/(-log rho).
+
+Prints our measured T per (problem × method) next to the paper's published
+values.  The Matrix Market problems are spectrum-matched proxies (offline
+container — data/linsys.py), so OUR absolute numbers differ from the
+paper's; the claims under test are (1) APC wins everywhere, (2) often by
+orders of magnitude, (3) D-HBM is the closest competitor, and (4) the gap
+explodes for nonzero-mean ensembles.  Those are asserted at the bottom.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import spectral
+from repro.data import linsys
+
+# Paper Table 2 (for the side-by-side print).
+PAPER = {
+    "qc324": {"DGD": 1.22e7, "D-NAG": 4.28e3, "D-HBM": 2.47e3,
+              "M-ADMM": 1.07e7, "B-Cimmino": 3.10e5, "APC": 3.93e2},
+    "orsirr1": {"DGD": 2.98e9, "D-NAG": 6.68e4, "D-HBM": 3.86e4,
+                "M-ADMM": 2.08e8, "B-Cimmino": 2.69e7, "APC": 3.67e3},
+    "ash608": {"DGD": 5.67, "D-NAG": 2.43, "D-HBM": 1.64,
+               "M-ADMM": 1.28e1, "B-Cimmino": 4.98, "APC": 1.53},
+    "std_gaussian": {"DGD": 1.76e7, "D-NAG": 5.14e3, "D-HBM": 2.97e3,
+                     "M-ADMM": 1.20e6, "B-Cimmino": 1.46e7, "APC": 2.70e3},
+    "nonzero_mean": {"DGD": 2.22e10, "D-NAG": 1.82e5, "D-HBM": 1.05e5,
+                     "M-ADMM": 8.62e8, "B-Cimmino": 9.29e8, "APC": 2.16e4},
+    "tall_gaussian": {"DGD": 1.58e1, "D-NAG": 4.37, "D-HBM": 2.78,
+                      "M-ADMM": 4.49e1, "B-Cimmino": 1.13e1, "APC": 2.34},
+}
+
+METHODS = ["DGD", "D-NAG", "D-HBM", "B-Cimmino", "APC"]
+
+
+def run(verbose: bool = True):
+    jax.config.update("jax_enable_x64", True)
+    results = {}
+    for prob in PAPER:
+        sys_ = linsys.ALL_PROBLEMS[prob]()
+        s = spectral.rates_summary(sys_)
+        T = {m: spectral.convergence_time(s[m]) for m in METHODS}
+        results[prob] = T
+        if verbose:
+            print(f"\n{prob}  (N={sys_.N}, n={sys_.n}, m={sys_.m})")
+            print(f"  {'method':10s} {'T ours':>12s} {'T paper':>12s}")
+            for m in METHODS:
+                print(f"  {m:10s} {T[m]:12.3e} {PAPER[prob][m]:12.3e}")
+
+    # ---- the paper's comparative claims, checked on our instances --------
+    claims = []
+    for prob, T in results.items():
+        others = [T[m] for m in METHODS if m != "APC"]
+        claims.append(("APC fastest: " + prob, T["APC"] <= min(others) * 1.1))
+        # "the closest competitor is D-HBM" — meaningful only where methods
+        # actually separate (on ~condition-1 problems like ASH608 everything
+        # converges in a handful of iterations, paper Table 2 row 3).
+        if min(others) > 3.0 * T["APC"]:
+            closest = min((m for m in METHODS if m != "APC"),
+                          key=lambda m: T[m])
+            claims.append((f"D-HBM closest competitor: {prob}",
+                           closest == "D-HBM"))
+    g_std = results["std_gaussian"]["D-HBM"] / results["std_gaussian"]["APC"]
+    g_nzm = results["nonzero_mean"]["D-HBM"] / results["nonzero_mean"]["APC"]
+    claims.append(("nonzero-mean gap larger than standard", g_nzm > g_std))
+    claims.append(("DGD orders of magnitude slower on qc324",
+                   results["qc324"]["DGD"] / results["qc324"]["APC"] > 1e2))
+    if verbose:
+        print("\npaper-claim validation:")
+        for name, ok in claims:
+            print(f"  [{'PASS' if ok else 'FAIL'}] {name}")
+    return results, claims
+
+
+def csv_rows():
+    t0 = time.time()
+    results, claims = run(verbose=False)
+    dt_us = (time.time() - t0) * 1e6 / max(len(results), 1)
+    ok = sum(1 for _, c in claims if c)
+    return [("table2/all", dt_us, f"claims_pass={ok}/{len(claims)}")]
+
+
+if __name__ == "__main__":
+    _, claims = run()
+    failed = [n for n, ok in claims if not ok]
+    raise SystemExit(1 if failed else 0)

@@ -1,0 +1,58 @@
+"""APC inside the LM framework: fit a linear probe on hidden states with the
+paper's distributed solver (optim/apc_head.py), instead of SGD.
+
+A reduced qwen3-family model produces hidden states H; the probe target is
+a synthetic linear functional of H plus noise.  APC solves the ridge normal
+equations distributed over m=8 row-blocks and matches the closed form.
+
+    PYTHONPATH=src python examples/probe_apc.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models import model, sharding  # noqa: E402
+from repro.optim import apc_head  # noqa: E402
+
+
+def main():
+    cfg = configs.get_smoke("qwen3-4b")
+    params = sharding.init_tree(model.model_abstract(cfg),
+                                jax.random.PRNGKey(0), jnp.float32)
+    B, S = 8, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    rules = sharding.Rules(batch=("data",), fsdp=None, tensor=None,
+                           seq_sp=None, kv_seq=None)
+    logits = model.forward(cfg, params, {"tokens": toks}, rules=rules)
+    # hidden states = pre-head activations; re-derive via the embedding trick
+    # (for the example we just use the logits' top-64 slice as features).
+    H = np.asarray(logits[..., :64].reshape(B * S, 64), np.float64)
+    H = (H - H.mean(0)) / (H.std(0) + 1e-9)     # standardized features
+    rng = np.random.default_rng(2)
+    w_true = rng.standard_normal(64)
+    y = H @ w_true + 0.01 * rng.standard_normal(H.shape[0])
+
+    # Hidden activations of an untrained LM are heavily correlated across
+    # positions, so the probe needs real ridge regularization — lam also
+    # sets kappa(X) and hence APC's iteration count.
+    lam = 10.0
+    w, residuals = apc_head.fit_probe(jnp.asarray(H), jnp.asarray(y),
+                                      m=4, lam=lam, iters=2000)
+    A, b = apc_head.normal_system(jnp.asarray(H), jnp.asarray(y), lam)
+    w_ref = np.linalg.solve(np.asarray(A), np.asarray(b))
+    err = float(np.linalg.norm(np.asarray(w) - w_ref) /
+                np.linalg.norm(w_ref))
+    print(f"probe fit over {H.shape[0]} tokens, 64 features, m=4 workers")
+    print(f"APC residual history: {residuals[0]:.2e} -> {residuals[-1]:.2e}")
+    print(f"deviation from closed-form ridge solution: {err:.3e}")
+    print(f"probe MSE: {apc_head.probe_loss(jnp.asarray(H), jnp.asarray(y), w):.4e}")
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

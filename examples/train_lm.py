@@ -1,0 +1,30 @@
+"""End-to-end training driver example: a reduced TinyLlama-family model for
+a few hundred steps on CPU with checkpointing, via the production launcher.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+(The same launcher drives the full configs on a pod — see
+src/repro/launch/train.py and the dry-run for the production meshes.)
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    args = ap.parse_args()
+    return train.main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_lm_ckpt",
+        "--ckpt-every", "50", "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

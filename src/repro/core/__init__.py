@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — APC and every comparison method.
+
+Public surface:
+  partition.BlockSystem / partition.partition   row-block data model
+  apc.solve / apc.apc_step                      Algorithm 1
+  spectral.*                                    Theorem 1 optimal params, rates
+  baselines.*                                   DGD/D-NAG/D-HBM/M-ADMM/Cimmino/
+                                                Consensus (Sec 4)
+  precond.preconditioned_dhbm                   Sec 6 distributed preconditioning
+  distributed.solve_on_mesh                     shard_map production runtime
+  coding.solve_redundant                        straggler-tolerant APC
+  consensus.run_consensus                       generic combinator
+"""
+from . import apc, baselines, coding, consensus, distributed, partition  # noqa
+from . import precond, spectral  # noqa: F401
+from .partition import BlockSystem, partition as split  # noqa: F401

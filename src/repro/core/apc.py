@@ -1,0 +1,153 @@
+"""APC — Accelerated Projection-based Consensus (paper Algorithm 1).
+
+Single-host reference implementation: the m workers are a vmapped leading
+axis.  The mesh-distributed production version with identical semantics lives
+in ``core/distributed.py`` (shard_map + psum); both share the factor
+preparation here.  The per-iteration worker math can optionally run through
+the Pallas TPU kernel (``repro.kernels.ops.block_projection``).
+
+Worker update (Eq. 2a):   x_i <- x_i + gamma * P_i (xbar - x_i)
+Master update (Eq. 2b):   xbar <- (eta/m) sum_i x_i + (1-eta) xbar
+
+with P_i = I - A_i^T (A_i A_i^T)^{-1} A_i.  We precompute per worker a
+Cholesky factor L_i of the Gram matrix G_i = A_i A_i^T, so each iteration is
+two matvecs + two triangular solves: P_i v = v - A_i^T G_i^{-1} (A_i v).
+Per-iteration complexity 2pn + O(p^2) per worker, matching the paper Sec 3.3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .partition import BlockSystem
+from . import spectral
+
+
+class APCFactors(NamedTuple):
+    """Per-worker precomputation (leading axis = worker)."""
+    A: jnp.ndarray        # (m, p, n) row blocks
+    chol: jnp.ndarray     # (m, p, p) Cholesky of Gram A_i A_i^T
+    x0: jnp.ndarray       # (m, n) min-norm local solutions A_i^+ b_i
+    b: jnp.ndarray        # (m, p)
+
+
+class APCState(NamedTuple):
+    """Checkpointable iteration state."""
+    x: jnp.ndarray        # (m, n) worker solutions, all satisfy A_i x_i = b_i
+    xbar: jnp.ndarray     # (n,)  master estimate
+    t: jnp.ndarray        # ()    iteration counter
+
+
+def _gram_chol(Ai: jnp.ndarray, jitter: float) -> jnp.ndarray:
+    G = Ai @ Ai.T
+    if jitter:
+        G = G + jitter * jnp.trace(G) / G.shape[0] * jnp.eye(
+            G.shape[0], dtype=G.dtype)
+    return jnp.linalg.cholesky(G)
+
+
+def _gram_solve(chol: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Solve (L L^T) y = u with the stored Cholesky factor."""
+    y = jax.scipy.linalg.solve_triangular(chol, u, lower=True)
+    return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
+
+
+def prepare(sys: BlockSystem, *, jitter: float = 0.0) -> APCFactors:
+    """One-time O(p^2 n + p^3) per-worker setup (paper 'Initialization').
+
+    x_i(0) = A_i^T (A_i A_i^T)^{-1} b_i is *a* solution of the local
+    under-determined system (the minimum-norm one).
+    """
+    def one(Ai, bi):
+        L = _gram_chol(Ai, jitter)
+        x0 = Ai.T @ _gram_solve(L, bi)
+        return L, x0
+
+    chol, x0 = jax.vmap(one)(sys.A_blocks, sys.b_blocks)
+    return APCFactors(A=sys.A_blocks, chol=chol, x0=x0, b=sys.b_blocks)
+
+
+def init_state(factors: APCFactors) -> APCState:
+    x = factors.x0
+    xbar = jnp.mean(x, axis=0)
+    return APCState(x=x, xbar=xbar, t=jnp.zeros((), jnp.int32))
+
+
+def project_nullspace(A, chol, v):
+    """P_i v = v - A^T G^{-1} A v  — projection onto null(A)."""
+    return v - A.T @ _gram_solve(chol, A @ v)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def apc_step(factors: APCFactors, state: APCState, gamma, eta,
+             *, use_kernel: bool = False) -> APCState:
+    """One full APC iteration (all workers + master)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def worker(Ai, Li, xi):
+            # Pallas path needs the explicit pseudoinverse factor; computed
+            # on the fly here (production precomputes B, see distributed.py).
+            Bi = jax.scipy.linalg.cho_solve((Li, True), Ai).T  # (n, p)
+            return kops.block_projection(Ai, Bi, xi, state.xbar, gamma)
+    else:
+        def worker(Ai, Li, xi):
+            d = state.xbar - xi
+            return xi + gamma * project_nullspace(Ai, Li, d)
+
+    x_new = jax.vmap(worker)(factors.A, factors.chol, state.x)
+    xbar_new = eta * jnp.mean(x_new, axis=0) + (1.0 - eta) * state.xbar
+    return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    x: jnp.ndarray                 # final estimate xbar(T)
+    state: APCState                # full state (checkpointable / resumable)
+    residuals: jnp.ndarray         # (T,) ||A xbar - b|| / ||b||
+    errors: Optional[jnp.ndarray]  # (T,) ||xbar - x*|| / ||x*|| if x_true given
+
+
+def _history_scan(step_fn: Callable, state, sys: BlockSystem, iters: int):
+    """Run `iters` steps recording relative residual (and error) per step."""
+    A = sys.A_blocks
+    b = sys.b_blocks
+    b_norm = jnp.sqrt(jnp.sum(b * b))
+    xt = sys.x_true
+    xt_norm = None if xt is None else jnp.linalg.norm(xt)
+
+    def body(state, _):
+        state = step_fn(state)
+        xbar = state.xbar if hasattr(state, "xbar") else state.x
+        r = jnp.einsum("mpn,n->mp", A, xbar) - b
+        res = jnp.sqrt(jnp.sum(r * r)) / b_norm
+        err = (jnp.linalg.norm(xbar - xt) / xt_norm) if xt is not None else res
+        return state, (res, err)
+
+    state, (res, err) = jax.lax.scan(body, state, None, length=iters)
+    return state, res, err
+
+
+def solve(sys: BlockSystem, *, iters: int = 1000,
+          gamma: Optional[float] = None, eta: Optional[float] = None,
+          use_kernel: bool = False, jitter: float = 0.0) -> SolveResult:
+    """End-to-end APC solve.  If (gamma, eta) are omitted, the taskmaster
+    computes the Theorem-1 optimal pair from the spectrum of X (analysis done
+    once, in float64 on host)."""
+    if gamma is None or eta is None:
+        X = spectral.x_matrix(sys)
+        mu_min, mu_max = spectral.mu_extremes(X)
+        params = spectral.apc_optimal(mu_min, mu_max)
+        gamma = params.gamma if gamma is None else gamma
+        eta = params.eta if eta is None else eta
+
+    factors = prepare(sys, jitter=jitter)
+    state = init_state(factors)
+    step = lambda s: apc_step(factors, s, gamma, eta, use_kernel=use_kernel)
+    state, res, err = _history_scan(step, state, sys, iters)
+    return SolveResult(x=state.xbar, state=state, residuals=res,
+                       errors=err if sys.x_true is not None else None)

@@ -1,0 +1,61 @@
+"""Generic accelerated-consensus combinator (beyond-paper).
+
+APC's structure — (local contraction toward a global estimate) + (master
+averaging with one-step memory) — is not specific to linear systems.  This
+module exposes it as a reusable template:
+
+    x_i(t+1) = local_step_i(x_i(t), xbar(t))            # any per-shard map
+    xbar(t+1) = (eta/m) sum_i x_i(t+1) + (1-eta) xbar(t)
+
+Instantiations in this repo:
+  * APC itself: local_step = x + gamma * P_i(xbar - x)        (core/apc.py)
+  * local-SGD style training: local_step = k optimizer steps on shard-local
+    data; the eta-momentum average replaces naive parameter averaging
+    (examples/local_sgd.py).
+
+The combinator is pytree-generic: x_i may be an arbitrary parameter pytree.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+T = TypeVar("T")
+
+
+def master_average(x_stack: T, xbar: T, eta: float) -> T:
+    """Eq. (2b) on pytrees: leaves of x_stack have a leading worker axis."""
+    return jax.tree.map(
+        lambda xs, xb: eta * jnp.mean(xs, axis=0) + (1.0 - eta) * xb,
+        x_stack, xbar)
+
+
+def consensus_round(local_step, x_stack: T, xbar: T, eta: float,
+                    context=None) -> tuple[T, T]:
+    """One full round: vmapped local steps then momentum-averaged master.
+
+    context: optional per-worker pytree (leading worker axis) passed to
+    ``local_step(context_i, x_i, xbar)`` but NOT averaged — factorizations,
+    local data shards, optimizer state, etc.
+    """
+    if context is None:
+        x_new = jax.vmap(lambda x, xb: local_step(None, x, xb),
+                         in_axes=(0, None))(x_stack, xbar)
+    else:
+        x_new = jax.vmap(local_step, in_axes=(0, 0, None))(
+            context, x_stack, xbar)
+    return x_new, master_average(x_new, xbar, eta)
+
+
+def run_consensus(local_step, x_stack: T, xbar: T, *, eta: float,
+                  rounds: int, context=None) -> tuple[T, T]:
+    """lax.scan-driven consensus loop (jit-friendly)."""
+    def body(carry, _):
+        xs, xb = carry
+        xs, xb = consensus_round(local_step, xs, xb, eta, context)
+        return (xs, xb), None
+    (x_stack, xbar), _ = jax.lax.scan(body, (x_stack, xbar), None,
+                                      length=rounds)
+    return x_stack, xbar

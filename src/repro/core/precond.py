@@ -1,0 +1,63 @@
+"""Distributed preconditioning (paper Section 6).
+
+Each worker premultiplies its local system by (A_i A_i^T)^{-1/2}, locally and
+in parallel (O(p^2 n) one-time work).  The transformed global system
+C x = d has kappa(C^T C) = kappa(X), so distributed heavy-ball on it attains
+the APC rate (sqrt(kappa(X))-1)/(sqrt(kappa(X))+1).
+
+This is the paper's 'further implication': the preconditioner ports APC's
+conditioning advantage to *any* gradient-based distributed method.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .partition import BlockSystem
+from . import baselines, spectral
+
+
+def _inv_sqrt_psd(G: np.ndarray) -> np.ndarray:
+    """G^{-1/2} for symmetric PD G via eigendecomposition (float64 host)."""
+    w, V = np.linalg.eigh(G)
+    w = np.maximum(w, 1e-300)
+    return (V / np.sqrt(w)) @ V.T
+
+
+def precondition(sys: BlockSystem) -> BlockSystem:
+    """Return the transformed system C x = d (same solution set)."""
+    A = np.asarray(sys.A_blocks, dtype=np.float64)
+    b = np.asarray(sys.b_blocks, dtype=np.float64)
+    m = A.shape[0]
+    C = np.empty_like(A)
+    d = np.empty_like(b)
+    for i in range(m):
+        S = _inv_sqrt_psd(A[i] @ A[i].T)
+        C[i] = S @ A[i]
+        d[i] = S @ b[i]
+    dt = sys.A_blocks.dtype
+    return BlockSystem(jnp.asarray(C, dt), jnp.asarray(d, dt), sys.x_true)
+
+
+def preconditioned_dhbm(sys: BlockSystem, *, iters: int = 1000,
+                        alpha: Optional[float] = None,
+                        beta: Optional[float] = None) -> baselines.History:
+    """D-HBM on the preconditioned system — matches the APC rate.
+
+    Note C^T C = m X exactly, so the optimal (alpha, beta) can be derived
+    from the spectrum of X without re-running an eigensolve on C.
+    """
+    pre = precondition(sys)
+    if alpha is None or beta is None:
+        X = spectral.x_matrix(sys)
+        mu_min, mu_max = spectral.mu_extremes(X)
+        m = sys.m
+        a, b_, _ = spectral.dhbm_optimal(m * mu_min, m * mu_max)
+        alpha = a if alpha is None else alpha
+        beta = b_ if beta is None else beta
+    hist = baselines.dhbm(pre, iters=iters, alpha=alpha, beta=beta)
+    return baselines.History(name="P-DHBM", x=hist.x, residuals=hist.residuals,
+                             errors=hist.errors, params=hist.params)

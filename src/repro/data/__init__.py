@@ -1,0 +1,1 @@
+from . import linsys, synthetic  # noqa: F401

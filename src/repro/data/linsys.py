@@ -1,0 +1,146 @@
+"""Linear-system problem generators for the APC experiments.
+
+The paper evaluates on (a) randomly generated Gaussian systems and (b) three
+Matrix Market problems (QC324, ORSIRR 1, ASH608).  This container is offline,
+so for (b) we build *spectrum-controlled proxies*: synthetic matrices whose
+size and condition structure match the published problems.  Both the paper's
+published convergence times and ours are reported side by side in
+EXPERIMENTS.md; the proxies reproduce the *ordering* and *order-of-magnitude
+gaps* of Table 2, which is the paper's claim.
+
+All generators return a ``BlockSystem`` ready for the solvers plus the ground
+truth ``x_true`` so relative error (Fig. 2) can be tracked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.partition import BlockSystem, partition
+
+
+def _finalize(A: np.ndarray, m: int, rng: np.random.Generator,
+              dtype=jnp.float64) -> BlockSystem:
+    """Draw x*, form b = A x*, partition into m row blocks."""
+    N, n = A.shape
+    x_true = rng.standard_normal(n)
+    b = A @ x_true
+    return partition(jnp.asarray(A, dtype=dtype), jnp.asarray(b, dtype=dtype),
+                     m, x_true=jnp.asarray(x_true, dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# Random ensembles (paper Table 2 rows 4-6)
+# ---------------------------------------------------------------------------
+
+
+def standard_gaussian(n: int = 500, m: int = 4, *, N: Optional[int] = None,
+                      seed: int = 0, dtype=jnp.float64) -> BlockSystem:
+    """i.i.d. N(0,1) entries.  Paper: 'STANDARD GAUSSIAN (500x500)'."""
+    rng = np.random.default_rng(seed)
+    N = n if N is None else N
+    A = rng.standard_normal((N, n))
+    return _finalize(A, m, rng, dtype)
+
+
+def nonzero_mean_gaussian(n: int = 500, m: int = 4, *, mean: float = 1.0,
+                          N: Optional[int] = None, seed: int = 0,
+                          dtype=jnp.float64) -> BlockSystem:
+    """N(mean, 1) entries — the rank-one mean component inflates kappa(A^T A)
+    dramatically while kappa(X) stays moderate; this is the regime where the
+    paper reports the largest APC gap (Table 2 row 5)."""
+    rng = np.random.default_rng(seed)
+    N = n if N is None else N
+    A = rng.standard_normal((N, n)) + mean
+    return _finalize(A, m, rng, dtype)
+
+
+def tall_gaussian(N: int = 1000, n: int = 500, m: int = 4, *, seed: int = 0,
+                  dtype=jnp.float64) -> BlockSystem:
+    """Overdetermined consistent system.  Paper: 'STANDARD TALL GAUSSIAN'."""
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((N, n))
+    return _finalize(A, m, rng, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Spectrum-controlled proxies for the Matrix Market problems
+# ---------------------------------------------------------------------------
+
+
+def _spectrum_matrix(N: int, n: int, singvals: np.ndarray,
+                     rng: np.random.Generator) -> np.ndarray:
+    """A = U diag(s) V^T with Haar-random U, V and prescribed spectrum."""
+    k = min(N, n)
+    U, _ = np.linalg.qr(rng.standard_normal((N, k)))
+    V, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    return (U * singvals) @ V.T
+
+
+def _log_spectrum(k: int, cond: float) -> np.ndarray:
+    """Log-uniformly spaced singular values in [1/cond, 1]."""
+    return np.logspace(0.0, -np.log10(cond), k)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixMarketProxy:
+    name: str
+    N: int
+    n: int
+    cond: float        # target kappa(A) — matches the published problem class
+    m: int             # workers used in the paper's figures
+
+
+# Condition numbers chosen to land kappa(A^T A) in the regime implied by the
+# paper's published DGD convergence times (T_DGD ~ kappa(A^T A)/2):
+#   QC324:    T_DGD = 1.22e7  -> kappa(A^T A) ~ 2.4e7 -> kappa(A) ~ 5e3
+#   ORSIRR1:  T_DGD = 2.98e9  -> kappa(A^T A) ~ 6e9   -> kappa(A) ~ 7.7e4
+#   ASH608:   T_DGD = 5.67    -> kappa(A^T A) ~ 9     -> kappa(A) ~ 3
+MM_PROXIES = {
+    "qc324": MatrixMarketProxy("QC324", 324, 324, 5.0e3, 4),
+    "orsirr1": MatrixMarketProxy("ORSIRR 1", 1030, 1030, 7.7e4, 4),
+    "ash608": MatrixMarketProxy("ASH608", 608, 188, 3.0, 4),
+}
+
+
+def matrix_market_proxy(key: str, m: Optional[int] = None, *, seed: int = 0,
+                        dtype=jnp.float64) -> BlockSystem:
+    """Spectrum-matched proxy for a Matrix Market problem (offline stand-in)."""
+    spec = MM_PROXIES[key]
+    rng = np.random.default_rng(seed)
+    N, n = spec.N, spec.n
+    m = spec.m if m is None else m
+    # pad N up so m | N (duplication strategy documented in pad_to_blocks)
+    rem = (-N) % m
+    s = _log_spectrum(min(N, n), spec.cond)
+    A = _spectrum_matrix(N, n, s, rng)
+    if rem:
+        idx = rng.integers(0, N, size=rem)
+        A = np.concatenate([A, A[idx] * 1.0], axis=0)
+    return _finalize(A, m, rng, dtype)
+
+
+def conditioned_gaussian(n: int, m: int, cond: float, *, seed: int = 0,
+                         N: Optional[int] = None,
+                         dtype=jnp.float64) -> BlockSystem:
+    """Gaussian-basis matrix with exactly prescribed condition number —
+    workhorse for convergence-rate sweeps and property tests."""
+    rng = np.random.default_rng(seed)
+    N = n if N is None else N
+    s = _log_spectrum(min(N, n), cond)
+    A = _spectrum_matrix(N, n, s, rng)
+    return _finalize(A, m, rng, dtype)
+
+
+ALL_PROBLEMS = {
+    "qc324": lambda seed=0: matrix_market_proxy("qc324", seed=seed),
+    "orsirr1": lambda seed=0: matrix_market_proxy("orsirr1", seed=seed),
+    "ash608": lambda seed=0: matrix_market_proxy("ash608", seed=seed),
+    "std_gaussian": lambda seed=0: standard_gaussian(seed=seed),
+    "nonzero_mean": lambda seed=0: nonzero_mean_gaussian(seed=seed),
+    "tall_gaussian": lambda seed=0: tall_gaussian(seed=seed),
+}

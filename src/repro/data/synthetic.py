@@ -1,0 +1,62 @@
+"""Deterministic synthetic LM data pipeline.
+
+Offline container => no real corpora.  The pipeline still exercises every
+production concern: deterministic per-step batches (resumable from a step
+counter alone — the checkpoint stores only ``step``), host-sharded
+generation (each data-parallel host materializes only its shard), and
+next-token label shifting.
+
+Sequences are Zipf-distributed token streams with injected n-gram structure
+so the loss actually decreases during the example training runs (a pure
+uniform stream has constant entropy and makes smoke training look broken).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    zipf_a: float = 1.2
+    ngram: int = 3          # repeat period injecting learnable structure
+    seed: int = 1234
+
+
+def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng((cfg.seed, step))
+
+
+def make_batch(cfg: DataConfig, step: int, *, host_id: int = 0,
+               num_hosts: int = 1) -> dict:
+    """Deterministic batch for `step`; host slice [host_id] of the global
+    batch.  Returns {"tokens", "labels"} with labels next-token shifted."""
+    assert cfg.global_batch % num_hosts == 0
+    per_host = cfg.global_batch // num_hosts
+    rng = _batch_rng(cfg, step)
+    # draw the full global batch deterministically, slice this host's rows
+    # (cheap: synthetic; a real loader would seek its shard instead).
+    z = rng.zipf(cfg.zipf_a, size=(cfg.global_batch, cfg.seq_len + 1))
+    toks = np.minimum(z - 1, cfg.vocab_size - 1).astype(np.int32)
+    # inject n-gram copies: every position j >= ngram copies j-ngram with
+    # probability 1/2 — a learnable bigram/trigram structure.
+    mask = rng.random((cfg.global_batch, cfg.seq_len + 1)) < 0.5
+    toks[:, cfg.ngram:] = np.where(mask[:, cfg.ngram:],
+                                   toks[:, :-cfg.ngram], toks[:, cfg.ngram:])
+    sl = slice(host_id * per_host, (host_id + 1) * per_host)
+    return {"tokens": jnp.asarray(toks[sl, :-1]),
+            "labels": jnp.asarray(toks[sl, 1:])}
+
+
+def batches(cfg: DataConfig, start_step: int = 0, **kw) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield make_batch(cfg, step, **kw)
+        step += 1

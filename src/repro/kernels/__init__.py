@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's per-iteration hot spot.
+
+block_projection.py — pl.pallas_call kernels (gather + scatter passes of
+  the APC worker update) with explicit BlockSpec VMEM tiling.
+ops.py  — jit'd public wrappers (padding, Gram solve, worker vmap).
+ref.py  — pure-jnp oracles; every kernel is allclose-validated against
+  them across shapes and dtypes in tests/test_kernels.py (interpret mode
+  on CPU; flip block_projection._INTERPRET on real TPUs).
+"""
+from . import ops, ref  # noqa: F401

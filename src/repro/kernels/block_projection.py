@@ -1,0 +1,111 @@
+"""Pallas TPU kernels for the APC worker iteration (DESIGN.md §2).
+
+The worker update  y = x + γ·(d − B(A d)),  d = x̄ − x  is two dependent
+GEMVs over the worker's (p × n) block — *memory-bound* (arithmetic intensity
+≈ 1 FLOP/byte over A and B).  The kernels therefore optimize HBM traffic,
+not FLOPs:
+
+  * ``apc_gather``:  u = A·d with d formed on the fly from (x, x̄) tiles —
+    d is never materialized in HBM (saves 2n reads + n writes per iter).
+  * ``apc_scatter``: y = x + γ(d − B·u) fusing the rank-p correction with
+    the AXPY — again no d round-trip and no intermediate (n,) vector.
+
+Tiling: the n axis is cut into lane-aligned BN-tiles (multiple of 128); the
+p axis lives entirely in VMEM (p is small by construction — each worker's
+system is highly under-determined, p ≪ n).  A tile of A (p × BN) occupies
+p·BN·4 bytes ≤ ~2 MB for p ≤ 512, well inside the ~16 MB VMEM budget, and
+its (BN, p)·(p,) MXU work is aligned when p, BN are multiples of (8, 128).
+
+The u accumulator uses the sequential-grid property of TPU Pallas: every
+grid step writes the same (1, p) output block, zero-initialized at j == 0.
+
+Both kernels are exposed through ``ops.py`` (padding + jit + vmap over
+workers) and validated in interpret mode against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BN = 512          # lane-axis tile; multiple of 128
+_INTERPRET = True         # CPU container: flip to False on real TPU
+
+
+def _gather_kernel(x_ref, xbar_ref, a_ref, u_ref, *, acc_dtype):
+    """Grid step j: u += A[:, j·BN:(j+1)·BN] @ (x̄ − x)[j·BN:(j+1)·BN]."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    d = (xbar_ref[...] - x_ref[...]).astype(acc_dtype)      # (1, BN)
+    a = a_ref[...].astype(acc_dtype)                        # (p, BN)
+    # (1, BN) @ (BN, p) on the MXU; accumulate in acc_dtype.
+    u_ref[...] += jax.lax.dot_general(
+        d, a, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype).astype(u_ref.dtype)
+
+
+def _scatter_kernel(x_ref, xbar_ref, b_ref, u_ref, g_ref, y_ref, *,
+                    acc_dtype):
+    """Grid step j: y_j = x_j + γ·(d_j − (B_j u))."""
+    d = xbar_ref[...] - x_ref[...]                          # (1, BN)
+    u = u_ref[...].astype(acc_dtype)                        # (1, p)
+    b = b_ref[...].astype(acc_dtype)                        # (BN, p)
+    bu = jax.lax.dot_general(
+        u, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype)                   # (1, BN)
+    gamma = g_ref[0, 0].astype(acc_dtype)
+    y = x_ref[...].astype(acc_dtype) + gamma * (d.astype(acc_dtype) - bu)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def apc_gather(A, x, xbar, *, bn: int = DEFAULT_BN,
+               interpret: bool = _INTERPRET):
+    """u = A (x̄ − x).   A (p, n); x, x̄ (1, n) lane-layout.  n % bn == 0."""
+    p, n = A.shape
+    assert n % bn == 0, (n, bn)
+    acc = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+    kernel = functools.partial(_gather_kernel, acc_dtype=acc)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda j: (0, j)),      # x
+            pl.BlockSpec((1, bn), lambda j: (0, j)),      # xbar
+            pl.BlockSpec((p, bn), lambda j: (0, j)),      # A
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda j: (0, 0)),  # u (accumulated)
+        out_shape=jax.ShapeDtypeStruct((1, p), A.dtype),
+        interpret=interpret,
+    )(x, xbar, A)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def apc_scatter(B, x, xbar, u, gamma, *, bn: int = DEFAULT_BN,
+                interpret: bool = _INTERPRET):
+    """y = x + γ(d − B u).   B (n, p); x, x̄ (1, n); u (1, p); γ (1, 1)."""
+    n, p = B.shape
+    assert n % bn == 0, (n, bn)
+    acc = jnp.float64 if B.dtype == jnp.float64 else jnp.float32
+    kernel = functools.partial(_scatter_kernel, acc_dtype=acc)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda j: (0, j)),      # x
+            pl.BlockSpec((1, bn), lambda j: (0, j)),      # xbar
+            pl.BlockSpec((bn, p), lambda j: (j, 0)),      # B
+            pl.BlockSpec((1, p), lambda j: (0, 0)),       # u (replicated)
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),       # gamma scalar
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=interpret,
+    )(x, xbar, B, u, gamma)

@@ -1,0 +1,71 @@
+"""Public jit'd wrappers around the Pallas APC kernels.
+
+Handles what the raw kernels do not: shape padding to hardware-aligned
+tiles, the (tiny, p × p) Gram solve between the two passes, vector-layout
+bookkeeping, and vmapping over the worker axis.
+
+``block_projection(A, B, x, xbar, gamma)`` is the drop-in replacement for
+``x + gamma * P(xbar - x)`` used by ``core/apc.py`` (``use_kernel=True``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import block_projection as bp
+from . import ref
+
+
+def _pad_axis(a, axis: int, mult: int):
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a, size
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(a, pads), size
+
+
+def _pick_bn(n: int) -> int:
+    """Largest lane-aligned tile that divides the padded n."""
+    for bn in (bp.DEFAULT_BN, 256, 128):
+        if n % bn == 0:
+            return bn
+    return 128
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_projection(A, B, x, xbar, gamma, *, interpret: bool = bp._INTERPRET):
+    """y = x + gamma * (d - B (A d)), d = xbar - x, via the two Pallas passes.
+
+    A (p, n), B (n, p), x/xbar (n,). Pads p to a multiple of 8 and n to a
+    multiple of 128 (zero rows/cols are exact: zero-padded A rows produce
+    zero u entries; zero-padded B columns ignore them).
+    """
+    p, n = A.shape
+    A2, _ = _pad_axis(A, 0, 8)
+    A2, _ = _pad_axis(A2, 1, 128)
+    B2, _ = _pad_axis(B, 1, 8)
+    B2, _ = _pad_axis(B2, 0, 128)
+    x2, _ = _pad_axis(x[None, :], 1, 128)
+    xb2, _ = _pad_axis(xbar[None, :], 1, 128)
+    n_pad = A2.shape[1]
+    bn = _pick_bn(n_pad)
+
+    u = bp.apc_gather(A2, x2, xb2, bn=bn, interpret=interpret)      # (1, p8)
+    g = jnp.asarray(gamma, x.dtype).reshape(1, 1)
+    y = bp.apc_scatter(B2, x2, xb2, u, g, bn=bn, interpret=interpret)
+    return y[0, :n]
+
+
+def block_projection_batched(A, B, x, xbar, gamma, *,
+                             interpret: bool = bp._INTERPRET):
+    """vmap over the leading worker axis: A (m,p,n), B (m,n,p), x (m,n)."""
+    fn = functools.partial(block_projection, interpret=interpret)
+    return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(A, B, x, xbar, gamma)
+
+
+# Re-exported oracle (tests import both from one place).
+block_projection_ref = ref.block_projection_ref

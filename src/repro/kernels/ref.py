@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+The APC worker iteration, given the precomputed pseudoinverse factor
+B_i = A_i^T (A_i A_i^T)^{-1}  (n x p):
+
+    d = xbar - x
+    u = A d                  (p,)    gather pass
+    y = x + gamma * (d - B u)        scatter pass
+
+Everything is expressed with 2-D row vectors (1, n) to match the TPU kernel
+layout (lane dimension last).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def apc_gather_ref(A, x, xbar):
+    """u = A (xbar - x).   A (p, n); x, xbar (n,). Returns (p,)."""
+    return A @ (xbar - x)
+
+
+def apc_scatter_ref(B, x, xbar, u, gamma):
+    """y = x + gamma * ((xbar - x) - B u).   B (n, p)."""
+    d = xbar - x
+    return x + gamma * (d - B @ u)
+
+
+def block_projection_ref(A, B, x, xbar, gamma):
+    """Full fused worker update: y = x + gamma * P (xbar - x) with
+    P = I - B A (note B A == A^T G^{-1} A)."""
+    u = apc_gather_ref(A, x, xbar)
+    return apc_scatter_ref(B, x, xbar, u, gamma)

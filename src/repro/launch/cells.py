@@ -1,0 +1,240 @@
+"""Dry-run cells: (architecture × input shape) → lowered/compiled programs.
+
+This module is import-safe (does not force a device count); the entrypoint
+that needs 512 placeholder devices is ``launch/dryrun.py``.
+
+Shapes (assigned set):
+    train_4k      seq 4096,   global_batch 256   -> train_step
+    prefill_32k   seq 32768,  global_batch 32    -> serve_step (prefill)
+    decode_32k    seq 32768,  global_batch 128   -> serve_step (1 new token)
+    long_500k     seq 524288, global_batch 1     -> serve_step (1 new token,
+                  SSM/hybrid only — quadratic-KV archs are skipped)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model, sharding
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro import configs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; reason if skipped."""
+    sp = SHAPES[shape_name]
+    if sp.name == "long_500k" and not cfg.supports_long_decode:
+        return False, ("full-attention arch: 512k dense-KV decode is the "
+                       "quadratic regime the shape list excludes "
+                       "(DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocated)
+# ---------------------------------------------------------------------------
+
+
+def _batch_divisible(mesh: Optional[Mesh], rules: sharding.Rules,
+                     B: int) -> bool:
+    if mesh is None:
+        return True
+    axes = rules.batch if isinstance(rules.batch, tuple) else (rules.batch,)
+    n = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return B % n == 0
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, rules: sharding.Rules,
+                mesh: Optional[Mesh] = None):
+    """Returns (sds_pytree, pspec_pytree) for the step function's inputs
+    beyond params/opt-state (i.e. the batch / cache / token).
+
+    If the global batch does not divide the data axes (long_500k has B=1),
+    batch dims degrade to replicated — jit in_shardings require exact
+    divisibility."""
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    if not _batch_divisible(mesh, rules, B):
+        rules = dataclasses.replace(rules, batch=())
+    bspec = sharding.to_pspec(("batch", None), rules)
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+
+    if sp.kind == "train":
+        sds = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+               "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        specs = {"tokens": bspec, "labels": bspec}
+        if cfg.frontend == "vision":
+            sds["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), dt)
+            specs["patches"] = sharding.to_pspec(("batch", None, None), rules)
+        if cfg.frontend == "audio":
+            sds["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), dt)
+            specs["frames"] = sharding.to_pspec(("batch", None, None), rules)
+        return sds, specs
+
+    cache_ab = model.cache_abstract(cfg, B, S)
+    cache_sds = sharding.sds_tree(cache_ab, dt)
+    cache_specs = sharding.pspec_tree(cache_ab, rules)
+
+    if sp.kind == "prefill":
+        sds = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        specs = {"tokens": bspec}
+        if cfg.frontend == "vision":
+            sds["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), dt)
+            specs["patches"] = sharding.to_pspec(("batch", None, None), rules)
+        if cfg.frontend == "audio":
+            sds["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), dt)
+            specs["frames"] = sharding.to_pspec(("batch", None, None), rules)
+        return {"batch": sds, "cache": cache_sds}, \
+               {"batch": specs, "cache": cache_specs}
+
+    # decode: one token against a cache of length seq_len
+    sds = {"token": jax.ShapeDtypeStruct((B, 1), i32),
+           "cache": cache_sds,
+           "cache_len": jax.ShapeDtypeStruct((), i32)}
+    specs = {"token": bspec, "cache": cache_specs, "cache_len": P()}
+    return sds, specs
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, rules: sharding.Rules,
+                     acfg: Optional[adamw.AdamWConfig] = None):
+    acfg = acfg or adamw.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch, rules=rules))(params)
+        new_params, new_state = adamw.update(acfg, grads, opt_state, params)
+        return new_params, new_state, {"loss": loss}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, rules: sharding.Rules):
+    def serve_step(params, batch, cache):
+        return model.prefill(cfg, params, batch, cache, rules=rules)
+    return serve_step
+
+
+def build_decode_step(cfg: ModelConfig, rules: sharding.Rules):
+    def serve_step(params, token, cache, cache_len):
+        return model.decode_step(cfg, params, token, cache, cache_len,
+                                 rules=rules)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell on a mesh
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               cfg: Optional[ModelConfig] = None):
+    """Lower (and return, uncompiled) the cell's step on `mesh`.
+
+    Returns (lowered, meta) where meta carries analytic FLOPs for §Roofline.
+    """
+    cfg = cfg or configs.get(arch)
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"cell ({arch}, {shape_name}) skipped: {reason}")
+    rules = sharding.rules_for_mesh(mesh)
+    sp = SHAPES[shape_name]
+    dt = jnp.dtype(cfg.dtype)
+
+    params_ab = model.model_abstract(cfg)
+    params_sds = sharding.sds_tree(params_ab, dt)
+    params_specs = sharding.pspec_tree(params_ab, rules)
+    ns = lambda spec: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P))
+
+    in_sds, in_specs = input_specs(cfg, shape_name, rules, mesh)
+    out_rules = rules
+    if not _batch_divisible(mesh, rules, sp.global_batch):
+        out_rules = dataclasses.replace(rules, batch=())
+
+    with mesh:
+        if sp.kind == "train":
+            step = build_train_step(cfg, rules)
+            opt_sds = adamw.abstract_state(params_sds)
+            opt_specs = adamw.state_pspecs(params_specs)
+            lowered = jax.jit(
+                step,
+                in_shardings=(ns(params_specs), ns(opt_specs), ns(in_specs)),
+                out_shardings=(ns(params_specs), ns(opt_specs),
+                               NamedSharding(mesh, P())),
+            ).lower(params_sds, opt_sds, in_sds)
+        elif sp.kind == "prefill":
+            step = build_prefill_step(cfg, rules)
+            logits_spec = NamedSharding(
+                mesh, sharding.to_pspec(("batch", None, "tensor"), out_rules))
+            lowered = jax.jit(
+                step,
+                in_shardings=(ns(params_specs), ns(in_specs["batch"]),
+                              ns(in_specs["cache"])),
+                out_shardings=(logits_spec, ns(in_specs["cache"])),
+            ).lower(params_sds, in_sds["batch"], in_sds["cache"])
+        else:
+            step = build_decode_step(cfg, rules)
+            logits_spec = NamedSharding(
+                mesh, sharding.to_pspec(("batch", None, "tensor"), out_rules))
+            lowered = jax.jit(
+                step,
+                in_shardings=(ns(params_specs), ns(in_specs["token"]),
+                              ns(in_specs["cache"]),
+                              NamedSharding(mesh, P())),
+                out_shardings=(logits_spec, ns(in_specs["cache"])),
+            ).lower(params_sds, in_sds["token"], in_sds["cache"],
+                    in_sds["cache_len"])
+
+    meta = cell_model_flops(cfg, shape_name)
+    return lowered, meta
+
+
+def cell_model_flops(cfg: ModelConfig, shape_name: str) -> dict:
+    """Analytic useful FLOPs for the cell (§Roofline MODEL_FLOPS)."""
+    sp = SHAPES[shape_name]
+    n_active = model.non_embedding_params(cfg, active_only=True)
+    tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    mult = 6 if sp.kind == "train" else 2
+    return {
+        "arch": cfg.name, "shape": shape_name, "kind": sp.kind,
+        "n_params": model.count_params(cfg),
+        "n_active_nonembed": n_active,
+        "tokens": tokens,
+        "model_flops": float(mult) * n_active * tokens,
+    }

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST precede every other import — jax locks the device
+count at first initialization (see the multi-pod dry-run contract).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                   # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --multi-pod --json out.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import analysis, cells, mesh as mesh_lib
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             compile_: bool = True, verbose: bool = True) -> dict:
+    cfg = configs.get(arch)
+    ok, reason = cells.applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, meta = cells.lower_cell(arch, shape_name, mesh, cfg=cfg)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    if not compile_:
+        rec.update(status="lowered", **meta)
+        return rec
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    roof = analysis.from_compiled(
+        f"{arch}/{shape_name}", mesh.devices.shape, compiled,
+        meta["model_flops"])
+    rec.update(status="ok", **meta, roofline=roof.row(),
+               collectives={k: v for k, v in roof.collectives.items() if v})
+    if verbose:
+        r = roof.row()
+        print(f"  {arch:22s} {shape_name:12s} {rec['mesh']:8s} "
+              f"compile {rec['compile_s']:6.1f}s  "
+              f"t_comp {r['t_compute']:.3e}  t_mem {r['t_memory']:.3e}  "
+              f"t_coll {r['t_collective']:.3e}  -> {r['bottleneck']}",
+              flush=True)
+    return rec
+
+
+def run_solver_cell(*, multi_pod: bool, dtype: str = "float64",
+                    n: int = 1 << 20, p: int = 2048) -> dict:
+    """Roofline of one distributed APC iteration (the paper's workload) on
+    the production mesh.  dtype float64 = paper-faithful (CPU LAPACK
+    semantics); float32 = the beyond-paper TPU configuration (§Perf) —
+    same algorithm, half the wire/HBM bytes, f64 reserved for the one-time
+    spectral analysis.
+    """
+    import jax.numpy as jnp
+    from repro.core import distributed
+    from repro.launch import analysis
+
+    if dtype == "float64":       # else SDS silently canonicalizes to f32
+        jax.config.update("jax_enable_x64", True)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    worker_axes = ("pod", "data") if multi_pod else ("data",)
+    m = 1
+    for a in worker_axes:
+        m *= mesh.shape[a]
+    solver = distributed.make_sharded_apc(
+        mesh, worker_axes=worker_axes, model_axis="model",
+        gamma=1.26, eta=1.85)
+    dt = jnp.dtype(dtype)
+    sds = lambda shape: jax.ShapeDtypeStruct(shape, dt)
+    t0 = time.time()
+    with mesh:
+        lowered = solver.step_fn().lower(
+            sds((m, p, n)), sds((m, p, p)), sds((m, n)), sds((n,)))
+        compiled = lowered.compile()
+    # useful work: the paper's 2pn multiply-adds per worker per iteration
+    model_flops = 2.0 * (2.0 * p * n) * m
+    roof = analysis.from_compiled(
+        f"apc-solver/{dtype}", mesh.devices.shape, compiled, model_flops)
+    rec = {"arch": "apc-solver", "shape": f"iter_n{n}_p{p}_{dtype}",
+           "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok",
+           "model_flops": model_flops,
+           "compile_s": round(time.time() - t0, 1),
+           "roofline": roof.row(),
+           "collectives": {k: v for k, v in roof.collectives.items() if v}}
+    r = roof.row()
+    print(f"  apc-solver {dtype:8s} {rec['mesh']:8s} m={m} p={p} n={n}  "
+          f"t_comp {r['t_compute']:.3e}  t_mem {r['t_memory']:.3e}  "
+          f"t_coll {r['t_collective']:.3e}  -> {r['bottleneck']}",
+          flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--json", default=None, help="write records to this file")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="lower only (fast structural check)")
+    ap.add_argument("--solver", action="store_true",
+                    help="run the APC-solver roofline cells instead of the "
+                         "LM cells (float64 paper-faithful + float32)")
+    args = ap.parse_args(argv)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    if args.solver:
+        records, failures = [], 0
+        for mp in meshes:
+            for dtype in ("float64", "float32"):
+                try:
+                    records.append(run_solver_cell(multi_pod=mp, dtype=dtype))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures += 1
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(records, f, indent=1)
+        print(f"\nsolver dry-run: {len(records)} ok, {failures} FAILED")
+        return 1 if failures else 0
+
+    archs = [args.arch] if args.arch else configs.ARCHS
+    shapes = [args.shape] if args.shape else list(cells.SHAPES)
+
+    records, failures = [], 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   compile_=not args.no_compile)
+                except Exception as e:  # a dry-run failure is a system bug
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAILED", "error": repr(e)}
+                    failures += 1
+                records.append(rec)
+                if rec["status"] == "skipped":
+                    print(f"  {arch:22s} {shape:12s} skipped: "
+                          f"{rec['reason'][:60]}...", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+    n_ok = sum(r["status"] in ("ok", "lowered") for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {failures} FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Mesh construction for the production pods.
+
+Everything is a FUNCTION — importing this module never touches jax device
+state, so tests/benches that want a single CPU device can import it safely.
+
+Production target: TPU v5e pods, 256 chips each, mesh (16 data, 16 model);
+multi-pod doubles up with a leading "pod" axis used as a second data-
+parallel axis (DP across DCN, TP kept inside the pod ICI domain).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def solver_mesh(workers: int, model: int = 1) -> Mesh:
+    """Mesh for the APC solver: 'data' = workers, 'model' = column shards."""
+    return jax.make_mesh((workers, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

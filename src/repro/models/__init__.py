@@ -1,0 +1,8 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Single source of truth per architecture is a ``ModelConfig``
+(``repro.configs``); ``model.py`` turns a config into abstract parameters,
+sharding specs, and the jit-able ``train_step`` / ``serve_step`` functions
+used by the launcher, dry-run, and benchmarks.
+"""
+from . import model  # noqa: F401

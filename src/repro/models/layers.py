@@ -1,0 +1,456 @@
+"""Transformer building blocks: norms, RoPE, attention (GQA + MLA), MLPs.
+
+Everything is functional: ``*_abstract(cfg)`` returns a pytree of
+``ParamSpec`` (shapes + logical sharding axes), and ``*_apply(cfg, params,
+...)`` is the forward.  No framework dependency; params are plain dicts so
+scan-stacking, checkpointing, and sharding stay transparent.
+
+Attention memory strategy (DESIGN.md §6): train/prefill use a chunked
+online-softmax ("flash") attention written in pure JAX — a ``lax.scan`` over
+KV blocks with running (max, sum, acc).  This bounds live memory to one
+(Sq × blk) tile per step regardless of sequence length, which is what lets
+prefill_32k compile inside the per-device HBM budget.  Decode (Sq == 1)
+uses the direct einsum path over the (possibly seq-sharded) cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_abstract(dim: int):
+    return {"scale": ParamSpec((dim,), (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def l2norm(x, eps: float):
+    """Per-head qk-norm (Qwen3 style), no learned scale on the head axis."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x (..., S, H, d) with d even; positions (..., S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (pure JAX, GQA-aware)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def pick_blk(sk: int) -> int:
+    # Prefer the largest tile that divides Sk: fewer scan steps means fewer
+    # per-step copy/stat round-trips; a (4096 x 256)-f32 tile is ~4 MB —
+    # comfortably VMEM-resident on the target (§Perf iteration 6).
+    for b in (4096, 2048, 1024, 512, 256, 128, 64):
+        if sk % b == 0:
+            return b
+    return sk
+
+
+def _flash_fwd_impl(q, k, v, q_offset, causal, blk):
+    """Online-softmax forward.  Returns (out (B,Sq,H,dv) in q.dtype,
+    lse (B,K,G,Sq) f32) — the log-sum-exp is the only stat the backward
+    needs; no (Sq × Sk) tensor survives the scan."""
+    B, Sq, H, dq = q.shape
+    Sk, K, dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, dq)
+    scale = dq ** -0.5
+    nblk = Sk // blk
+
+    kb = k.reshape(B, nblk, blk, K, dq).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, blk, K, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        j, k_j, v_j = xs
+        k_pos = j * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v_j.dtype), v_j,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nblk), kb, vb))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(q.dtype)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, q_offset=0, causal=True, blk: int = 1024):
+    """Flash attention with a block-recompute backward (custom VJP).
+
+    Plain AD through the forward scan would checkpoint every per-block
+    probability tile — O(Sq·Sk) residual memory and the dominant HBM-traffic
+    term of the baseline dry-run (§Perf iteration 1).  The custom backward
+    recomputes each tile from (q, k_j, lse) instead, saving only O(Sq·d)
+    activations at ~1.3x the attention FLOPs.
+
+    q (B,Sq,H,dq), k (B,Sk,K,dq), v (B,Sk,K,dv), H % K == 0; Sk % blk == 0.
+    q_offset/causal/blk are static.
+    """
+    out, _ = _flash_fwd_impl(q, k, v, q_offset, causal, blk)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, q_offset, causal, blk):
+    out, lse = _flash_fwd_impl(q, k, v, q_offset, causal, blk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(q_offset, causal, blk, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, dq = q.shape
+    Sk, K, dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // K
+    scale = dq ** -0.5
+    qg = q.reshape(B, Sq, K, G, dq)
+    do = dout.reshape(B, Sq, K, G, dv)
+    og = out.reshape(B, Sq, K, G, dv)
+    # delta[b,k,g,q] = sum_d dout * out   (rowwise correction term)
+    # NB: operands stay in their storage dtype with f32 ACCUMULATION —
+    # casting them to f32 up front makes GSPMD all-gather f32 copies of
+    # K/V across the sequence-parallel axis (2x wire bytes, §Perf iter 4).
+    delta = jnp.einsum("bqkgd,bqkgd->bkgq", do, og,
+                       preferred_element_type=jnp.float32)
+    nblk = Sk // blk
+    kb = k.reshape(B, nblk, blk, K, dq).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, blk, K, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(dq_acc, xs):
+        j, k_j, v_j = xs
+        k_pos = j * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                       # normalized
+        pb = p.astype(do.dtype)
+        dv_j = jnp.einsum("bkgqt,bqkgd->btkd", pb, do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", do, v_j,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None]) * scale).astype(k_j.dtype)
+        dq_acc = dq_acc + jnp.einsum("bkgqt,btkd->bqkgd", ds, k_j,
+                                     preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bkgqt,bqkgd->btkd", ds, qg,
+                          preferred_element_type=jnp.float32)
+        # store per-block K/V grads in storage dtype (each is written once;
+        # no cross-block accumulation to lose)
+        return dq_acc, (dk_j.astype(k_j.dtype), dv_j.astype(v_j.dtype))
+
+    dq0 = jnp.zeros((B, Sq, K, G, dq), jnp.float32)
+    dq_acc, (dks, dvs) = jax.lax.scan(body, dq0,
+                                      (jnp.arange(nblk), kb, vb))
+    dqf = dq_acc.reshape(B, Sq, H, dq).astype(q.dtype)
+    dkf = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, K, dq).astype(k.dtype)
+    dvf = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, K, dv).astype(v.dtype)
+    return dqf, dkf, dvf
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def decode_attention(q, k, v, *, kv_len):
+    """Direct attention for Sq == small (decode).  Cache may be seq-sharded;
+    the softmax reductions over Sk then lower to psums under GSPMD."""
+    B, Sq, H, dq = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, dq)
+    scale = dq ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(k.shape[1])
+    s = jnp.where((k_pos < kv_len)[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    dv = v.shape[-1]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def gqa_abstract(cfg: ModelConfig):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamSpec((D, H * hd), ("fsdp", "tensor")),
+        "wk": ParamSpec((D, K * hd), ("fsdp", "tensor")),
+        "wv": ParamSpec((D, K * hd), ("fsdp", "tensor")),
+        "wo": ParamSpec((H * hd, D), ("tensor", "fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        p["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    return p
+
+
+@dataclasses.dataclass
+class KVCacheSpec:
+    """Shape/sharding of one attention layer's decode cache."""
+    k: ParamSpec
+    v: ParamSpec
+
+
+def gqa_cache_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    ax = ("batch", "kv_seq", None, None)
+    return {"k": ParamSpec((batch, max_seq, K, hd), ax),
+            "v": ParamSpec((batch, max_seq, K, hd), ax)}
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    """Project encoder output once into (k, v) — cached across decode steps."""
+    B, Se, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, Se, K, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, K, hd)
+    if cfg.qk_norm:
+        k = l2norm(k, cfg.norm_eps) * p["k_norm"].astype(k.dtype)
+    return k, v
+
+
+def gqa_apply(cfg: ModelConfig, p, x, *, positions, cache=None, cache_len=None,
+              cross=None, causal=True, rules=None):
+    """x (B, S, D).  Three modes:
+
+      train   (cache None):          flash attention over x itself.
+      prefill (cache, S > 1):        flash over x + write cache at cache_len.
+      decode  (cache, S == 1):       insert token, attend over the cache.
+
+    cross: precomputed (k, v) from ``cross_kv`` (whisper cross-attention) —
+    replaces self-attention KV entirely, non-causal, no rope.
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    if cfg.qk_norm:
+        q = l2norm(q, cfg.norm_eps) * p["q_norm"].astype(q.dtype)
+
+    if cross is not None:
+        k, v = cross
+        out = decode_attention(q, k, v, kv_len=k.shape[1])
+        return out.reshape(B, S, H * hd) @ p["wo"], None
+
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        k = l2norm(k, cfg.norm_eps) * p["k_norm"].astype(k.dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        start = jnp.asarray(cache_len)
+        z = jnp.zeros((), start.dtype)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (z, start, z, z))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (z, start, z, z))
+        new_cache = {"k": ck, "v": cv}
+        if S == 1:
+            out = decode_attention(q, ck, cv, kv_len=start + S)
+        else:
+            # prefill: the fresh tokens are the whole valid cache content.
+            out = flash_attention(q, k, v, 0, True, pick_blk(S))
+    else:
+        # NOTE: head-sharding (TP) constraints here were tried and REFUTED
+        # (§Perf): unlike MLA — whose expanded K/V are ~5x the residual
+        # width — GQA K/V match the residual width, so forcing TP merely
+        # adds SP<->TP resharding on both sides of the flash region
+        # (deepseek-7b t_coll 6.75 -> 7.18 s).  GSPMD's propagated layout
+        # is kept.
+        out = flash_attention(q, k, v, 0, causal, pick_blk(k.shape[1]))
+    return out.reshape(B, S, H * hd) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_abstract(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((D, qr), ("fsdp", None)),
+        "q_norm": ParamSpec((qr,), (None,), init="ones"),
+        "wq_b": ParamSpec((qr, H * (dn + dr)), (None, "tensor")),
+        "wkv_a": ParamSpec((D, r + dr), ("fsdp", None)),
+        "kv_norm": ParamSpec((r,), (None,), init="ones"),
+        "wk_b": ParamSpec((r, H * dn), (None, "tensor")),
+        "wv_b": ParamSpec((r, H * dv), (None, "tensor")),
+        "wo": ParamSpec((H * dv, D), ("tensor", "fsdp")),
+    }
+
+
+def mla_cache_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    return {"ckv": ParamSpec((batch, max_seq, r), ("batch", "kv_seq", None)),
+            "krope": ParamSpec((batch, max_seq, dr), ("batch", "kv_seq", None))}
+
+
+def _mla_qkv(cfg, p, x, positions):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    q = rmsnorm({"scale": p["q_norm"]}, x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]                                  # (B, S, r + dr)
+    ckv = rmsnorm({"scale": p["kv_norm"]}, kv[..., :cfg.kv_lora_rank],
+                  cfg.norm_eps)
+    krope = rope(kv[..., cfg.kv_lora_rank:][..., None, :], positions,
+                 cfg.rope_theta)[..., 0, :]              # (B, S, dr) shared
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_apply(cfg: ModelConfig, p, x, *, positions, cache=None,
+              cache_len=None, rules=None):
+    """Train/prefill: expand K/V from the latent and run flash.  Decode
+    (S == 1): *absorbed* path — scores and values live in the compressed
+    r-space; the cache stores only (ckv, krope) per token, which is the
+    paper's KV-cache saving (r + dr floats/token, head-count independent)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.nope_head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+
+    new_cache = None
+    if cache is not None:
+        start = jnp.asarray(cache_len)
+        z = jnp.zeros((), start.dtype)
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (z, start, z))
+        cr = jax.lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (z, start, z))
+        new_cache = {"ckv": cc, "krope": cr}
+        if S == 1:
+            wk_b = p["wk_b"].reshape(r, H, dn)
+            wv_b = p["wv_b"].reshape(r, H, dv)
+            # absorb W_UK into q:   q_c (B,S,H,r)
+            q_c = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b)
+            Sk = cc.shape[1]
+            kv_len = start + S
+            scale = (dn + dr) ** -0.5
+            s = (jnp.einsum("bshr,btr->bhst", q_c, cc,
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bshd,btd->bhst", q_rope, cr,
+                              preferred_element_type=jnp.float32)) * scale
+            k_pos = jnp.arange(Sk)
+            s = jnp.where((k_pos < kv_len)[None, None, None, :], s, NEG_INF)
+            prob = jax.nn.softmax(s, axis=-1)
+            o_c = jnp.einsum("bhst,btr->bshr", prob.astype(cc.dtype), cc,
+                             preferred_element_type=jnp.float32)
+            out = jnp.einsum("bshr,rhd->bshd", o_c.astype(x.dtype), wv_b)
+            return out.reshape(B, S, H * dv) @ p["wo"], new_cache
+
+    # train / prefill: expand to per-head K, V and run flash.  The expanded
+    # K/V are H·(dn+dr) wide — ~5x the residual stream — so attention here
+    # is HEAD-sharded (TP): only the compact latent (r + dr per token)
+    # crosses the sequence-parallel boundary; without this constraint GSPMD
+    # all-gathers the full expanded K/V per layer (§Perf iteration 5).
+    k_nope = jnp.einsum("btr,rhd->bthd", ckv, p["wk_b"].reshape(r, H, dn))
+    v = jnp.einsum("btr,rhd->bthd", ckv, p["wv_b"].reshape(r, H, dv))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], (*k_nope.shape[:3], dr))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if rules is not None:
+        from .sharding import constrain
+        q = constrain(q, rules, "batch", None, "tensor", None)
+        k = constrain(k, rules, "batch", None, "tensor", None)
+        v = constrain(v, rules, "batch", None, "tensor", None)
+    out = flash_attention(q, k, v, 0, True, pick_blk(k.shape[1]))
+    out = out.reshape(B, S, H * dv)
+    if rules is not None:
+        from .sharding import constrain
+        out = constrain(out, rules, "batch", None, "tensor")
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_abstract(d_model: int, d_ff: int):
+    return {"w_gate": ParamSpec((d_model, d_ff), ("fsdp", "tensor")),
+            "w_up": ParamSpec((d_model, d_ff), ("fsdp", "tensor")),
+            "w_down": ParamSpec((d_ff, d_model), ("tensor", "fsdp"))}
+
+
+def swiglu_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_abstract(d_model: int, d_ff: int):
+    return {"w_in": ParamSpec((d_model, d_ff), ("fsdp", "tensor")),
+            "b_in": ParamSpec((d_ff,), (None,), init="zeros"),
+            "w_out": ParamSpec((d_ff, d_model), ("tensor", "fsdp")),
+            "b_out": ParamSpec((d_model,), (None,), init="zeros")}
+
+
+def gelu_mlp_apply(p, x):
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    return h @ p["w_out"] + p["b_out"]

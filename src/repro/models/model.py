@@ -1,0 +1,251 @@
+"""Model assembly: abstract params, caches, forward, loss, and the jit-able
+``train_step`` / ``serve_step`` factories used by the launcher and dry-run.
+
+Batch conventions (see launch/dryrun.py input_specs):
+  train:   {"tokens": (B,S) i32, "labels": (B,S) i32 [, "patches"/"frames"]}
+  prefill: {"tokens": (B,S)} + empty cache  -> logits of last position + cache
+  decode:  {"token": (B,1)} + cache + cache_len -> next-token logits + cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .sharding import ParamSpec, Rules, constrain
+from . import layers, moe as moe_mod, ssm as ssm_mod, transformer
+
+
+# ---------------------------------------------------------------------------
+# Abstract parameters
+# ---------------------------------------------------------------------------
+
+
+def model_abstract(cfg: ModelConfig):
+    D, V = cfg.d_model, cfg.padded_vocab
+    p = {
+        "embed": ParamSpec((V, D), ("tensor", "fsdp")),
+        "decoder": transformer.decoder_abstract(cfg),
+        "final_norm": layers.rmsnorm_abstract(D),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamSpec((D, V), ("fsdp", "tensor"))
+    if cfg.is_encoder_decoder:
+        p["encoder"] = transformer.encoder_abstract(cfg)
+    return p
+
+
+def _slot_cache_abstract(cfg: ModelConfig, kind: str, batch: int,
+                         max_seq: int):
+    if kind == "ssm":
+        return {"attn": ssm_mod.ssm_cache_abstract(cfg, batch)}
+    if cfg.attn_type == "mla":
+        return {"attn": layers.mla_cache_abstract(cfg, batch, max_seq)}
+    return {"attn": layers.gqa_cache_abstract(cfg, batch, max_seq)}
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    """Decode-cache pytree mirroring the decoder structure."""
+    nd = cfg.moe.first_dense if cfg.moe else 0
+    n_periods = (cfg.n_layers - nd) // len(cfg.pattern)
+    c = {
+        "prefix": [
+            _slot_cache_abstract(cfg, "attn", batch, max_seq)
+            for _ in range(nd)],
+        "slots": [
+            transformer._stack(
+                _slot_cache_abstract(cfg, kind, batch, max_seq), n_periods)
+            for kind in cfg.pattern],
+    }
+    if cfg.is_encoder_decoder:
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        Se = cfg.encoder_seq
+        ax = ("batch", None, None, None)
+        c["cross"] = {
+            "prefix": [
+                {"k": ParamSpec((batch, Se, K, hd), ax),
+                 "v": ParamSpec((batch, Se, K, hd), ax)} for _ in range(nd)],
+            "slots": [
+                transformer._stack(
+                    {"k": ParamSpec((batch, Se, K, hd), ax),
+                     "v": ParamSpec((batch, Se, K, hd), ax)}, n_periods)
+                for _ in cfg.pattern],
+        }
+    return c
+
+
+def cache_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Materialize a zeroed decode cache (smoke tests / examples)."""
+    dtype = dtype or cache_dtype(cfg)
+    ab = cache_abstract(cfg, batch, max_seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, dtype), ab,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _lm_logits(cfg: ModelConfig, params, h):
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["lm_head"]
+
+
+def _cross_stack(cfg: ModelConfig, params, enc_out):
+    """Precompute per-decoder-layer cross K/V from encoder output."""
+    dec = params["decoder"]
+    prefix = [layers.cross_kv(cfg, sp["xattn"], enc_out)
+              for sp in dec["prefix"]]
+    slots = [jax.vmap(lambda sp: layers.cross_kv(cfg, sp, enc_out))(
+        slot["xattn"]) for slot in dec["slots"]]
+    return {"prefix": prefix, "slots": slots}
+
+
+def forward(cfg: ModelConfig, params, batch, *, rules: Rules,
+            train: bool = False):
+    """Full-sequence forward -> logits (B, S_tokens, V)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens).astype(jnp.dtype(cfg.dtype))
+    n_prepend = 0
+    if cfg.frontend == "vision" and "patches" in batch:
+        patches = batch["patches"].astype(h.dtype)
+        n_prepend = patches.shape[1]
+        h = jnp.concatenate([patches, h], axis=1)
+    h = constrain(h, rules, "batch", "seq_sp", None)
+
+    cross_stack = None
+    if cfg.is_encoder_decoder:
+        enc_out = transformer.encoder_apply(
+            cfg, params["encoder"], batch["frames"].astype(h.dtype),
+            rules=rules)
+        cross_stack = _cross_stack(cfg, params, enc_out)
+
+    positions = jnp.arange(h.shape[1])
+    h, _ = transformer.decoder_apply(
+        cfg, params["decoder"], h, positions=positions, rules=rules,
+        cross_kv_stack=cross_stack, train=train)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if n_prepend:
+        h = h[:, n_prepend:, :]
+    return _lm_logits(cfg, params, h)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, rules: Rules):
+    """Next-token cross entropy (labels = tokens shifted by caller)."""
+    logits = forward(cfg, params, batch, rules=rules, train=True)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:      # mask vocab-pad columns
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, batch, cache, *, rules: Rules):
+    """Process the prompt, fill the cache.  Returns (last_logits, cache)."""
+    tokens = batch["tokens"]
+    h = _embed(cfg, params, tokens).astype(jnp.dtype(cfg.dtype))
+    h = constrain(h, rules, "batch", "seq_sp", None)
+    cross_stack = None
+    sub_cache = {k: v for k, v in cache.items() if k != "cross"}
+    if cfg.is_encoder_decoder:
+        enc_out = transformer.encoder_apply(
+            cfg, params["encoder"], batch["frames"].astype(h.dtype),
+            rules=rules)
+        cross_stack = _cross_stack(cfg, params, enc_out)
+    positions = jnp.arange(h.shape[1])
+    h, new_cache = transformer.decoder_apply(
+        cfg, params["decoder"], h, positions=positions, rules=rules,
+        caches=sub_cache, cache_len=jnp.zeros((), jnp.int32),
+        cross_kv_stack=cross_stack)
+    if cfg.is_encoder_decoder:
+        new_cache["cross"] = cross_stack_to_cache(cross_stack)
+    h = layers.rmsnorm(params["final_norm"], h[:, -1:, :], cfg.norm_eps)
+    return _lm_logits(cfg, params, h), new_cache
+
+
+def cross_stack_to_cache(cross_stack):
+    to_dict = lambda kv: {"k": kv[0], "v": kv[1]}
+    return {"prefix": [to_dict(kv) for kv in cross_stack["prefix"]],
+            "slots": [to_dict(kv) for kv in cross_stack["slots"]]}
+
+
+def cache_to_cross_stack(cross_cache):
+    to_kv = lambda d: (d["k"], d["v"])
+    return {"prefix": [to_kv(d) for d in cross_cache["prefix"]],
+            "slots": [to_kv(d) for d in cross_cache["slots"]]}
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, cache_len, *,
+                rules: Rules):
+    """One new token against a cache of length cache_len.  Returns
+    (logits (B,1,V), new_cache)."""
+    h = _embed(cfg, params, token).astype(jnp.dtype(cfg.dtype))
+    cross_stack = None
+    sub_cache = {k: v for k, v in cache.items() if k != "cross"}
+    if cfg.is_encoder_decoder:
+        cross_stack = cache_to_cross_stack(cache["cross"])
+    positions = cache_len + jnp.arange(1)
+    h, new_cache = transformer.decoder_apply(
+        cfg, params["decoder"], h, positions=positions, rules=rules,
+        caches=sub_cache, cache_len=cache_len, cross_kv_stack=cross_stack)
+    if cfg.is_encoder_decoder:
+        new_cache["cross"] = cache["cross"]
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _lm_logits(cfg, params, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count from the abstract tree.  active_only: replace
+    each MoE layer's expert bank with (top_k + n_shared) experts — the 6·N·D
+    'active parameters' convention for MoE FLOPs."""
+    ab = model_abstract(cfg)
+    leaves = jax.tree.leaves(ab, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = sum(int(np.prod(s.shape)) for s in leaves)
+    if active_only and cfg.moe is not None:
+        mo = cfg.moe
+        D, F, E = cfg.d_model, mo.d_expert, mo.num_experts
+        per_expert = 3 * D * F
+        nd = mo.first_dense
+        n_moe = sum(
+            1 for s in range(len(cfg.pattern))
+            if transformer._slot_is_moe(cfg, s)) * (
+                (cfg.n_layers - nd) // len(cfg.pattern))
+        total -= n_moe * (E - mo.top_k) * per_expert
+    return total
+
+
+def non_embedding_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    n = count_params(cfg, active_only)
+    n -= cfg.padded_vocab * cfg.d_model        # input embedding table
+    return n

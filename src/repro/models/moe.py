@@ -1,0 +1,213 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Dispatch strategy (TPU-native, static shapes): instead of GShard's one-hot
+dispatch einsum (O(T·E·C) memory — intractable at 1M tokens), tokens are
+*sorted by expert id* and scattered into a capacity-padded (E, C, D) buffer.
+Expert FFNs then run as one grouped einsum ``ecd,edf->ecf`` with the expert
+axis sharded over the ``tensor`` mesh axis (expert parallelism); GSPMD
+inserts the all-to-alls at the dispatch/combine boundaries.  Overflowing
+tokens beyond capacity are dropped (standard capacity-factor semantics);
+their residual path still carries them.
+
+FLOP cost is the true MoE cost: E·C·D·F with E·C ≈ T·top_k·cf — not the
+dense all-experts product.  This matters for the §Roofline useful-FLOPs
+accounting.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .sharding import ParamSpec
+from . import layers
+
+
+def moe_abstract(cfg: ModelConfig):
+    mo = cfg.moe
+    D, F, E = cfg.d_model, mo.d_expert, mo.num_experts
+    p = {
+        "router": ParamSpec((D, E), ("fsdp", None)),
+        "w_gate": ParamSpec((E, D, F), ("tensor", "fsdp", None)),
+        "w_up": ParamSpec((E, D, F), ("tensor", "fsdp", None)),
+        "w_down": ParamSpec((E, F, D), ("tensor", None, "fsdp")),
+    }
+    if mo.n_shared:
+        p["shared"] = layers.swiglu_abstract(D, F * mo.n_shared)
+    return p
+
+
+def _capacity(tokens: int, mo: MoEConfig) -> int:
+    c = int(tokens * mo.top_k * mo.capacity_factor / mo.num_experts)
+    return max(8, (c + 7) // 8 * 8)   # sublane-aligned
+
+
+def moe_apply(cfg: ModelConfig, p, x, rules=None):
+    """x (B, S, D) -> (B, S, D).  Capacity-dropping top-k MoE.
+
+    Two execution paths with identical semantics (up to which overflow
+    tokens drop — capacity is per-shard in the sharded path, as in every
+    production EP system):
+
+      * global (default / smoke tests): pure-jnp gathers over the full
+        token axis.
+      * shard_map (used when ``rules.mesh`` is known): per-data-shard
+        routing + expert-parallel FFN over the tensor axis, with ONE psum
+        as the only cross-shard communication.  GSPMD-auto cannot localize
+        a global argsort/gather (§Perf iteration 3) — this path removes
+        the giant all-reduces it generates.
+    """
+    out = None
+    # shard_map pays an FSDP weight-regather at its boundary — amortized
+    # over train/prefill token counts, but a regression for single-token
+    # decode (measured 10x on jamba decode_32k): decode keeps the global
+    # path, whose gathers are tiny at T = batch.
+    if (rules is not None and rules.mesh is not None and rules.tensor
+            and x.shape[1] > 1):
+        out = _moe_shard_map(cfg, p, x, rules)
+    if out is None:
+        out = _moe_global(cfg, p, x)
+    if cfg.moe.n_shared:
+        B, S, D = x.shape
+        out = out + layers.swiglu_apply(p["shared"], x.reshape(B * S, D)) \
+            .reshape(B, S, D)
+    return out
+
+
+def _moe_global(cfg: ModelConfig, p, x):
+    mo = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K, F = mo.num_experts, mo.top_k, mo.d_expert
+    C = _capacity(T, mo)
+
+    xf = x.reshape(T, D)
+    logits = (xf @ p["router"]).astype(jnp.float32)            # (T, E)
+    gates, eids = jax.lax.top_k(jax.nn.softmax(logits, -1), K)  # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch (gather-only: no scatter ops) ---------------
+    # GSPMD cannot reshard scatters efficiently (it falls back to full
+    # replication — the "Involuntary full rematerialization" warning, which
+    # dominated the baseline collective term; §Perf iteration 2).  Both
+    # dispatch and combine are therefore expressed as gathers driven by the
+    # sort permutation and its inverse.
+    flat_e = eids.reshape(-1)                                   # (T*K,)
+    flat_tok = jnp.repeat(jnp.arange(T), K)                     # token of entry
+    order = jnp.argsort(flat_e)                                 # stable
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    inv_order = jnp.argsort(order)                              # entry -> rank
+    # position of each sorted entry within its expert group:
+    group_start = jnp.searchsorted(e_sorted, jnp.arange(E))     # (E,)
+    pos = jnp.arange(T * K) - group_start[e_sorted]
+    keep = pos < C                                              # drop overflow
+
+    # dispatch: xe[e, c] = tokens of the c-th kept entry of expert e
+    take = group_start[:, None] + jnp.arange(C)[None, :]        # (E, C)
+    valid = take < jnp.append(group_start[1:], T * K)[:, None]
+    take = jnp.minimum(take, T * K - 1)
+    xe = jnp.where(valid[..., None],
+                   xf[tok_sorted[take]], 0.0).astype(x.dtype)   # (E, C, D)
+
+    # ---- expert FFNs (grouped einsum, expert-parallel) ------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])              # (E, C, D)
+
+    # ---- combine: inverse-permutation gather + weighted sum over slots --
+    ye_flat = ye.reshape(E * C, D)
+    slot = jnp.where(keep, e_sorted * C + pos, 0)
+    contrib_sorted = jnp.where(keep[:, None], ye_flat[slot], 0.0)
+    entry_out = contrib_sorted[inv_order].reshape(T, K, D)       # orig order
+    out = jnp.einsum("tkd,tk->td", entry_out,
+                     gates.astype(entry_out.dtype)).astype(x.dtype)
+    return out.reshape(B, S, D)
+
+
+# ---------------------------------------------------------------------------
+# shard_map path: local routing, expert-parallel FFN, one psum
+# ---------------------------------------------------------------------------
+
+
+def _moe_local_partial(cfg: ModelConfig, xf, router, wg, wu, wd, tax):
+    """Per-shard MoE: xf (T_loc, D) local tokens; wg/wu/wd (E_loc, D, F)
+    this shard's experts.  Returns this shard's partial output (T_loc, D);
+    the caller psums over the tensor axis."""
+    mo = cfg.moe
+    T, D = xf.shape
+    E, K = mo.num_experts, mo.top_k
+    E_loc = wg.shape[0]
+    C = _capacity(T, mo)
+    rank = jax.lax.axis_index(tax)
+
+    logits = (xf @ router).astype(jnp.float32)
+    gates, eids = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eids.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    inv_order = jnp.argsort(order)
+    group_start_all = jnp.searchsorted(e_sorted, jnp.arange(E + 1))
+    pos = jnp.arange(T * K) - group_start_all[:-1][e_sorted]
+    keep = pos < C
+
+    # dispatch only MY experts: rows [rank*E_loc, (rank+1)*E_loc)
+    my_e = rank * E_loc + jnp.arange(E_loc)
+    g_start = group_start_all[my_e]                    # (E_loc,)
+    g_end = group_start_all[my_e + 1]
+    take = g_start[:, None] + jnp.arange(C)[None, :]   # (E_loc, C)
+    valid = take < g_end[:, None]
+    take = jnp.minimum(take, T * K - 1)
+    xe = jnp.where(valid[..., None], xf[tok_sorted[take]], 0.0) \
+        .astype(xf.dtype)                              # (E_loc, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * \
+        jnp.einsum("ecd,edf->ecf", xe, wu)
+    ye = jnp.einsum("ecf,efd->ecd", h, wd)             # (E_loc, C, D)
+
+    local_e = e_sorted - rank * E_loc
+    mine = (local_e >= 0) & (local_e < E_loc) & keep
+    slot = jnp.where(mine, local_e * C + pos, 0)
+    contrib_sorted = jnp.where(mine[:, None],
+                               ye.reshape(E_loc * C, D)[slot], 0.0)
+    entry_out = contrib_sorted[inv_order].reshape(T, K, D)
+    return jnp.einsum("tkd,tk->td", entry_out,
+                      gates.astype(entry_out.dtype)).astype(xf.dtype)
+
+
+def _moe_shard_map(cfg: ModelConfig, p, x, rules):
+    """shard_map wrapper; returns None when the shapes don't divide the
+    mesh (the caller then falls back to the global path)."""
+    from jax.sharding import PartitionSpec as P
+    mo = cfg.moe
+    mesh, tax = rules.mesh, rules.tensor
+    baxes = rules.batch if isinstance(rules.batch, tuple) else (rules.batch,)
+    baxes = tuple(a for a in baxes if a in mesh.axis_names)
+    n_b = 1
+    for a in baxes:
+        n_b *= mesh.shape[a]
+    n_t = mesh.shape[tax]
+    B, S, D = x.shape
+    if (not baxes or B % n_b != 0 or mo.num_experts % n_t != 0):
+        return None
+    bspec = baxes if len(baxes) > 1 else baxes[0]
+
+    def body(xl, router, wg, wu, wd):
+        Bl, S_, D_ = xl.shape
+        out = _moe_local_partial(cfg, xl.reshape(Bl * S_, D_), router,
+                                 wg, wu, wd, tax)
+        return jax.lax.psum(out, tax).reshape(Bl, S_, D_)
+
+    w_spec = P(tax, None, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  w_spec, w_spec, w_spec),
+        out_specs=P(bspec, None, None),
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])

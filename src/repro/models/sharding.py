@@ -1,0 +1,119 @@
+"""Logical-axis sharding: one table maps logical tensor axes to mesh axes.
+
+Parameters and activations are annotated with *logical* axis names at the
+point of definition; ``to_pspec`` resolves them against the active rule set
+(which differs between the single-pod and multi-pod meshes only in what the
+``batch``/``worker`` axes map to).  This is the MaxText/Flax-linen pattern
+without the framework dependency.
+
+Rules (production defaults):
+  batch    -> ("pod", "data")  activations' batch dim (DP across pods too)
+  fsdp     -> "data"           weight FSDP shard dim
+  tensor   -> "model"          TP: heads / ffn / vocab / experts
+  seq_sp   -> "model"          sequence-parallel residual stream between blocks
+  kv_seq   -> "model"          decode KV-cache sequence dim (flash-decoding)
+  layers   -> None             scan-stacked layer dim, never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    batch: Tuple[str, ...] = ("data",)
+    fsdp: Optional[str] = "data"
+    tensor: Optional[str] = "model"
+    seq_sp: Optional[str] = "model"
+    kv_seq: Optional[str] = "model"
+    # concrete mesh, when known — lets layers opt into shard_map subregions
+    # (the MoE dispatch) instead of pure GSPMD-auto. None in smoke tests.
+    mesh: Optional[Mesh] = dataclasses.field(default=None, compare=False)
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        v = getattr(self, logical)
+        if isinstance(v, tuple):
+            return v if len(v) > 1 else (v[0] if v else None)
+        return v
+
+
+def rules_for_mesh(mesh: Mesh) -> Rules:
+    """Pick rules matching the mesh's axes (pod axis folds into batch/DP)."""
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    has_model = "model" in axes
+    return Rules(
+        batch=batch or (axes[0],),
+        fsdp="data" if "data" in axes else None,
+        tensor="model" if has_model else None,
+        seq_sp="model" if has_model else None,
+        kv_seq="model" if has_model else None,
+        mesh=mesh,
+    )
+
+
+def to_pspec(logical_axes: Tuple[Optional[str], ...], rules: Rules) -> P:
+    return P(*(rules.resolve(a) for a in logical_axes))
+
+
+class ParamSpec(NamedTuple):
+    """Abstract parameter: shape + logical axes + init scale."""
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones
+    scale: float = 1.0
+
+    def sds(self, dtype) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, dtype)
+
+
+def pspec_tree(abstract, rules: Rules):
+    """Map a pytree of ParamSpec to PartitionSpecs."""
+    return jax.tree.map(lambda s: to_pspec(s.logical, rules), abstract,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def sds_tree(abstract, dtype):
+    return jax.tree.map(lambda s: s.sds(dtype), abstract,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def sharding_tree(abstract, rules: Rules, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, to_pspec(s.logical, rules)), abstract,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_tree(abstract, key, dtype):
+    """Materialize real parameters (smoke tests / examples only; the dry-run
+    never calls this)."""
+    leaves, treedef = jax.tree.flatten(
+        abstract, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    import jax.numpy as jnp
+
+    def make(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / (fan_in ** 0.5)
+        return (jax.random.normal(k, spec.shape, dtype) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(s, k) for s, k in zip(leaves, keys)])
+
+
+def constrain(x, rules: Rules, *logical_axes):
+    """with_sharding_constraint by logical names (no-op outside jit mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, to_pspec(logical_axes, rules))
+    except (ValueError, RuntimeError):
+        return x

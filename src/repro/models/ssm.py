@@ -1,0 +1,185 @@
+"""Mamba2 block via SSD (state-space duality), arXiv:2405.21060.
+
+Train/prefill run the *chunked* SSD algorithm: the sequence is cut into
+Q-length chunks; within a chunk the recurrence is evaluated as a masked
+quadratic form (MXU-friendly), across chunks a short ``lax.scan`` carries the
+(H, N, P) state.  Decode is the O(1) recurrence
+    h <- exp(dt·A) h + dt · B ⊗ x,   y = C·h + D·x.
+
+TPU adaptation notes (DESIGN.md §2): the chunk quadratic form is exactly a
+(Q × Q) masked attention-like product — it maps onto the MXU the same way a
+flash tile does, with chunk length Q=256 keeping every tile VMEM-resident.
+Heads shard over the ``tensor`` mesh axis; the cross-chunk scan carries only
+the (B, H, N, P) state so sequence length never enters live memory.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMConfig
+from .sharding import ParamSpec
+from . import layers
+
+
+def ssm_abstract(cfg: ModelConfig):
+    sc = cfg.ssm
+    D = cfg.d_model
+    Din = sc.d_inner(D)
+    H = sc.n_heads(D)
+    N = sc.d_state
+    conv_ch = Din + 2 * N
+    return {
+        "w_zx": ParamSpec((D, 2 * Din), ("fsdp", "tensor")),
+        "w_bc": ParamSpec((D, 2 * N), ("fsdp", None)),
+        "w_dt": ParamSpec((D, H), ("fsdp", None)),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="zeros"),
+        "D_skip": ParamSpec((H,), (None,), init="ones"),
+        "conv_w": ParamSpec((sc.d_conv, conv_ch), (None, None)),
+        "conv_b": ParamSpec((conv_ch,), (None,), init="zeros"),
+        "norm": ParamSpec((Din,), (None,), init="ones"),
+        "w_out": ParamSpec((Din, D), ("tensor", "fsdp")),
+    }
+
+
+def ssm_cache_abstract(cfg: ModelConfig, batch: int):
+    sc = cfg.ssm
+    D = cfg.d_model
+    Din, H, N = sc.d_inner(D), sc.n_heads(D), sc.d_state
+    return {
+        "state": ParamSpec((batch, H, N, sc.head_dim), ("batch", None, None, None)),
+        "conv": ParamSpec((batch, sc.d_conv - 1, Din + 2 * N),
+                          ("batch", None, None)),
+    }
+
+
+def _causal_conv_train(w, b, u):
+    """Depthwise causal conv over (B, L, C); width = w.shape[0]."""
+    dw = w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (dw - 1, 0), (0, 0)))
+    out = sum(u_pad[:, i:i + u.shape[1], :] * w[i] for i in range(dw))
+    return out + b
+
+
+def _causal_conv_step(w, b, conv_cache, u_new):
+    """conv_cache (B, dw-1, C); u_new (B, 1, C) -> (out (B,1,C), new cache)."""
+    dw = w.shape[0]
+    window = jnp.concatenate([conv_cache, u_new], axis=1)       # (B, dw, C)
+    out = jnp.einsum("btc,tc->bc", window, w)[:, None, :] + b
+    return out, window[:, 1:, :]
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,L,H,P) pre-scaled inputs; dt (B,L,H) post-softplus; A (H,) negative;
+    B, C (B,L,N).  Returns (y (B,L,H,P), final_state (B,H,N,P)).
+    """
+    Bsz, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    r = lambda t, d: t.reshape(Bsz, nc, Q, *t.shape[2:])
+    xc, dtc = r(x, 4), r(dt, 3)
+    Bc, Cc = r(B, 3), r(C, 3)
+
+    dA = dtc * A[None, None, None, :]                 # (B,c,Q,H) negative
+    cs = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+
+    # ---- intra-chunk (masked quadratic form) -----------------------------
+    # att[b,c,h,i,j] = exp(cs_i - cs_j) * (C_i . B_j) * dt_j,  j <= i
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]        # (B,c,Q,Q,H)
+    idx = jnp.arange(Q)
+    mask = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    seg = jnp.where(mask, seg, -jnp.inf)
+    decay = jnp.exp(seg)                                      # (B,c,Q,Q,H)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # (B,c,Q,Q)
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]       # (B,c,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+
+    # ---- chunk states and inter-chunk recurrence -------------------------
+    last = cs[:, :, -1:, :]                                   # (B,c,1,H)
+    w_state = jnp.exp(last - cs) * dtc                        # (B,c,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, w_state, xc)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                   # (B,c,H)
+
+    def body(h, inp):
+        s_c, d_c = inp                                        # (B,H,N,P), (B,H)
+        h_out = h                                             # state entering
+        h = h * d_c[:, :, None, None] + s_c
+        return h, h_out
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    hT, h_in = jax.lax.scan(
+        body, h0,
+        (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+         chunk_decay.astype(jnp.float32).transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                      # (B,c,H,N,P)
+
+    # ---- off-diagonal contribution ---------------------------------------
+    h_dec = (jnp.exp(cs)[..., None, None] * h_in[:, :, None]).astype(x.dtype)
+    y_off = jnp.einsum("bcin,bcihnp->bcihp", Cc, h_dec)       # (B,c,Q,H,P)
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y, hT
+
+
+def ssd_step(state, x, dt, A, B, C):
+    """One-token recurrence.  state (B,H,N,P); x (B,H,P); dt (B,H); B,C (B,N)."""
+    dA = jnp.exp(dt * A[None, :])                             # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", B, dt, x)
+    state = state * dA[:, :, None, None] + upd.astype(state.dtype)
+    y = jnp.einsum("bn,bhnp->bhp", C, state.astype(x.dtype))
+    return state, y
+
+
+def ssm_apply(cfg: ModelConfig, p, xres, *, cache=None):
+    """Full Mamba2 block.  xres (B, S, D) -> (out, new_cache)."""
+    sc = cfg.ssm
+    Bsz, S, D = xres.shape
+    Din = sc.d_inner(D)
+    H, N, P = sc.n_heads(D), sc.d_state, sc.head_dim
+
+    zx = xres @ p["w_zx"]
+    z, xin = zx[..., :Din], zx[..., Din:]
+    bc = xres @ p["w_bc"]
+    dt_raw = xres @ p["w_dt"]
+    conv_in = jnp.concatenate([xin, bc], axis=-1)             # (B,S,Din+2N)
+
+    new_cache = None
+    if cache is None or S > 1:
+        conv_out = _causal_conv_train(p["conv_w"], p["conv_b"], conv_in)
+        if cache is not None:       # prefill: keep the conv tail for decode
+            new_cache = {"conv": conv_in[:, S - (sc.d_conv - 1):, :].astype(
+                cache["conv"].dtype)}
+    else:
+        conv_out, conv_state = _causal_conv_step(
+            p["conv_w"], p["conv_b"], cache["conv"], conv_in)
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype)}
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :Din].reshape(Bsz, S, H, P)
+    Bmat = conv_out[..., Din:Din + N]
+    Cmat = conv_out[..., Din + N:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+
+    if cache is None or S > 1:
+        y, hT = ssd_chunked(xc, dt.astype(xc.dtype), A, Bmat, Cmat,
+                            chunk=sc.chunk)
+        if cache is not None:
+            new_cache["state"] = hT.astype(cache["state"].dtype)
+    else:
+        state, y1 = ssd_step(cache["state"], xc[:, 0], dt[:, 0].astype(xc.dtype),
+                             A, Bmat[:, 0], Cmat[:, 0])
+        new_cache["state"] = state
+        y = y1[:, None]
+    y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xc
+    y = y.reshape(Bsz, S, Din)
+    y = layers.rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["w_out"], new_cache

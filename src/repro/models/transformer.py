@@ -1,0 +1,222 @@
+"""Decoder stack: scan-over-periods with per-slot heterogeneous layers.
+
+The layer list is described by a repeating *pattern* of slots (config
+``layer_pattern``), e.g. Jamba's ("ssm","ssm","ssm","attn","ssm","ssm",
+"ssm","ssm").  Weights are stacked per slot with a leading (n_periods,)
+axis and the stack runs under one ``jax.lax.scan`` — compile time and HLO
+size stay O(pattern), not O(n_layers), which is what keeps the 512-device
+GSPMD dry-run tractable for 62-layer models.
+
+Layers that cannot join the uniform scan (DeepSeek-V2's first dense layer)
+are hoisted out as an unrolled prefix.
+
+Remat: the scan body is wrapped in ``jax.checkpoint`` (nothing_saveable) for
+training, so live activation memory is one period deep; everything else is
+recomputed in the backward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import ParamSpec, Rules, constrain
+from . import layers, moe, ssm
+
+
+# ---------------------------------------------------------------------------
+# Abstract parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _stack(abstract, n: int):
+    """Prepend a stacked (n,) layer axis to every ParamSpec in a pytree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), (None, *s.logical), s.init, s.scale),
+        abstract, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _slot_abstract(cfg: ModelConfig, kind: str, is_moe: bool,
+                   cross_attn: bool):
+    d = {"ln1": layers.rmsnorm_abstract(cfg.d_model)}
+    if kind == "attn":
+        d["attn"] = (layers.mla_abstract(cfg) if cfg.attn_type == "mla"
+                     else layers.gqa_abstract(cfg))
+    else:
+        d["attn"] = ssm.ssm_abstract(cfg)
+    if cross_attn:
+        d["ln_x"] = layers.rmsnorm_abstract(cfg.d_model)
+        d["xattn"] = layers.gqa_abstract(cfg)
+    if is_moe:
+        d["ln2"] = layers.rmsnorm_abstract(cfg.d_model)
+        d["mlp"] = moe.moe_abstract(cfg)
+    elif cfg.d_ff > 0:
+        d["ln2"] = layers.rmsnorm_abstract(cfg.d_model)
+        d["mlp"] = (layers.gelu_mlp_abstract(cfg.d_model, cfg.d_ff)
+                    if cfg.family == "audio"
+                    else layers.swiglu_abstract(cfg.d_model, cfg.d_ff))
+    return d
+
+
+def _slot_is_moe(cfg: ModelConfig, slot: int) -> bool:
+    if cfg.moe is None:
+        return False
+    return slot % cfg.moe.every_k == cfg.moe.every_k - 1 or cfg.moe.every_k == 1
+
+
+def decoder_abstract(cfg: ModelConfig):
+    nd = cfg.moe.first_dense if cfg.moe else 0
+    n_scanned = cfg.n_layers - nd
+    period = cfg.pattern
+    assert n_scanned % len(period) == 0
+    n_periods = n_scanned // len(period)
+    xattn = cfg.is_encoder_decoder
+    d = {
+        "prefix": [
+            _slot_abstract(cfg, "attn", False, xattn) for _ in range(nd)],
+        "slots": [
+            _stack(_slot_abstract(cfg, kind, _slot_is_moe(cfg, s), xattn),
+                   n_periods)
+            for s, kind in enumerate(period)],
+    }
+    return d
+
+
+def encoder_abstract(cfg: ModelConfig):
+    slot = {
+        "ln1": layers.rmsnorm_abstract(cfg.d_model),
+        "attn": layers.gqa_abstract(cfg),
+        "ln2": layers.rmsnorm_abstract(cfg.d_model),
+        "mlp": (layers.gelu_mlp_abstract(cfg.d_model, cfg.d_ff)
+                if cfg.family == "audio"
+                else layers.swiglu_abstract(cfg.d_model, cfg.d_ff)),
+    }
+    return {"slots": [_stack(slot, cfg.encoder_layers)],
+            "final_norm": layers.rmsnorm_abstract(cfg.d_model)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_slot(cfg: ModelConfig, kind: str, sp, h, *, positions, rules,
+                cache=None, cache_len=None, cross=None):
+    """One residual block: (attn|ssm) [+ cross-attn] + (mlp|moe)."""
+    new_cache = {}
+    hn = layers.rmsnorm(sp["ln1"], h, cfg.norm_eps)
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            a, c = layers.mla_apply(cfg, sp["attn"], hn, positions=positions,
+                                    cache=None if cache is None else cache["attn"],
+                                    cache_len=cache_len, rules=rules)
+        else:
+            a, c = layers.gqa_apply(cfg, sp["attn"], hn, positions=positions,
+                                    cache=None if cache is None else cache["attn"],
+                                    cache_len=cache_len, rules=rules)
+    else:
+        a, c = ssm.ssm_apply(cfg, sp["attn"], hn,
+                             cache=None if cache is None else cache["attn"])
+    if c is not None:
+        new_cache["attn"] = c
+    h = h + a.astype(h.dtype)
+    if cross is not None:
+        hx = layers.rmsnorm(sp["ln_x"], h, cfg.norm_eps)
+        a, _ = layers.gqa_apply(cfg, sp["xattn"], hx, positions=positions,
+                                cross=cross)
+        h = h + a.astype(h.dtype)
+    if "mlp" in sp:
+        hn = layers.rmsnorm(sp["ln2"], h, cfg.norm_eps)
+        if "router" in sp["mlp"]:
+            f = moe.moe_apply(cfg, sp["mlp"], hn, rules=rules)
+        elif "w_gate" in sp["mlp"]:
+            f = layers.swiglu_apply(sp["mlp"], hn)
+        else:
+            f = layers.gelu_mlp_apply(sp["mlp"], hn)
+        h = h + f.astype(h.dtype)
+    if h.shape[1] > 1:
+        h = constrain(h, rules, "batch", "seq_sp", None)
+    return h, (new_cache or None)
+
+
+def decoder_apply(cfg: ModelConfig, dec_params, h, *, positions, rules: Rules,
+                  caches=None, cache_len=None, cross_kv_stack=None,
+                  train: bool = False):
+    """Run prefix layers then the scanned periods.
+
+    caches: {"prefix": [cache, ...], "slots": [stacked-cache, ...]} or None.
+    cross_kv_stack: {"prefix": [(k,v)...], "slots": [(k,v) stacked]} or None.
+    Returns (h, new_caches).
+    """
+    period = cfg.pattern
+    new_caches = {"prefix": [], "slots": []} if caches is not None else None
+
+    for i, sp in enumerate(dec_params["prefix"]):
+        cr = cross_kv_stack["prefix"][i] if cross_kv_stack else None
+        c = caches["prefix"][i] if caches is not None else None
+        h, nc = _apply_slot(cfg, "attn", sp, h, positions=positions,
+                            rules=rules, cache=c, cache_len=cache_len,
+                            cross=cr)
+        if new_caches is not None:
+            new_caches["prefix"].append(nc)
+
+    def period_fwd(h, slot_params, slot_caches, slot_cross):
+        ncs = []
+        for s, kind in enumerate(period):
+            cr = slot_cross[s] if slot_cross is not None else None
+            c = slot_caches[s] if slot_caches is not None else None
+            h, nc = _apply_slot(cfg, kind, slot_params[s], h,
+                                positions=positions, rules=rules,
+                                cache=c, cache_len=cache_len, cross=cr)
+            ncs.append(nc)
+        return h, ncs
+
+    if caches is None and cross_kv_stack is None:
+        body = lambda h, pp: (period_fwd(h, pp, None, None)[0], None)
+        if train:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, h, dec_params["slots"])
+    else:
+        def body(h, xs):
+            pp, cc, cr = xs
+            h, ncs = period_fwd(h, pp, cc, cr)
+            return h, ncs
+        xs = (dec_params["slots"],
+              caches["slots"] if caches is not None else _nones_like_scan(
+                  dec_params["slots"]),
+              cross_kv_stack["slots"] if cross_kv_stack else _nones_like_scan(
+                  dec_params["slots"]))
+        h, ncs = jax.lax.scan(body, h, xs)
+        if new_caches is not None:
+            new_caches["slots"] = ncs
+    return h, new_caches
+
+
+def _nones_like_scan(slots):
+    """Scan xs placeholder: a list of Nones matching the slot structure
+    (None is a valid empty-pytree leaf container for scan xs)."""
+    return [None] * len(slots)
+
+
+def encoder_apply(cfg: ModelConfig, enc_params, frames, *, rules: Rules):
+    """frames (B, Se, D) precomputed embeddings (frontend stub)."""
+    positions = jnp.arange(frames.shape[1])
+
+    def body(h, sp):
+        hn = layers.rmsnorm(sp["ln1"], h, cfg.norm_eps)
+        a, _ = layers.gqa_apply(cfg, sp["attn"], hn, positions=positions,
+                                causal=False)
+        h = h + a
+        hn = layers.rmsnorm(sp["ln2"], h, cfg.norm_eps)
+        if "w_gate" in sp["mlp"]:
+            h = h + layers.swiglu_apply(sp["mlp"], hn)
+        else:
+            h = h + layers.gelu_mlp_apply(sp["mlp"], hn)
+        return h, None
+
+    h, _ = jax.lax.scan(body, frames, enc_params["slots"][0])
+    return layers.rmsnorm(enc_params["final_norm"], h, cfg.norm_eps)

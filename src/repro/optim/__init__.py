@@ -1,0 +1,1 @@
+from . import adamw, schedule  # noqa: F401

@@ -1,0 +1,1 @@
+from . import fault  # noqa: F401

@@ -1,0 +1,126 @@
+"""Fault tolerance & elasticity runtime.
+
+What runs where:
+
+  * **Checkpoint/restart** — the driver loop (launch/train.py, launch/
+    solve.py) saves atomically every ``ckpt_every`` steps via
+    checkpoint/ckpt.py and resumes from ``latest_step`` on restart; data
+    batches are pure functions of the step counter, so restart is exact.
+
+  * **Heartbeats / straggler detection** — `HeartbeatMonitor` tracks
+    per-worker progress timestamps.  In a real deployment these arrive via
+    the cluster control plane (GRPC/borglet); here the monitor is driven by
+    the solver loop and by fault-injection tests.  Policy: a worker silent
+    for > ``timeout`` is marked dead; one slower than ``straggler_factor``×
+    median is a straggler.
+
+  * **Straggler mitigation for APC** — with r-redundant blocks
+    (core/coding.py) an iteration closes as soon as a covering subset of
+    workers responded: the monitor produces the alive-mask, coding.py's
+    ``selection_weights`` reweights the master averaging.  Semantically
+    exact (see coding.py docstring), so convergence is unaffected.
+
+  * **Elastic re-mesh** — for LM training, device loss requires a new mesh:
+    `ElasticPlan.shrink` computes the largest (data', model) mesh that fits
+    the survivors, keeping the model axis intact (TP degree is a property
+    of the checkpointed layout; the data axis is elastic).  The driver then
+    restores the last checkpoint onto the new mesh — parameters are saved
+    mesh-agnostically (full arrays per leaf), so any mesh can load them.
+
+  * **Rejoin/resync** — a recovered APC worker must refresh its replicas'
+    ``x_j`` from a live holder before re-entering the averaging set
+    (coding.py invariant); `HeartbeatMonitor.rejoin` models that handshake.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    n_workers: int
+    timeout: float = 10.0            # seconds without progress => dead
+    straggler_factor: float = 3.0    # x median iteration time => straggler
+    _last: Dict[int, float] = dataclasses.field(default_factory=dict)
+    _durations: Dict[int, float] = dataclasses.field(default_factory=dict)
+    _dead: set = dataclasses.field(default_factory=set)
+
+    def beat(self, worker: int, now: Optional[float] = None,
+             duration: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        self._last[worker] = now
+        if duration is not None:
+            self._durations[worker] = duration
+        self._dead.discard(worker)
+
+    def rejoin(self, worker: int, *, resynced: bool):
+        """A dead worker may only rejoin after resyncing its block state."""
+        if not resynced:
+            raise RuntimeError(
+                f"worker {worker} must resync replicas before rejoining")
+        self._dead.discard(worker)
+        self._last[worker] = time.monotonic()
+
+    def alive_mask(self, now: Optional[float] = None) -> np.ndarray:
+        now = time.monotonic() if now is None else now
+        mask = np.ones(self.n_workers, dtype=bool)
+        for w in range(self.n_workers):
+            last = self._last.get(w)
+            if w in self._dead or last is None or now - last > self.timeout:
+                mask[w] = False
+                self._dead.add(w)
+        return mask
+
+    def stragglers(self) -> np.ndarray:
+        mask = np.zeros(self.n_workers, dtype=bool)
+        if len(self._durations) >= max(2, self.n_workers // 2):
+            med = float(np.median(list(self._durations.values())))
+            for w, d in self._durations.items():
+                if d > self.straggler_factor * med:
+                    mask[w] = True
+        return mask
+
+    def drop_set(self) -> np.ndarray:
+        """Workers to exclude this iteration: dead OR straggling."""
+        return ~self.alive_mask() | self.stragglers()
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Largest legal mesh after losing devices (model axis preserved)."""
+    data: int
+    model: int
+    dropped_hosts: int
+
+    @staticmethod
+    def shrink(n_devices_left: int, model: int) -> "ElasticPlan":
+        if n_devices_left < model:
+            raise RuntimeError(
+                f"{n_devices_left} devices cannot sustain TP={model}; "
+                "restore needs a smaller-TP checkpoint layout")
+        data = n_devices_left // model
+        return ElasticPlan(data=data, model=model,
+                           dropped_hosts=n_devices_left - data * model)
+
+
+def covering_ok(alive: np.ndarray, r: int) -> bool:
+    """Can an r-redundant cyclic assignment still cover all blocks?
+
+    Block j is lost iff workers {j, j-1, ..., j-r+1 (mod m)} are all dead —
+    i.e. r cyclically-consecutive failures.
+    """
+    m = len(alive)
+    dead = ~np.asarray(alive, dtype=bool)
+    if r >= m:
+        return alive.any()
+    run = 0
+    # unwrap: scan 2m to catch wrap-around runs
+    for i in range(2 * m):
+        run = run + 1 if dead[i % m] else 0
+        if run >= r:
+            return False
+    return True

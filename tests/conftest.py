@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# Solver tests need float64 (the paper's setting); model tests force f32
+# configs explicitly.  NOTE: do not set XLA_FLAGS here — smoke tests and
+# benches must see 1 device (the 512-device meshes live only in dryrun.py).
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

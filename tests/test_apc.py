@@ -1,0 +1,99 @@
+"""Algorithm 1 (APC): convergence, Theorem 1 rate, Proposition 2."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apc, baselines, partition, spectral
+from repro.data import linsys
+
+
+@pytest.fixture(scope="module")
+def sys_():
+    return linsys.conditioned_gaussian(n=96, m=4, cond=25.0, seed=7)
+
+
+def test_converges_to_true_solution(sys_):
+    res = apc.solve(sys_, iters=600)
+    assert float(res.errors[-1]) < 1e-10
+
+
+def test_local_constraints_invariant(sys_):
+    """Every worker iterate satisfies A_i x_i = b_i at all times (the
+    projection-consensus invariant)."""
+    res = apc.solve(sys_, iters=50)
+    viol = jnp.einsum("mpn,mn->mp", sys_.A_blocks, res.state.x) - sys_.b_blocks
+    assert float(jnp.max(jnp.abs(viol))) < 1e-8
+
+
+def test_rate_matches_theorem1(sys_):
+    X = spectral.x_matrix(sys_)
+    mu_min, mu_max = spectral.mu_extremes(X)
+    prm = spectral.apc_optimal(mu_min, mu_max)
+    res = apc.solve(sys_, iters=400)
+    e = np.asarray(res.errors)
+    # empirical contraction between iterations 100 and 300 (past transient,
+    # before the float64 floor)
+    emp = (e[300] / e[100]) ** (1.0 / 200.0)
+    assert emp <= prm.rho * 1.05 + 0.02
+
+
+def test_theorem1_optimality_equations(sys_):
+    X = spectral.x_matrix(sys_)
+    mu_min, mu_max = spectral.mu_extremes(X)
+    p = spectral.apc_optimal(mu_min, mu_max)
+    lhs1 = mu_max * p.eta * p.gamma
+    lhs2 = mu_min * p.eta * p.gamma
+    rho = np.sqrt((p.gamma - 1.0) * (p.eta - 1.0))
+    assert lhs1 == pytest.approx((1.0 + rho) ** 2, rel=1e-8)
+    assert lhs2 == pytest.approx((1.0 - rho) ** 2, rel=1e-8)
+    assert p.rho == pytest.approx(rho, rel=1e-8)
+    assert 0.0 <= p.gamma <= 2.0            # set S constraint
+
+
+def test_cimmino_is_apc_gamma1(sys_):
+    """Proposition 2: block Cimmino == APC with gamma = 1, eta = m nu."""
+    m = sys_.m
+    nu = 0.3 / m
+    hist_c = baselines.cimmino(sys_, iters=40, nu=nu)
+    factors = apc.prepare(sys_)
+    state = apc.init_state(factors)
+    # match Cimmino's x̄(0) = 0 start: x_i(0) arbitrary (x_i(1) ignores it
+    # when gamma=1), x̄(0) = 0.
+    state = apc.APCState(x=state.x, xbar=jnp.zeros_like(state.xbar),
+                         t=state.t)
+    for _ in range(40):
+        state = apc.apc_step(factors, state, 1.0, m * nu)
+    assert float(jnp.linalg.norm(state.xbar - hist_c.x)) < 1e-9
+
+
+def test_kernel_path_equals_reference(sys_):
+    r1 = apc.solve(sys_, iters=60)
+    r2 = apc.solve(sys_, iters=60, use_kernel=True)
+    assert float(jnp.linalg.norm(r1.x - r2.x)) < 1e-8
+
+
+def test_partition_roundtrip(rng):
+    A = rng.standard_normal((24, 10))
+    b = rng.standard_normal(24)
+    sys_ = partition.partition(A, b, 4)
+    A2, b2 = sys_.dense()
+    np.testing.assert_allclose(np.asarray(A2), A)
+    np.testing.assert_allclose(np.asarray(b2), b)
+    with pytest.raises(ValueError):
+        partition.partition(A, b, 5)
+    Ap, bp = partition.pad_to_blocks(A, b, 5)
+    assert Ap.shape[0] % 5 == 0
+
+
+def test_solve_resumable(sys_):
+    """APCState checkpoint/restart mid-solve is exact."""
+    factors = apc.prepare(sys_)
+    s = apc.init_state(factors)
+    for _ in range(20):
+        s = apc.apc_step(factors, s, 1.2, 1.1)
+    # "restart" from a deep copy of the state
+    s2 = apc.APCState(*[jnp.array(v) for v in s])
+    for _ in range(20):
+        s = apc.apc_step(factors, s, 1.2, 1.1)
+        s2 = apc.apc_step(factors, s2, 1.2, 1.1)
+    assert float(jnp.linalg.norm(s.xbar - s2.xbar)) == 0.0

@@ -1,0 +1,60 @@
+"""Deliverable artifacts stay coherent: the dry-run JSONs parse, cover the
+full (arch × shape × mesh) grid with zero failures, and the roofline table
+regenerates from them."""
+import json
+import os
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ARTIFACTS = ["dryrun_baseline.json", "dryrun_optimized.json"]
+
+
+def _load(name):
+    path = os.path.join(REPO, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not generated (run repro.launch.dryrun)")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", ARTIFACTS)
+def test_dryrun_grid_complete_and_green(name):
+    recs = _load(name)
+    from repro import configs
+    from repro.launch import cells
+    seen = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
+    for mesh in ("16x16", "2x16x16"):
+        for arch in configs.ARCHS:
+            for shape in cells.SHAPES:
+                assert (arch, shape, mesh) in seen, (arch, shape, mesh)
+    assert not [r for r in recs if r["status"] == "FAILED"]
+    # skips are exactly the documented long_500k inapplicabilities
+    for r in recs:
+        if r["status"] == "skipped":
+            assert r["shape"] == "long_500k"
+            cfg = configs.get(r["arch"])
+            assert not cfg.supports_long_decode
+
+
+def test_roofline_rows_sane():
+    recs = _load("dryrun_optimized.json")
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        f = r["roofline"]
+        assert f["t_compute"] > 0 and f["t_memory"] > 0
+        assert f["bottleneck"] in ("compute", "memory", "collective")
+        assert 0 < f["useful_ratio"] < 1.5, r["arch"]
+        assert 0 <= f["roofline_fraction"] <= 1.0
+
+
+def test_tables_regenerate():
+    _load("dryrun_baseline.json")
+    from benchmarks import make_experiments_tables as m
+    base = m.load("dryrun_baseline.json")
+    opt = m.load("dryrun_optimized.json")
+    md = m.table(base, opt, "16x16")
+    assert md.count("\n") > 30
+    assert "train_4k" in md

@@ -1,0 +1,57 @@
+"""Checkpoint layer: atomic, versioned, validated restore."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _tree(v=0.0):
+    return {"a": jnp.arange(6, dtype=jnp.float32) + v,
+            "b": {"c": jnp.ones((2, 3)) * v, "step": jnp.asarray(3)}}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    t = _tree(1.5)
+    ckpt.save(d, 10, t)
+    out = ckpt.restore(d, _tree())
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(t["a"]))
+    np.testing.assert_allclose(np.asarray(out["b"]["c"]),
+                               np.asarray(t["b"]["c"]))
+
+
+def test_latest_and_gc(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, _tree(float(s)), keep=3)
+    assert ckpt.latest_step(d) == 5
+    assert ckpt.all_steps(d) == [3, 4, 5]
+    out = ckpt.restore(d, _tree(), step=4)
+    assert float(out["b"]["c"][0, 0]) == 4.0
+
+
+def test_uncommitted_ignored(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree(1.0))
+    # simulate a crash mid-save: a step dir without the COMMIT marker
+    os.makedirs(os.path.join(d, "step_0000000002"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_structure_validation(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"only": jnp.zeros(3)})
+    bad = _tree()
+    bad["a"] = jnp.zeros((7,))
+    with pytest.raises(ValueError):
+        ckpt.restore(d, bad)
+
+
+def test_resume_missing_dir():
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore("/tmp/definitely_missing_ckpt_dir_xyz", _tree())

@@ -1,0 +1,86 @@
+"""Straggler-tolerant r-redundant APC (core/coding.py, runtime/fault.py)."""
+import numpy as np
+import pytest
+
+from repro.core import coding, spectral
+from repro.data import linsys
+from repro.runtime import fault
+
+
+@pytest.fixture(scope="module")
+def sys_():
+    return linsys.conditioned_gaussian(n=96, m=6, cond=10.0, seed=11)
+
+
+def test_selection_weights_cover_each_block_once():
+    m, r = 6, 3
+    for trial in range(20):
+        rng = np.random.default_rng(trial)
+        alive = rng.random(m) > 0.3
+        if not fault.covering_ok(alive, r):
+            continue
+        W = coding.selection_weights(alive, m, r)
+        # column-sum per block: holder (i, k) holds block (i+k)%m
+        per_block = np.zeros(m)
+        for i in range(m):
+            for k in range(r):
+                per_block[(i + k) % m] += W[i, k]
+        np.testing.assert_allclose(per_block, 1.0)
+        # dead workers contribute nothing
+        assert W[~alive].sum() == 0.0
+
+
+def test_unrecoverable_raises():
+    m, r = 4, 2
+    alive = np.array([False, False, True, True])  # blocks of 0,1 both lost?
+    # workers 0 and 1 adjacent -> block 1 held by workers 1 (slot 0) and 0
+    # (slot 1): both dead -> unrecoverable.
+    assert not fault.covering_ok(alive, r)
+    with pytest.raises(RuntimeError):
+        coding.selection_weights(alive, m, r)
+
+
+def test_straggler_run_matches_no_straggler(sys_):
+    """Exactness: dropping covered workers does not change the iterates."""
+    rng = np.random.default_rng(2)
+
+    def sched(t):
+        a = np.ones(6, bool)
+        if t % 2 == 0:
+            a[rng.integers(0, 6)] = False
+        return a
+
+    x1, res1 = coding.solve_redundant(sys_, r=2, iters=150)
+    rng = np.random.default_rng(2)
+    x2, res2 = coding.solve_redundant(sys_, r=2, iters=150,
+                                      alive_schedule=sched)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-10)
+    assert res2[-1] < 1e-8
+
+
+def test_heartbeat_monitor():
+    mon = fault.HeartbeatMonitor(n_workers=4, timeout=5.0)
+    for w in range(4):
+        mon.beat(w, now=100.0, duration=1.0)
+    assert mon.alive_mask(now=102.0).all()
+    mask = mon.alive_mask(now=106.0)
+    assert not mask.any()
+    with pytest.raises(RuntimeError):
+        mon.rejoin(1, resynced=False)
+    mon.rejoin(1, resynced=True)
+    assert mon.alive_mask()[1]
+
+
+def test_straggler_detection():
+    mon = fault.HeartbeatMonitor(n_workers=4, straggler_factor=2.0)
+    for w in range(4):
+        mon.beat(w, duration=1.0 if w else 10.0)   # worker 0 is 10x median
+    s = mon.stragglers()
+    assert s[0] and not s[1:].any()
+
+
+def test_elastic_plan():
+    p = fault.ElasticPlan.shrink(n_devices_left=200, model=16)
+    assert p.data == 12 and p.model == 16
+    with pytest.raises(RuntimeError):
+        fault.ElasticPlan.shrink(n_devices_left=8, model=16)

@@ -1,0 +1,59 @@
+"""Property tests (hypothesis) for the spectral analysis layer."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spectral
+from repro.data import linsys
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([32, 48, 64]), m=st.sampled_from([2, 4]),
+       cond=st.floats(1.5, 1e4), seed=st.integers(0, 1000))
+def test_X_eigenvalues_in_unit_interval(n, m, cond, seed):
+    sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=cond, seed=seed)
+    X = spectral.x_matrix(sys_)
+    w = np.linalg.eigvalsh(X)
+    assert w[0] > -1e-10
+    assert w[-1] < 1.0 + 1e-10
+
+
+@settings(max_examples=50, deadline=None)
+@given(mu_min=st.floats(1e-8, 0.99), ratio=st.floats(1.0001, 1e6))
+def test_apc_optimal_properties(mu_min, ratio):
+    mu_max = min(mu_min * ratio, 1.0)
+    if mu_max <= mu_min:
+        mu_max = min(mu_min * 1.001, 1.0)
+    p = spectral.apc_optimal(mu_min, mu_max)
+    assert 0.0 <= p.rho < 1.0
+    assert 0.0 <= p.gamma <= 2.0
+    # optimality system holds — compare on the sqrt scale (dodges the
+    # cancellation of (1 - rho)^2 at large kappa) and against the
+    # closed-form rho: recomputing rho from (gamma-1)(eta-1) hits the f64
+    # representation floor of gamma-1 ~ rho^2/eta when eta is huge.
+    s = p.eta * p.gamma
+    np.testing.assert_allclose(np.sqrt(mu_max * s), 1.0 + p.rho, rtol=1e-5)
+    np.testing.assert_allclose(np.sqrt(mu_min * s), 1.0 - p.rho, rtol=1e-4,
+                               atol=1e-7)
+    rho_re = np.sqrt(max((p.gamma - 1) * (p.eta - 1), 0.0))
+    tol = 1e-7 + np.sqrt(2.3e-16 * max(p.eta, 1.0))
+    assert abs(rho_re - p.rho) <= tol
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.floats(1.0001, 1e8))
+def test_rate_formulas_ordering(k):
+    """Table 1 closed forms: rho_APC(kappa) <= rho_HBM(kappa) etc."""
+    lmin, lmax = 1.0, k
+    _, rho_dgd = spectral.dgd_optimal(lmin, lmax)
+    _, _, rho_nag = spectral.dnag_optimal(lmin, lmax)
+    _, _, rho_hbm = spectral.dhbm_optimal(lmin, lmax)
+    assert rho_hbm <= rho_nag + 1e-12 <= rho_dgd + 2e-12
+    t = spectral.convergence_time
+    assert t(rho_hbm) <= t(rho_nag) <= t(rho_dgd) or k < 1.01
+
+
+def test_convergence_time_edges():
+    assert spectral.convergence_time(1.0) == float("inf")
+    assert spectral.convergence_time(0.0) == 0.0
+    assert spectral.convergence_time(np.exp(-1.0)) == pytest.approx(1.0)
