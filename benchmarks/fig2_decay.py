@@ -13,7 +13,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import apc, baselines, precond
+from repro import solvers
 from repro.data import linsys
 
 OUT = os.path.join(os.path.dirname(__file__), "out")
@@ -23,20 +23,13 @@ RUNS = {
     "orsirr1": 8000,
 }
 
-METHODS = ["DGD", "D-NAG", "D-HBM", "B-Cimmino", "Consensus", "APC",
-           "P-DHBM"]
+# registry names, ordered as in the paper's figure legend
+METHODS = ["dgd", "dnag", "dhbm", "cimmino", "consensus", "apc", "pdhbm"]
 
 
 def _solve_all(sys_, iters):
-    out = {}
-    out["DGD"] = baselines.dgd(sys_, iters=iters)
-    out["D-NAG"] = baselines.dnag(sys_, iters=iters)
-    out["D-HBM"] = baselines.dhbm(sys_, iters=iters)
-    out["B-Cimmino"] = baselines.cimmino(sys_, iters=iters)
-    out["Consensus"] = baselines.consensus(sys_, iters=iters)
-    out["APC"] = baselines.apc(sys_, iters=iters)
-    out["P-DHBM"] = precond.preconditioned_dhbm(sys_, iters=iters)
-    return out
+    return {solvers.get(name).paper_name: solvers.get(name).solve(
+        sys_, iters=iters) for name in METHODS}
 
 
 def _ascii_plot(hists, iters, width=70, height=16):

@@ -1,7 +1,8 @@
 """Per-iteration cost benchmark (paper §3.3 / §4 complexity claims).
 
 All methods have O(pn) per-iteration complexity per worker; this measures
-actual per-iteration wall time of the jitted updates on the same system so
+actual per-iteration wall time of every registered solver's jitted ``step``
+on the same system — through the unified prepare/init/step lifecycle — so
 the convergence-time comparisons (Table 2) are wall-clock fair.  Also times
 the Pallas kernel path (interpret mode — functional check, not TPU perf).
 """
@@ -10,9 +11,8 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import apc, baselines
+from repro import solvers
 from repro.data import linsys
 
 
@@ -32,19 +32,36 @@ def run(verbose: bool = True, n: int = 512, m: int = 4):
     sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=50.0, seed=0)
     rows = []
 
-    factors = apc.prepare(sys_)
-    state = apc.init_state(factors)
-    step = jax.jit(lambda s: apc.apc_step(factors, s, 1.3, 1.2))
-    rows.append(("periter/apc", _time(step, state), f"n={n};m={m}"))
+    for name in solvers.available():
+        s = solvers.get(name)
+        prm = s.resolve_params(sys_)
+        factors = s.prepare(sys_.A_blocks, prm)
+        state = s.init(factors, sys_.b_blocks, prm)
+        step = jax.jit(lambda st, _f=factors, _p=prm, _s=s: _s.step(
+            _f, sys_.b_blocks, st, _p))
+        rows.append((f"periter/{name}", _time(step, state), f"n={n};m={m}"))
 
-    stepk = jax.jit(lambda s: apc.apc_step(factors, s, 1.3, 1.2,
-                                           use_kernel=True))
+    # Pallas kernel path, interpret mode (functional check, not TPU perf)
+    s = solvers.get("apc")
+    prm = {"gamma": 1.3, "eta": 1.2}
+    factors = s.prepare(sys_.A_blocks, prm)
+    state = s.init(factors, sys_.b_blocks, prm)
+    stepk = jax.jit(lambda st: s.step(factors, sys_.b_blocks, st, prm,
+                                      use_kernel=True))
     rows.append(("periter/apc_pallas_interpret", _time(stepk, state, iters=5),
                  "interpret-mode"))
 
-    x0 = jnp.zeros(sys_.n)
-    g = jax.jit(lambda x: x - 1e-4 * baselines._full_grad(sys_, x))
-    rows.append(("periter/dgd", _time(g, x0), f"n={n};m={m}"))
+    # batched multi-RHS step amortization (the serving hot path)
+    import jax.numpy as jnp
+    import numpy as np
+    k = 8
+    Bb = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (k, sys_.m, sys_.p)))
+    states = jax.vmap(lambda b: s.init(factors, b, prm))(Bb)
+    vstep = jax.jit(jax.vmap(lambda b, st: s.step(factors, b, st, prm),
+                             in_axes=(0, 0)))
+    rows.append((f"periter/apc_batch{k}", _time(vstep, Bb, states),
+                 f"us per {k}-RHS step"))
 
     if verbose:
         for r in rows:

@@ -9,14 +9,15 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import fig2_decay, periter, roofline, table1_rates, \
-    table2_times
+from benchmarks import batch_rhs, fig2_decay, periter, roofline, \
+    table1_rates, table2_times
 
 SUITES = {
     "table1": table1_rates,
     "table2": table2_times,
     "fig2": fig2_decay,
     "periter": periter,
+    "batch_rhs": batch_rhs,
     "roofline": roofline,
 }
 

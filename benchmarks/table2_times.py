@@ -1,39 +1,45 @@
 """Table 2 reproduction: optimal convergence times T = 1/(-log rho).
 
 Prints our measured T per (problem × method) next to the paper's published
-values.  The Matrix Market problems are spectrum-matched proxies (offline
-container — data/linsys.py), so OUR absolute numbers differ from the
-paper's; the claims under test are (1) APC wins everywhere, (2) often by
-orders of magnitude, (3) D-HBM is the closest competitor, and (4) the gap
-explodes for nonzero-mean ensembles.  Those are asserted at the bottom.
+values, with rho coming from one ``spectral.rates_summary`` pass per
+problem keyed through the registry's ``paper_name``s (kept in sync with
+``Solver.theoretical_rate`` by the registry tests).  The Matrix Market
+problems are spectrum-matched
+proxies (offline container — data/linsys.py), so OUR absolute numbers
+differ from the paper's; the claims under test are (1) APC wins everywhere,
+(2) often by orders of magnitude, (3) D-HBM is the closest competitor, and
+(4) the gap explodes for nonzero-mean ensembles.  Those are asserted at the
+bottom.
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import numpy as np
 
+from repro import solvers
 from repro.core import spectral
 from repro.data import linsys
 
-# Paper Table 2 (for the side-by-side print).
+# Paper Table 2 (for the side-by-side print), keyed by registry name.
 PAPER = {
-    "qc324": {"DGD": 1.22e7, "D-NAG": 4.28e3, "D-HBM": 2.47e3,
-              "M-ADMM": 1.07e7, "B-Cimmino": 3.10e5, "APC": 3.93e2},
-    "orsirr1": {"DGD": 2.98e9, "D-NAG": 6.68e4, "D-HBM": 3.86e4,
-                "M-ADMM": 2.08e8, "B-Cimmino": 2.69e7, "APC": 3.67e3},
-    "ash608": {"DGD": 5.67, "D-NAG": 2.43, "D-HBM": 1.64,
-               "M-ADMM": 1.28e1, "B-Cimmino": 4.98, "APC": 1.53},
-    "std_gaussian": {"DGD": 1.76e7, "D-NAG": 5.14e3, "D-HBM": 2.97e3,
-                     "M-ADMM": 1.20e6, "B-Cimmino": 1.46e7, "APC": 2.70e3},
-    "nonzero_mean": {"DGD": 2.22e10, "D-NAG": 1.82e5, "D-HBM": 1.05e5,
-                     "M-ADMM": 8.62e8, "B-Cimmino": 9.29e8, "APC": 2.16e4},
-    "tall_gaussian": {"DGD": 1.58e1, "D-NAG": 4.37, "D-HBM": 2.78,
-                      "M-ADMM": 4.49e1, "B-Cimmino": 1.13e1, "APC": 2.34},
+    "qc324": {"dgd": 1.22e7, "dnag": 4.28e3, "dhbm": 2.47e3,
+              "madmm": 1.07e7, "cimmino": 3.10e5, "apc": 3.93e2},
+    "orsirr1": {"dgd": 2.98e9, "dnag": 6.68e4, "dhbm": 3.86e4,
+                "madmm": 2.08e8, "cimmino": 2.69e7, "apc": 3.67e3},
+    "ash608": {"dgd": 5.67, "dnag": 2.43, "dhbm": 1.64,
+               "madmm": 1.28e1, "cimmino": 4.98, "apc": 1.53},
+    "std_gaussian": {"dgd": 1.76e7, "dnag": 5.14e3, "dhbm": 2.97e3,
+                     "madmm": 1.20e6, "cimmino": 1.46e7, "apc": 2.70e3},
+    "nonzero_mean": {"dgd": 2.22e10, "dnag": 1.82e5, "dhbm": 1.05e5,
+                     "madmm": 8.62e8, "cimmino": 9.29e8, "apc": 2.16e4},
+    "tall_gaussian": {"dgd": 1.58e1, "dnag": 4.37, "dhbm": 2.78,
+                      "madmm": 4.49e1, "cimmino": 1.13e1, "apc": 2.34},
 }
 
-METHODS = ["DGD", "D-NAG", "D-HBM", "B-Cimmino", "APC"]
+# methods with a closed-form rho (M-ADMM has none; paper derives it
+# numerically, so it is print-only above)
+METHODS = ["dgd", "dnag", "dhbm", "cimmino", "apc"]
 
 
 def run(verbose: bool = True):
@@ -41,33 +47,37 @@ def run(verbose: bool = True):
     results = {}
     for prob in PAPER:
         sys_ = linsys.ALL_PROBLEMS[prob]()
-        s = spectral.rates_summary(sys_)
-        T = {m: spectral.convergence_time(s[m]) for m in METHODS}
+        # one spectral analysis per problem; rates_summary keys are the
+        # registry's paper_name display names
+        summary = spectral.rates_summary(sys_)
+        T = {m: spectral.convergence_time(
+            summary[solvers.get(m).paper_name]) for m in METHODS}
         results[prob] = T
         if verbose:
             print(f"\n{prob}  (N={sys_.N}, n={sys_.n}, m={sys_.m})")
             print(f"  {'method':10s} {'T ours':>12s} {'T paper':>12s}")
             for m in METHODS:
-                print(f"  {m:10s} {T[m]:12.3e} {PAPER[prob][m]:12.3e}")
+                print(f"  {solvers.get(m).paper_name:10s} "
+                      f"{T[m]:12.3e} {PAPER[prob][m]:12.3e}")
 
     # ---- the paper's comparative claims, checked on our instances --------
     claims = []
     for prob, T in results.items():
-        others = [T[m] for m in METHODS if m != "APC"]
-        claims.append(("APC fastest: " + prob, T["APC"] <= min(others) * 1.1))
+        others = [T[m] for m in METHODS if m != "apc"]
+        claims.append(("APC fastest: " + prob, T["apc"] <= min(others) * 1.1))
         # "the closest competitor is D-HBM" — meaningful only where methods
         # actually separate (on ~condition-1 problems like ASH608 everything
         # converges in a handful of iterations, paper Table 2 row 3).
-        if min(others) > 3.0 * T["APC"]:
-            closest = min((m for m in METHODS if m != "APC"),
+        if min(others) > 3.0 * T["apc"]:
+            closest = min((m for m in METHODS if m != "apc"),
                           key=lambda m: T[m])
             claims.append((f"D-HBM closest competitor: {prob}",
-                           closest == "D-HBM"))
-    g_std = results["std_gaussian"]["D-HBM"] / results["std_gaussian"]["APC"]
-    g_nzm = results["nonzero_mean"]["D-HBM"] / results["nonzero_mean"]["APC"]
+                           closest == "dhbm"))
+    g_std = results["std_gaussian"]["dhbm"] / results["std_gaussian"]["apc"]
+    g_nzm = results["nonzero_mean"]["dhbm"] / results["nonzero_mean"]["apc"]
     claims.append(("nonzero-mean gap larger than standard", g_nzm > g_std))
     claims.append(("DGD orders of magnitude slower on qc324",
-                   results["qc324"]["DGD"] / results["qc324"]["APC"] > 1e2))
+                   results["qc324"]["dgd"] / results["qc324"]["apc"] > 1e2))
     if verbose:
         print("\npaper-claim validation:")
         for name, ok in claims:

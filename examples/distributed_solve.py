@@ -15,7 +15,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 
-from repro.core import apc, distributed  # noqa: E402
+from repro import solvers  # noqa: E402
+from repro.core import distributed  # noqa: E402
 from repro.data import linsys  # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
 
@@ -30,7 +31,8 @@ def main():
                 np.linalg.norm(np.asarray(sys_.x_true)))
     print(f"distributed APC: residual {residual:.3e}  rel-error {err:.3e}")
 
-    ref = apc.solve(sys_, iters=400)
+    # single-host reference through the unified registry surface
+    ref = solvers.get("apc").solve(sys_, iters=400)
     d = float(np.linalg.norm(np.asarray(xbar) - np.asarray(ref.x)))
     print(f"max deviation from single-host reference: {d:.3e}")
     assert d < 1e-8

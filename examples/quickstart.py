@@ -1,5 +1,9 @@
 """Quickstart: solve a distributed linear system with APC and compare every
-method from the paper.
+method from the paper — all through the unified solver registry:
+
+    from repro import solvers
+    result = solvers.get("apc").solve(sys_, iters=3000)
+    print(solvers.available())   # all eight methods, one call path
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +13,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 
-from repro.core import apc, baselines, precond, spectral  # noqa: E402
+from repro import solvers  # noqa: E402
+from repro.core import spectral  # noqa: E402
 from repro.data import linsys  # noqa: E402
 
 
@@ -23,28 +28,28 @@ def main():
     print(f"system: N={sys_.N} n={sys_.n} workers={sys_.m} "
           f"(p={sys_.p} rows each)")
 
-    # Taskmaster-side analysis: optimal (gamma, eta) from Theorem 1.
+    # Taskmaster-side analysis: optimal rates per method (Theorem 1 / Sec 4).
     s = spectral.rates_summary(sys_)
     print(f"kappa(X) = {s['kappa_X']:.3e}   kappa(A^T A) = {s['kappa_AtA']:.3e}")
     print("optimal rates:", {k: round(v, 6) for k, v in s.items()
                              if k not in ("mu_min", "mu_max", "kappa_X",
                                           "kappa_AtA")})
 
+    # Every method from the paper through the identical registry call path.
     iters = 3000
-    res = apc.solve(sys_, iters=iters)
-    print(f"\nAPC after {iters} iters: rel-error {float(res.errors[-1]):.3e}")
+    for name in ["apc", "dhbm", "dnag", "cimmino", "dgd", "pdhbm"]:
+        solver = solvers.get(name)
+        res = solver.solve(sys_, iters=iters)
+        reached = (f"residual<{res.tol:.0e} @ iter {res.iters_to_tol}"
+                   if res.iters_to_tol else "tolerance not reached")
+        print(f"{solver.paper_name:10s} after {iters} iters: rel-error "
+              f"{float(res.errors[-1]):.3e}   ({reached})")
 
-    for name, fn in [("D-HBM", baselines.dhbm), ("D-NAG", baselines.dnag),
-                     ("B-Cimmino", baselines.cimmino),
-                     ("DGD", baselines.dgd)]:
-        h = fn(sys_, iters=iters)
-        print(f"{name:10s} after {iters} iters: rel-error "
-              f"{float(h.errors[-1]):.3e}")
-
-    # Section 6: distributed preconditioning gives D-HBM the APC rate.
-    h = precond.preconditioned_dhbm(sys_, iters=iters)
-    print(f"{'P-DHBM':10s} after {iters} iters: rel-error "
-          f"{float(h.errors[-1]):.3e}   (Sec. 6 preconditioning)")
+    # The serving hot path: one factorization, a batch of right-hand sides.
+    B = np.random.default_rng(1).standard_normal((4, sys_.N))
+    batch = solvers.get("apc").solve_many(sys_, B, iters=1000)
+    print(f"solve_many: 4 RHS, final residuals "
+          f"{[f'{float(r[-1]):.1e}' for r in batch.residuals]}")
 
 
 if __name__ == "__main__":

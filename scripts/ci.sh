@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast test suite + solver-registry smoke.
+#
+#     bash scripts/ci.sh
+#
+# The "not slow" selection skips the subprocess/system tests (run the full
+# suite with `PYTHONPATH=src python -m pytest -q` before a release).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== pytest (tier 1, -m 'not slow') =="
+python -m pytest -q -m "not slow"
+
+echo "== solver registry smoke =="
+python - <<'EOF'
+import time
+import jax
+jax.config.update("jax_enable_x64", True)
+from repro import solvers
+from repro.data import linsys
+
+t0 = time.time()
+sys_ = linsys.conditioned_gaussian(n=128, m=4, cond=20.0, seed=0)
+names = solvers.available()
+required = {"apc", "cimmino", "consensus", "dgd", "dhbm", "dnag", "madmm",
+            "pdhbm"}
+missing = required - set(names)
+assert not missing, f"missing solvers: {missing}"
+for n in names:
+    s = solvers.get(n)                       # registry lookup
+    r = s.solve(sys_, iters=30)              # lifecycle round-trip
+    assert r.name == n and r.x.shape == (sys_.n,), n
+print(f"registry smoke OK: {names} in {time.time()-t0:.1f}s")
+EOF
+echo "CI OK"

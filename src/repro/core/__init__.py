@@ -1,12 +1,26 @@
 """Core: the paper's contribution — APC and every comparison method.
 
-Public surface:
+The canonical solver surface now lives in ``repro.solvers``: a string-keyed
+registry of Solver objects sharing one lifecycle (``prepare -> init ->
+step``), one jitted ``solve()`` driver, batched multi-RHS ``solve_many``,
+warm-start resume, and one unified ``SolveResult``:
+
+    from repro import solvers
+    res = solvers.get("apc").solve(sys, iters=500)
+    solvers.available()
+    # ['apc', 'cimmino', 'consensus', 'dgd', 'dhbm', 'dnag', 'madmm', 'pdhbm']
+
+This package keeps the building blocks and the legacy entry points (now thin
+deprecated shims over the registry):
+
   partition.BlockSystem / partition.partition   row-block data model
-  apc.solve / apc.apc_step                      Algorithm 1
+  apc.apc_step / apc.prepare                    Algorithm 1 primitives
+  apc.solve                                     shim -> solvers.get("apc")
   spectral.*                                    Theorem 1 optimal params, rates
-  baselines.*                                   DGD/D-NAG/D-HBM/M-ADMM/Cimmino/
-                                                Consensus (Sec 4)
-  precond.preconditioned_dhbm                   Sec 6 distributed preconditioning
+  baselines.*                                   shims -> dgd/dnag/dhbm/madmm/
+                                                cimmino/consensus (Sec 4)
+  precond.precondition                          Sec 6 block preconditioner
+  precond.preconditioned_dhbm                   shim -> solvers.get("pdhbm")
   distributed.solve_on_mesh                     shard_map production runtime
   coding.solve_redundant                        straggler-tolerant APC
   consensus.run_consensus                       generic combinator

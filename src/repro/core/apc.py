@@ -6,6 +6,11 @@ in ``core/distributed.py`` (shard_map + psum); both share the factor
 preparation here.  The per-iteration worker math can optionally run through
 the Pallas TPU kernel (``repro.kernels.ops.block_projection``).
 
+This module keeps the low-level building blocks (factors, state, apc_step)
+used by ``repro.solvers``, ``core/distributed.py`` and ``core/coding.py``;
+the end-to-end ``solve`` entry point is a deprecated shim over
+``repro.solvers.get("apc")`` — the registry is the canonical surface.
+
 Worker update (Eq. 2a):   x_i <- x_i + gamma * P_i (xbar - x_i)
 Master update (Eq. 2b):   xbar <- (eta/m) sum_i x_i + (1-eta) xbar
 
@@ -16,9 +21,8 @@ Per-iteration complexity 2pn + O(p^2) per worker, matching the paper Sec 3.3.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -104,50 +108,24 @@ def apc_step(factors: APCFactors, state: APCState, gamma, eta,
     return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
 
 
-@dataclasses.dataclass(frozen=True)
-class SolveResult:
-    x: jnp.ndarray                 # final estimate xbar(T)
-    state: APCState                # full state (checkpointable / resumable)
-    residuals: jnp.ndarray         # (T,) ||A xbar - b|| / ||b||
-    errors: Optional[jnp.ndarray]  # (T,) ||xbar - x*|| / ||x*|| if x_true given
-
-
-def _history_scan(step_fn: Callable, state, sys: BlockSystem, iters: int):
-    """Run `iters` steps recording relative residual (and error) per step."""
-    A = sys.A_blocks
-    b = sys.b_blocks
-    b_norm = jnp.sqrt(jnp.sum(b * b))
-    xt = sys.x_true
-    xt_norm = None if xt is None else jnp.linalg.norm(xt)
-
-    def body(state, _):
-        state = step_fn(state)
-        xbar = state.xbar if hasattr(state, "xbar") else state.x
-        r = jnp.einsum("mpn,n->mp", A, xbar) - b
-        res = jnp.sqrt(jnp.sum(r * r)) / b_norm
-        err = (jnp.linalg.norm(xbar - xt) / xt_norm) if xt is not None else res
-        return state, (res, err)
-
-    state, (res, err) = jax.lax.scan(body, state, None, length=iters)
-    return state, res, err
-
-
 def solve(sys: BlockSystem, *, iters: int = 1000,
           gamma: Optional[float] = None, eta: Optional[float] = None,
-          use_kernel: bool = False, jitter: float = 0.0) -> SolveResult:
-    """End-to-end APC solve.  If (gamma, eta) are omitted, the taskmaster
-    computes the Theorem-1 optimal pair from the spectrum of X (analysis done
-    once, in float64 on host)."""
-    if gamma is None or eta is None:
-        X = spectral.x_matrix(sys)
-        mu_min, mu_max = spectral.mu_extremes(X)
-        params = spectral.apc_optimal(mu_min, mu_max)
-        gamma = params.gamma if gamma is None else gamma
-        eta = params.eta if eta is None else eta
+          use_kernel: bool = False, jitter: float = 0.0):
+    """Deprecated shim — delegates to ``repro.solvers.get("apc").solve``.
 
-    factors = prepare(sys, jitter=jitter)
-    state = init_state(factors)
-    step = lambda s: apc_step(factors, s, gamma, eta, use_kernel=use_kernel)
-    state, res, err = _history_scan(step, state, sys, iters)
-    return SolveResult(x=state.xbar, state=state, residuals=res,
-                       errors=err if sys.x_true is not None else None)
+    Kept so existing callers (and the paper-reproduction tests) continue to
+    work; new code should go through the registry, which also provides
+    ``solve_many`` (batched multi-RHS) and ``warm_state=`` resume.
+    """
+    from repro import solvers
+    return solvers.get("apc").solve(sys, iters=iters, gamma=gamma, eta=eta,
+                                    use_kernel=use_kernel, jitter=jitter)
+
+
+def __getattr__(name):
+    # Lazy alias: the unified result type now lives in repro.solvers.api
+    # (imported lazily to avoid a circular import at package-init time).
+    if name == "SolveResult":
+        from repro.solvers.api import SolveResult
+        return SolveResult
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,225 +1,79 @@
-"""All baseline distributed solvers from the paper (Section 4).
+"""Deprecated shims for the paper's baseline solvers (Section 4).
 
-Each solver mirrors the structure of ``core/apc.py``: a `prepare` step
-(one-time per-worker factorization where needed), a jitted per-iteration
-update in which the m workers are a vmapped leading axis, and a `solve`
-driver recording the relative-error history.  Per-iteration complexity is
-O(pn) per worker for every method, matching the paper's claim that iteration
-counts are wall-clock-comparable.
+The implementations moved to the unified ``repro.solvers`` registry — one
+lifecycle (prepare/init/step), one result type, ``solve_many`` batched-RHS
+and warm-start support for every method.  These wrappers keep the historical
+call signatures working:
 
-Methods:
   dgd        Distributed Gradient Descent                      (Sec 4.1)
   dnag       Distributed Nesterov Accelerated Gradient         (Sec 4.2)
   dhbm       Distributed Heavy-Ball Method                     (Sec 4.3)
   madmm      Modified consensus-ADMM (y_i == 0 speedup)        (Sec 4.4)
   cimmino    Block Cimmino row-projection method               (Sec 4.5)
   consensus  Plain projection consensus of Mou/Liu/Morse [11,14]
+  apc        APC via the same uniform record (benchmark drivers)
+
+``History`` is now an alias of ``repro.solvers.SolveResult`` (a strict
+superset of the old record: name, x, residuals, errors, params, plus state
+and iters_to_tol).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from .partition import BlockSystem
-from . import spectral
 
 
-@dataclasses.dataclass(frozen=True)
-class History:
-    """Common result record for every baseline solver."""
-    name: str
-    x: jnp.ndarray
-    residuals: jnp.ndarray            # (T,) ||Ax-b||/||b||
-    errors: Optional[jnp.ndarray]     # (T,) ||x-x*||/||x*||
-    params: dict
-
-
-def _run(name: str, sys: BlockSystem, step: Callable, state, extract,
-         iters: int, params: dict) -> History:
-    """Scan `step` for `iters` iterations recording residual/error of the
-    global estimate `extract(state)`."""
-    A, b = sys.A_blocks, sys.b_blocks
-    b_norm = jnp.sqrt(jnp.sum(b * b))
-    xt = sys.x_true
-    xt_norm = None if xt is None else jnp.linalg.norm(xt)
-
-    def body(state, _):
-        state = step(state)
-        x = extract(state)
-        r = jnp.einsum("mpn,n->mp", A, x) - b
-        res = jnp.sqrt(jnp.sum(r * r)) / b_norm
-        err = (jnp.linalg.norm(x - xt) / xt_norm) if xt is not None else res
-        return state, (res, err)
-
-    state, (res, err) = jax.lax.scan(jax.jit(body), state, None, length=iters)
-    return History(name=name, x=extract(state), residuals=res,
-                   errors=err if xt is not None else None, params=params)
-
-
-# ---------------------------------------------------------------------------
-# Gradient family.  Each worker computes its partial gradient
-# g_i = A_i^T (A_i x - b_i); the master sums them (psum in the distributed
-# runtime, vmap+sum here).
-# ---------------------------------------------------------------------------
-
-
-def _full_grad(sys: BlockSystem, x: jnp.ndarray) -> jnp.ndarray:
-    g = jnp.einsum("mpn,mp->n", sys.A_blocks,
-                   jnp.einsum("mpn,n->mp", sys.A_blocks, x) - sys.b_blocks)
-    return g
+def _solve(name: str, sys: BlockSystem, iters: int, **params):
+    from repro import solvers
+    return solvers.get(name).solve(sys, iters=iters, **params)
 
 
 def dgd(sys: BlockSystem, *, iters: int = 1000,
-        alpha: Optional[float] = None) -> History:
+        alpha: Optional[float] = None):
     """Distributed gradient descent, Eq. (8)."""
-    if alpha is None:
-        lmin, lmax = spectral.ata_extremes(sys)
-        alpha, _ = spectral.dgd_optimal(lmin, lmax)
-    x0 = jnp.zeros(sys.n, dtype=sys.A_blocks.dtype)
-
-    def step(x):
-        return x - alpha * _full_grad(sys, x)
-
-    return _run("DGD", sys, step, x0, lambda s: s, iters, {"alpha": alpha})
+    return _solve("dgd", sys, iters, alpha=alpha)
 
 
 def dnag(sys: BlockSystem, *, iters: int = 1000,
-         alpha: Optional[float] = None,
-         beta: Optional[float] = None) -> History:
+         alpha: Optional[float] = None, beta: Optional[float] = None):
     """Distributed Nesterov accelerated gradient, Eq. (10)."""
-    if alpha is None or beta is None:
-        lmin, lmax = spectral.ata_extremes(sys)
-        a, b_, _ = spectral.dnag_optimal(lmin, lmax)
-        alpha = a if alpha is None else alpha
-        beta = b_ if beta is None else beta
-    n = sys.n
-    dt = sys.A_blocks.dtype
-    # state: (x, y_prev)
-    state0 = (jnp.zeros(n, dt), jnp.zeros(n, dt))
-
-    def step(state):
-        x, y_prev = state
-        y = x - alpha * _full_grad(sys, x)
-        x_new = (1.0 + beta) * y - beta * y_prev
-        return (x_new, y)
-
-    return _run("D-NAG", sys, step, state0, lambda s: s[0], iters,
-                {"alpha": alpha, "beta": beta})
+    return _solve("dnag", sys, iters, alpha=alpha, beta=beta)
 
 
 def dhbm(sys: BlockSystem, *, iters: int = 1000,
-         alpha: Optional[float] = None,
-         beta: Optional[float] = None) -> History:
+         alpha: Optional[float] = None, beta: Optional[float] = None):
     """Distributed heavy-ball method, Eq. (12)."""
-    if alpha is None or beta is None:
-        lmin, lmax = spectral.ata_extremes(sys)
-        a, b_, _ = spectral.dhbm_optimal(lmin, lmax)
-        alpha = a if alpha is None else alpha
-        beta = b_ if beta is None else beta
-    n = sys.n
-    dt = sys.A_blocks.dtype
-    state0 = (jnp.zeros(n, dt), jnp.zeros(n, dt))   # (x, z)
-
-    def step(state):
-        x, z = state
-        z_new = beta * z + _full_grad(sys, x)
-        return (x - alpha * z_new, z_new)
-
-    return _run("D-HBM", sys, step, state0, lambda s: s[0], iters,
-                {"alpha": alpha, "beta": beta})
+    return _solve("dhbm", sys, iters, alpha=alpha, beta=beta)
 
 
-# ---------------------------------------------------------------------------
-# Modified ADMM (Sec 4.4).  Native consensus-ADMM with the y_i-update
-# disabled (y_i == 0), which the paper reports as a significant speedup for
-# consistent systems.  Each worker solves the p x p (not n x n!) system via
-# the matrix inversion lemma:
-#   (A^T A + xi I)^{-1} v = (v - A^T (G + xi I)^{-1} A v) / xi.
-# ---------------------------------------------------------------------------
-
-
-def madmm(sys: BlockSystem, *, iters: int = 1000, xi: float = 1.0) -> History:
-    A, b = sys.A_blocks, sys.b_blocks
-    m, p, n = A.shape
-    dt = A.dtype
-    eye = jnp.eye(p, dtype=dt)
-    # per-worker Cholesky of (G + xi I)
-    G = jnp.einsum("mpn,mqn->mpq", A, A)
-    chol = jnp.linalg.cholesky(G + xi * eye)
-
-    def inv_apply(Ai, Li, v):
-        """(A_i^T A_i + xi I)^{-1} v via matrix inversion lemma."""
-        u = Ai @ v
-        w = jax.scipy.linalg.cho_solve((Li, True), u)
-        return (v - Ai.T @ w) / xi
-
-    Atb = jnp.einsum("mpn,mp->mn", A, b)
-    xbar0 = jnp.zeros(n, dt)
-
-    def step(xbar):
-        def worker(Ai, Li, Atbi):
-            return inv_apply(Ai, Li, Atbi + xi * xbar)
-        xi_new = jax.vmap(worker)(A, chol, Atb)
-        return jnp.mean(xi_new, axis=0)
-
-    return _run("M-ADMM", sys, step, xbar0, lambda s: s, iters, {"xi": xi})
-
-
-# ---------------------------------------------------------------------------
-# Block Cimmino (Sec 4.5): r_i = A_i^+ (b_i - A_i xbar); xbar += nu sum r_i.
-# ---------------------------------------------------------------------------
+def madmm(sys: BlockSystem, *, iters: int = 1000, xi: float = 1.0):
+    """Modified consensus-ADMM (Sec 4.4)."""
+    return _solve("madmm", sys, iters, xi=xi)
 
 
 def cimmino(sys: BlockSystem, *, iters: int = 1000,
-            nu: Optional[float] = None) -> History:
-    A, b = sys.A_blocks, sys.b_blocks
-    m, p, n = A.shape
-    dt = A.dtype
-    G = jnp.einsum("mpn,mqn->mpq", A, A)
-    chol = jnp.linalg.cholesky(G)
-    if nu is None:
-        X = spectral.x_matrix(sys)
-        mu_min, mu_max = spectral.mu_extremes(X)
-        nu_m, _ = spectral.cimmino_optimal(mu_min, mu_max)
-        nu = nu_m / m
-    xbar0 = jnp.zeros(n, dt)
-
-    def step(xbar):
-        def worker(Ai, Li, bi):
-            return Ai.T @ jax.scipy.linalg.cho_solve((Li, True), bi - Ai @ xbar)
-        r = jax.vmap(worker)(A, chol, b)
-        return xbar + nu * jnp.sum(r, axis=0)
-
-    return _run("B-Cimmino", sys, step, xbar0, lambda s: s, iters, {"nu": nu})
+            nu: Optional[float] = None):
+    """Block Cimmino: r_i = A_i^+ (b_i - A_i xbar); xbar += nu sum r_i."""
+    return _solve("cimmino", sys, iters, nu=nu)
 
 
-# ---------------------------------------------------------------------------
-# Plain projection consensus [11,14]: APC with gamma = eta = 1 --
-# x_i <- x_i + P_i(xbar - x_i); xbar <- mean(x_i).   Rate 1 - mu_min(X).
-# ---------------------------------------------------------------------------
+def consensus(sys: BlockSystem, *, iters: int = 1000):
+    """Plain projection consensus [11,14]: APC with gamma = eta = 1."""
+    return _solve("consensus", sys, iters)
 
 
-def consensus(sys: BlockSystem, *, iters: int = 1000) -> History:
-    from . import apc as apc_mod
-    factors = apc_mod.prepare(sys)
-    state = apc_mod.init_state(factors)
-
-    def step(state):
-        return apc_mod.apc_step(factors, state, 1.0, 1.0)
-
-    return _run("Consensus", sys, step, state, lambda s: s.xbar, iters, {})
+def apc(sys: BlockSystem, *, iters: int = 1000, gamma=None, eta=None):
+    """APC through the same uniform record (for benchmark drivers)."""
+    return _solve("apc", sys, iters, gamma=gamma, eta=eta)
 
 
-def apc(sys: BlockSystem, *, iters: int = 1000, gamma=None, eta=None) -> History:
-    """APC wrapped in the common History record (for benchmark drivers)."""
-    from . import apc as apc_mod
-    res = apc_mod.solve(sys, iters=iters, gamma=gamma, eta=eta)
-    return History(name="APC", x=res.x, residuals=res.residuals,
-                   errors=res.errors, params={})
+def _full_grad(sys: BlockSystem, x: jnp.ndarray) -> jnp.ndarray:
+    """g = A^T (A x - b), summed over workers (kept for benchmarks/tests)."""
+    from repro.solvers.gradient import _grad
+    return _grad(sys.A_blocks, sys.b_blocks, x)
 
 
 ALL_METHODS = {
@@ -231,3 +85,11 @@ ALL_METHODS = {
     "Consensus": consensus,
     "APC": apc,
 }
+
+
+def __getattr__(name):
+    # Lazy alias (avoids a circular import at package-init time).
+    if name == "History":
+        from repro.solvers.api import SolveResult
+        return SolveResult
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

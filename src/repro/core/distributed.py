@@ -36,6 +36,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax.shard_map is the stable spelling on newer releases
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .partition import BlockSystem
 from . import spectral
 
@@ -83,7 +88,7 @@ class ShardedAPC:
         # Eq. 2b: master averaging == psum over every worker axis.
         m_total = x.shape[0]
         for ax in m_axes:
-            m_total = m_total * jax.lax.axis_size(ax)
+            m_total = m_total * self.mesh.shape[ax]
         s = jnp.sum(x_new, axis=0)
         s = jax.lax.psum(s, m_axes)
         xbar_new = (eta / m_total) * s + (1.0 - eta) * xbar
@@ -91,7 +96,7 @@ class ShardedAPC:
 
     def step_fn(self):
         sp = self.specs()
-        return jax.jit(jax.shard_map(
+        return jax.jit(_shard_map(
             self._step_body, mesh=self.mesh,
             in_specs=(sp["A"], sp["chol"], sp["x"], sp["xbar"]),
             out_specs=(sp["x"], sp["xbar"]),
@@ -111,7 +116,7 @@ class ShardedAPC:
 
     def residual_fn(self):
         sp = self.specs()
-        return jax.jit(jax.shard_map(
+        return jax.jit(_shard_map(
             self._residual_body, mesh=self.mesh,
             in_specs=(sp["A"], sp["b"], sp["xbar"]),
             out_specs=P(),
@@ -153,11 +158,11 @@ def prepare_on_mesh(solver: ShardedAPC, sys: BlockSystem):
         x0 = jnp.einsum("mpn,mp->mn", A, w)              # min-norm local sol
         m_total = A.shape[0]
         for ax in solver.worker_axes:
-            m_total = m_total * jax.lax.axis_size(ax)
+            m_total = m_total * solver.mesh.shape[ax]
         xbar0 = jax.lax.psum(jnp.sum(x0, axis=0), solver.worker_axes) / m_total
         return L, x0, xbar0
 
-    setup_fn = jax.jit(jax.shard_map(
+    setup_fn = jax.jit(_shard_map(
         setup, mesh=mesh, in_specs=(sp["A"], sp["b"]),
         out_specs=(sp["chol"], sp["x"], sp["xbar"])))
 

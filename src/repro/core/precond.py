@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .partition import BlockSystem
-from . import baselines, spectral
+from . import spectral  # noqa: F401  (re-exported for analysis callers)
 
 
 def _inv_sqrt_psd(G: np.ndarray) -> np.ndarray:
@@ -44,20 +44,11 @@ def precondition(sys: BlockSystem) -> BlockSystem:
 
 def preconditioned_dhbm(sys: BlockSystem, *, iters: int = 1000,
                         alpha: Optional[float] = None,
-                        beta: Optional[float] = None) -> baselines.History:
-    """D-HBM on the preconditioned system — matches the APC rate.
+                        beta: Optional[float] = None):
+    """Deprecated shim — delegates to ``repro.solvers.get("pdhbm")``.
 
-    Note C^T C = m X exactly, so the optimal (alpha, beta) can be derived
-    from the spectrum of X without re-running an eigensolve on C.
+    Note C^T C = m X exactly, so the optimal (alpha, beta) are derived from
+    the spectrum of X without re-running an eigensolve on C.
     """
-    pre = precondition(sys)
-    if alpha is None or beta is None:
-        X = spectral.x_matrix(sys)
-        mu_min, mu_max = spectral.mu_extremes(X)
-        m = sys.m
-        a, b_, _ = spectral.dhbm_optimal(m * mu_min, m * mu_max)
-        alpha = a if alpha is None else alpha
-        beta = b_ if beta is None else beta
-    hist = baselines.dhbm(pre, iters=iters, alpha=alpha, beta=beta)
-    return baselines.History(name="P-DHBM", x=hist.x, residuals=hist.residuals,
-                             errors=hist.errors, params=hist.params)
+    from repro import solvers
+    return solvers.get("pdhbm").solve(sys, iters=iters, alpha=alpha, beta=beta)

@@ -90,9 +90,14 @@ class Op:
     opcode: str
     rest: str            # operands + attributes (raw tail of the line)
 
-    def operands(self) -> List[str]:
+    def raw_operands(self) -> List[str]:
         # self.rest is the text AFTER "opcode(" — we start inside the parens.
-        depth, cur, out = 1, "", []
+        # Commas inside [dims] / {layout} annotations are not separators.
+        # Parsed once per Op (cost_computation queries operands repeatedly).
+        cached = self.__dict__.get("_raw_operands")
+        if cached is not None:
+            return cached
+        depth, brackets, cur, out = 1, 0, "", []
         for ch in self.rest:
             if ch == "(":
                 depth += 1
@@ -101,13 +106,41 @@ class Op:
                 if depth == 0:
                     out.append(cur)
                     break
-            if depth >= 1:
-                if ch == "," and depth == 1:
-                    out.append(cur)
-                    cur = ""
-                else:
-                    cur += ch
-        return [o.strip().lstrip("%") for o in out if o.strip()]
+            elif ch in "[{":
+                brackets += 1
+            elif ch in "]}":
+                brackets -= 1
+            if ch == "," and depth == 1 and brackets == 0:
+                out.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        result = [o.strip() for o in out if o.strip()]
+        self.__dict__["_raw_operands"] = result
+        return result
+
+    def operands(self) -> List[str]:
+        # Bare variable names.  Depending on the XLA version, operands print
+        # either as "%name" or as "f32[128,256]{1,0} %name" — keep the last
+        # token so both resolve against the symbol table.
+        cached = self.__dict__.get("_operand_names")
+        if cached is not None:
+            return cached
+        out = []
+        for o in self.raw_operands():
+            toks = o.split()
+            out.append((toks[-1] if toks else o).lstrip("%"))
+        self.__dict__["_operand_names"] = out
+        return out
+
+    def operand_shape(self, i: int, symtab: Dict[str, str]) -> str:
+        """Shape text of operand i: inline if printed, else via symtab."""
+        raw = self.raw_operands()
+        if i >= len(raw):
+            return ""
+        if _SHAPE_RE.search(raw[i]):
+            return raw[i]
+        return symtab.get(self.operands()[i], "")
 
 
 _ZERO_COST = {"parameter", "constant", "tuple", "get-tuple-element",
@@ -171,11 +204,10 @@ class Cost:
 
 def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
     out_elems = _shape_elems(op.shape)
-    lhs = op.operands()[0] if op.operands() else None
     k = 1
     m = _ATTR_RE["lhs_contract"].search(op.rest)
-    if m and lhs and lhs in symtab:
-        dims = _first_shape_dims(symtab[lhs])
+    if m:
+        dims = _first_shape_dims(op.operand_shape(0, symtab))
         for i in m.group(1).split(","):
             if i != "" and int(i) < len(dims):
                 k *= dims[int(i)]
@@ -224,7 +256,7 @@ def cost_computation(name: str, comps: Dict[str, List[Op]],
                         except ValueError:
                             pass
             for i, o in enumerate(operand_names):
-                full = _shape_bytes(symtab.get(o, ""))
+                full = _shape_bytes(op.operand_shape(i, symtab))
                 if called is not None and i in param_var:
                     pv = param_var[i]
                     consumers = [iop for iop in called
@@ -243,8 +275,8 @@ def cost_computation(name: str, comps: Dict[str, List[Op]],
             if mb and mb.group(1) in comps:
                 inner = cost_computation(mb.group(1), comps, cache)
                 # reducer applied ~once per input element
-                n_in = sum(_shape_elems(symtab.get(o, ""))
-                           for o in op.operands()) or 1
+                n_in = sum(_shape_elems(op.operand_shape(i, symtab))
+                           for i in range(len(op.raw_operands()))) or 1
                 total.flops += inner.flops * n_in
         if oc == "conditional":
             mb = _ATTR_RE["branches"].search(op.rest)
@@ -275,17 +307,16 @@ def cost_computation(name: str, comps: Dict[str, List[Op]],
         if oc in ("dynamic-slice", "slice", "gather"):
             total.bytes += 2.0 * _shape_bytes(op.shape)
         elif oc == "dynamic-update-slice":
-            ops_ = op.operands()
-            upd = _shape_bytes(symtab.get(ops_[1], "")) if len(ops_) > 1 else 0
+            upd = _shape_bytes(op.operand_shape(1, symtab))
             total.bytes += 2.0 * upd
         elif oc == "scatter":
-            ops_ = op.operands()
-            upd = sum(_shape_bytes(symtab.get(o, "")) for o in ops_[1:])
+            upd = sum(_shape_bytes(op.operand_shape(i, symtab))
+                      for i in range(1, len(op.raw_operands())))
             total.bytes += 2.0 * upd
         else:
             total.bytes += _shape_bytes(op.shape)
-            for o in op.operands():
-                total.bytes += _shape_bytes(symtab.get(o, ""))
+            for i in range(len(op.raw_operands())):
+                total.bytes += _shape_bytes(op.operand_shape(i, symtab))
     cache[name] = total
     return total
 

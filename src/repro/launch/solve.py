@@ -1,12 +1,13 @@
-"""Distributed APC solve driver (the paper's workload as a service).
+"""Distributed solve driver (the paper's workload as a service).
 
-Partitions a linear system across the mesh's data axis, runs shard_map APC
-with Theorem-1 optimal parameters, monitors the residual, and checkpoints
-the solver state for restart.
+Partitions a linear system across workers, runs ANY registered solver from
+``repro.solvers`` (APC by default) with its auto-tuned optimal parameters,
+monitors the residual, and checkpoints the solver state for restart; a
+checkpointed run resumes via ``--resume`` (warm start from the saved state).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.solve --problem std_gaussian \
-        --workers 4 --iters 500
+        --workers 4 --iters 500 --method apc
 """
 from __future__ import annotations
 
@@ -16,7 +17,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import apc, coding, distributed, spectral
+from repro import solvers
+from repro.core import coding, distributed, spectral
 from repro.checkpoint import ckpt
 from repro.data import linsys
 from repro.launch import mesh as mesh_lib
@@ -26,14 +28,18 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--problem", default="std_gaussian",
                     choices=sorted(linsys.ALL_PROBLEMS))
+    ap.add_argument("--method", default="apc", choices=solvers.available(),
+                    help="registered solver")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--iters", type=int, default=500)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--redundancy", type=int, default=1,
-                    help="r-redundant blocks for straggler tolerance")
+                    help="r-redundant blocks for straggler tolerance (APC)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="warm-start from the latest checkpoint in --ckpt-dir")
     ap.add_argument("--use-mesh", action="store_true",
-                    help="run the shard_map path on a device mesh")
+                    help="run the shard_map path on a device mesh (APC)")
     args = ap.parse_args(argv)
 
     jax.config.update("jax_enable_x64", True)
@@ -44,30 +50,56 @@ def main(argv=None):
     A, b = pad_to_blocks(np.asarray(A), np.asarray(b), args.workers)
     sys_ = partition(A, b, args.workers, x_true=sys_.x_true)
 
-    X = spectral.x_matrix(sys_)
-    mu_min, mu_max = spectral.mu_extremes(X)
-    prm = spectral.apc_optimal(mu_min, mu_max)
+    solver = solvers.get(args.method)
+    params, rho = solver.analyze(sys_)   # one spectral pass for both
     print(f"problem {args.problem}: N={sys_.N} n={sys_.n} m={sys_.m}  "
-          f"kappa(X)={mu_max/mu_min:.3e}")
-    print(f"optimal gamma={prm.gamma:.4f} eta={prm.eta:.4f} rho={prm.rho:.6f} "
-          f"(T={spectral.convergence_time(prm.rho):.1f} iters/decade)")
+          f"method={args.method}")
+    print(f"optimal params {({k: round(v, 4) for k, v in params.items()})}"
+          + (f"  rho={rho:.6f} "
+             f"(T={spectral.convergence_time(rho):.1f} iters/decade)"
+             if rho is not None else ""))
 
     t0 = time.time()
+    if args.redundancy > 1 or args.use_mesh:
+        if args.method != "apc":
+            ap.error("--redundancy/--use-mesh run the distributed APC path; "
+                     "combine them only with --method apc")
     if args.redundancy > 1:
         xbar, residuals = coding.solve_redundant(
             sys_, args.redundancy, iters=args.iters,
-            gamma=prm.gamma, eta=prm.eta)
+            gamma=params.get("gamma"), eta=params.get("eta"))
         final_res = residuals[-1]
     elif args.use_mesh:
         mesh = mesh_lib.solver_mesh(args.workers)
         xbar, final_res = distributed.solve_on_mesh(
-            mesh, sys_, iters=args.iters, gamma=prm.gamma, eta=prm.eta)
+            mesh, sys_, iters=args.iters,
+            gamma=params.get("gamma"), eta=params.get("eta"))
     else:
-        res = apc.solve(sys_, iters=args.iters, gamma=prm.gamma, eta=prm.eta)
+        # Factorize once; the same factors serve the restore template and
+        # the solve itself.
+        factors = solver.prepare(sys_.A_blocks, params)
+        warm = None
+        if args.resume:
+            if not args.ckpt_dir:
+                ap.error("--resume requires --ckpt-dir")
+            step = ckpt.latest_step(args.ckpt_dir)
+            if step is None:
+                print(f"WARNING: no checkpoint found in {args.ckpt_dir}; "
+                      "starting cold")
+            else:
+                probe = solver.init(factors, sys_.b_blocks, params)
+                warm = ckpt.restore(args.ckpt_dir, probe)
+                print(f"resuming from checkpointed state at iter {step}")
+        res = solver.solve(sys_, iters=args.iters, warm_state=warm,
+                           factors=factors, **params)
         xbar, final_res = res.x, float(res.residuals[-1])
+        if res.iters_to_tol is not None:
+            print(f"reached residual < {res.tol:.0e} after "
+                  f"{res.iters_to_tol} iters")
         if args.ckpt_dir:
-            ckpt.save(args.ckpt_dir, args.iters, res.state)
-            print(f"solver state checkpointed at iter {args.iters}")
+            total = int(res.state.t) if hasattr(res.state, "t") else args.iters
+            ckpt.save(args.ckpt_dir, total, res.state)
+            print(f"solver state checkpointed at iter {total}")
 
     err = (float(np.linalg.norm(np.asarray(xbar) - np.asarray(sys_.x_true)) /
                  np.linalg.norm(np.asarray(sys_.x_true)))

@@ -1,0 +1,27 @@
+"""repro.solvers — the unified distributed-solver API.
+
+One lifecycle (prepare/init/step), one registry, one result type for every
+solver in the paper's comparison:
+
+    from repro import solvers
+    res = solvers.get("apc").solve(sys, iters=500)      # -> SolveResult
+    solvers.available()
+    # ['apc', 'cimmino', 'consensus', 'dgd', 'dhbm', 'dnag', 'madmm', 'pdhbm']
+
+Batched serving (one factorization, many right-hand sides):
+
+    res = solvers.get("apc").solve_many(sys, B)          # B: (k, N)
+
+Warm starts / resume (feeds repro.checkpoint.ckpt):
+
+    r1 = solvers.get("apc").solve(sys, iters=100)
+    r2 = solvers.get("apc").solve(sys, iters=100, warm_state=r1.state)
+
+See ``api.Solver`` for the protocol and ``registry.register`` for adding a
+new method.
+"""
+from .api import Solver, SolveResult, iters_to_tolerance  # noqa: F401
+from .registry import available, get, register  # noqa: F401
+
+# Importing the implementation modules populates the registry.
+from . import admm, gradient, projection  # noqa: F401, E402

@@ -1,0 +1,248 @@
+"""The canonical solver API: one lifecycle, one result type.
+
+Every distributed solver in this repo — APC and all of the paper's
+comparison methods — implements the same three-phase lifecycle:
+
+    factors = solver.prepare(A_blocks, params)   # one-time, b-INDEPENDENT
+    state   = solver.init(factors, b_blocks, params)
+    state   = solver.step(factors, b_blocks, state, params)
+
+on top of which this module provides the shared drivers:
+
+    solver.solve(sys, iters=..., **params)       -> SolveResult
+    solver.solve_many(sys, B, iters=...)         -> SolveResult (batched)
+
+``prepare`` must not look at the right-hand side: everything expensive
+(Gram Cholesky factors, preconditioners) depends only on A, which is what
+lets ``solve_many`` amortize one factorization across a batch of RHS — the
+serving hot path — and lets a cached ``factors`` be reused across requests.
+
+Warm starts: any prior ``SolveResult.state`` (or a state restored via
+``repro.checkpoint.ckpt``) can be passed back as ``solve(...,
+warm_state=state)`` to resume iterating instead of starting from scratch.
+
+Projection-family solvers (``apc``, ``consensus``, ``cimmino``) additionally
+accept ``use_kernel=True`` to route the per-worker projection through the
+Pallas TPU kernel, and auto-tune their parameters from the Theorem-1
+spectral analysis when none are given.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import BlockSystem
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """Unified result record returned by every registered solver.
+
+    For ``solve_many`` the leading axis of ``x`` / ``residuals`` /
+    ``iters_to_tol`` is the RHS batch and ``errors`` is None.
+    """
+    name: str                      # registry key of the solver that ran
+    x: jnp.ndarray                 # final global estimate (n,) or (k, n)
+    state: Any                     # full solver state (checkpoint / warm-start)
+    residuals: jnp.ndarray         # (T,) or (k, T)  ||Ax-b|| / ||b|| per iter
+    errors: Optional[jnp.ndarray]  # (T,) ||x-x*||/||x*|| if sys.x_true given
+    params: Dict[str, float]       # hyper-parameters actually used
+    iters_to_tol: Any = None       # first iter with residual < tol (None/-1 =
+                                   # never reached); array (k,) for solve_many
+    tol: float = 1e-6              # tolerance iters_to_tol was computed at
+
+    def iters_to(self, tol: float):
+        """Iterations needed to push the residual below ``tol``."""
+        return iters_to_tolerance(self.residuals, tol)
+
+
+def iters_to_tolerance(residuals, tol: float):
+    """First 1-based iteration whose residual is < tol.
+
+    Returns None (scalar history) or -1 (batched history) where the
+    tolerance was never reached.
+    """
+    r = np.asarray(residuals)
+    hit = r < tol
+    if r.ndim == 1:
+        return int(np.argmax(hit)) + 1 if hit.any() else None
+    first = np.argmax(hit, axis=-1) + 1
+    return np.where(hit.any(axis=-1), first, -1)
+
+
+class Solver:
+    """Base class / protocol for every registered solver.
+
+    Subclasses override the four lifecycle hooks (and ``default_params``)
+    and inherit the shared ``solve`` / ``solve_many`` drivers.
+    """
+
+    name: str = "solver"
+    paper_name: str = ""           # display name used in the paper's tables
+    supports_kernel: bool = False  # Pallas block-projection path available
+    param_names: Tuple[str, ...] = ()
+
+    # ----- lifecycle hooks (override) -------------------------------------
+    def default_params(self, sys: BlockSystem) -> Dict[str, float]:
+        """Analysis-time auto-tuning (Theorem 1 / Sec 4 closed forms)."""
+        return {}
+
+    def prepare(self, A: jnp.ndarray, params: Dict[str, float]) -> Any:
+        """One-time factorization from the (m, p, n) row blocks only.
+
+        MUST be independent of b — solve_many reuses it across a RHS batch.
+        """
+        raise NotImplementedError
+
+    def init(self, factors: Any, b: jnp.ndarray,
+             params: Dict[str, float]) -> Any:
+        """Initial state for right-hand side blocks ``b`` of shape (m, p)."""
+        raise NotImplementedError
+
+    def step(self, factors: Any, b: jnp.ndarray, state: Any,
+             params: Dict[str, float], *, use_kernel: bool = False) -> Any:
+        """One synchronous iteration (all workers + master)."""
+        raise NotImplementedError
+
+    def extract(self, state: Any) -> jnp.ndarray:
+        """The global estimate x (n,) carried by ``state``."""
+        raise NotImplementedError
+
+    # ----- optional analysis hooks ----------------------------------------
+    def theoretical_rate(self, sys: BlockSystem) -> Optional[float]:
+        """Closed-form optimal spectral radius rho, if known (Table 1)."""
+        return None
+
+    def analyze(self, sys: BlockSystem):
+        """(auto-tuned params, theoretical rho) in ONE spectral pass.
+
+        Subclasses whose default_params and theoretical_rate share the same
+        eigendecomposition override this to avoid computing it twice.
+        """
+        return self.default_params(sys), self.theoretical_rate(sys)
+
+    def kernel_factors(self, factors: Any) -> Any:
+        """Augment factors with kernel-path precomputation (pinv factors).
+
+        Called once per solve when ``use_kernel=True`` so per-step code
+        never refactorizes iteration-invariant quantities.
+        """
+        return factors
+
+    # ----- shared drivers --------------------------------------------------
+    def resolve_params(self, sys: BlockSystem, **overrides) -> Dict[str, float]:
+        """Merge explicit overrides over the auto-tuned defaults.
+
+        The (possibly expensive) spectral analysis in ``default_params`` is
+        skipped when the caller pins every required parameter.
+        """
+        given = {k: v for k, v in overrides.items() if v is not None}
+        if self.param_names and all(k in given for k in self.param_names):
+            return given
+        return {**self.default_params(sys), **given}
+
+    def _check_kernel(self, use_kernel: bool):
+        if use_kernel and not self.supports_kernel:
+            raise ValueError(
+                f"solver {self.name!r} is not projection-based and has no "
+                f"Pallas kernel path (use_kernel=True unsupported)")
+
+    def solve(self, sys: BlockSystem, *, iters: int = 1000, tol: float = 1e-6,
+              use_kernel: bool = False, warm_state: Any = None,
+              factors: Any = None, **params) -> SolveResult:
+        """End-to-end solve: prepare -> init (or warm-start) -> scan steps.
+
+        Pass ``factors`` (from an earlier ``prepare`` with the same params)
+        to skip the one-time factorization — cached-factor serving and the
+        checkpoint-resume driver use this.
+        """
+        self._check_kernel(use_kernel)
+        prm = self.resolve_params(sys, **params)
+        if factors is None:
+            factors = self.prepare(sys.A_blocks, prm)
+        if use_kernel:
+            factors = self.kernel_factors(factors)
+        state = (self.init(factors, sys.b_blocks, prm)
+                 if warm_state is None else warm_state)
+        step = lambda f, b, s: self.step(f, b, s, prm, use_kernel=use_kernel)
+        state, res, err = _history_scan(step, self.extract, factors,
+                                        sys.b_blocks, state, sys.A_blocks,
+                                        sys.x_true, iters)
+        return SolveResult(
+            name=self.name, x=self.extract(state), state=state, residuals=res,
+            errors=err if sys.x_true is not None else None, params=prm,
+            iters_to_tol=iters_to_tolerance(res, tol), tol=tol)
+
+    def solve_many(self, sys: BlockSystem, B, *, iters: int = 1000,
+                   tol: float = 1e-6, use_kernel: bool = False,
+                   factors: Any = None, **params) -> SolveResult:
+        """Batched multi-RHS solve sharing ONE ``prepare`` factorization.
+
+        ``B`` is (k, N) — k right-hand sides for the same A.  Returns a
+        batched SolveResult: x (k, n), residuals (k, T), errors None.
+        ``factors`` behaves as in ``solve``.
+        """
+        self._check_kernel(use_kernel)
+        B = jnp.asarray(B)
+        if B.ndim == 1:
+            B = B[None, :]
+        if B.shape[-1] != sys.N:
+            raise ValueError(f"RHS batch has {B.shape[-1]} rows, need N={sys.N}")
+        k = B.shape[0]
+        Bb = B.reshape(k, sys.m, sys.p)
+        prm = self.resolve_params(sys, **params)
+        if factors is None:
+            factors = self.prepare(sys.A_blocks, prm)      # once, shared
+        if use_kernel:
+            factors = self.kernel_factors(factors)
+        states = jax.vmap(lambda b: self.init(factors, b, prm))(Bb)
+        step = lambda f, b, s: self.step(f, b, s, prm, use_kernel=use_kernel)
+        states, res = _history_scan_many(step, self.extract, factors, Bb,
+                                         states, sys.A_blocks, iters)
+        X = jax.vmap(self.extract)(states)
+        return SolveResult(
+            name=self.name, x=X, state=states, residuals=res, errors=None,
+            params=prm, iters_to_tol=iters_to_tolerance(res, tol), tol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted history drivers
+# ---------------------------------------------------------------------------
+
+
+def _history_scan(step, extract, factors, b, state, A, x_true, iters: int):
+    """Scan ``step`` for ``iters`` iterations recording residual/error."""
+    b_norm = jnp.sqrt(jnp.sum(b * b))
+    xt = x_true
+    xt_norm = None if xt is None else jnp.linalg.norm(xt)
+
+    def body(state, _):
+        state = step(factors, b, state)
+        x = extract(state)
+        r = jnp.einsum("mpn,n->mp", A, x) - b
+        res = jnp.sqrt(jnp.sum(r * r)) / b_norm
+        err = (jnp.linalg.norm(x - xt) / xt_norm) if xt is not None else res
+        return state, (res, err)
+
+    state, (res, err) = jax.lax.scan(body, state, None, length=iters)
+    return state, res, err
+
+
+def _history_scan_many(step, extract, factors, Bb, states, A, iters: int):
+    """Batched variant: states/Bb carry a leading (k,) RHS axis."""
+    b_norms = jnp.sqrt(jnp.sum(Bb * Bb, axis=(1, 2)))
+    vstep = jax.vmap(lambda b, s: step(factors, b, s), in_axes=(0, 0))
+
+    def body(states, _):
+        states = vstep(Bb, states)
+        X = jax.vmap(extract)(states)                      # (k, n)
+        r = jnp.einsum("mpn,kn->kmp", A, X) - Bb
+        res = jnp.sqrt(jnp.sum(r * r, axis=(1, 2))) / b_norms
+        return states, res
+
+    states, res = jax.lax.scan(body, states, None, length=iters)
+    return states, res.T                                   # (k, T)

@@ -1,0 +1,190 @@
+"""Gradient-family solvers: DGD, D-NAG, D-HBM, and preconditioned D-HBM.
+
+Each worker computes its partial gradient g_i = A_i^T (A_i x - b_i); the
+master sums them (psum in the distributed runtime, einsum here).  P-DHBM
+(paper Sec 6) premultiplies each local block by (A_i A_i^T)^{-1/2} so that
+heavy-ball attains the APC rate — the preconditioner S depends only on A,
+so it lives in ``prepare``; the transformed RHS S_i b_i is cached in the
+state at ``init`` time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spectral
+from repro.core.partition import BlockSystem
+from repro.core.precond import _inv_sqrt_psd
+
+from .api import Solver
+from .registry import register
+
+
+class GradFactors(NamedTuple):
+    A: jnp.ndarray      # (m, p, n) row blocks
+
+
+class PrecondFactors(NamedTuple):
+    C: jnp.ndarray      # (m, p, n) preconditioned blocks S_i A_i
+    S: jnp.ndarray      # (m, p, p) per-worker (A_i A_i^T)^{-1/2}
+
+
+def _grad(A, b, x):
+    """Full gradient sum_i A_i^T (A_i x - b_i) of (1/2)||Ax-b||^2."""
+    return jnp.einsum("mpn,mp->n", A, jnp.einsum("mpn,n->mp", A, x) - b)
+
+
+class _GradientSolver(Solver):
+    """Shared lifecycle scaffolding for the gradient family."""
+
+    def prepare(self, A, params):
+        return GradFactors(A=A)
+
+    def _zeros(self, factors):
+        A = factors.A if isinstance(factors, GradFactors) else factors.C
+        return jnp.zeros(A.shape[2], A.dtype)
+
+    def extract(self, state):
+        return state.x
+
+
+class DGDState(NamedTuple):
+    x: jnp.ndarray
+    t: jnp.ndarray
+
+
+@register("dgd")
+class DGDSolver(_GradientSolver):
+    """Distributed gradient descent, Eq. (8)."""
+
+    paper_name = "DGD"
+    param_names = ("alpha",)
+
+    def default_params(self, sys: BlockSystem):
+        return self.analyze(sys)[0]
+
+    def theoretical_rate(self, sys: BlockSystem):
+        return self.analyze(sys)[1]
+
+    def analyze(self, sys: BlockSystem):
+        alpha, rho = spectral.dgd_optimal(*spectral.ata_extremes(sys))
+        return {"alpha": alpha}, rho
+
+    def init(self, factors, b, params):
+        return DGDState(x=self._zeros(factors), t=jnp.zeros((), jnp.int32))
+
+    def step(self, factors, b, state, params, *, use_kernel=False):
+        return DGDState(
+            x=state.x - params["alpha"] * _grad(factors.A, b, state.x),
+            t=state.t + 1)
+
+
+class DNAGState(NamedTuple):
+    x: jnp.ndarray
+    y_prev: jnp.ndarray
+    t: jnp.ndarray
+
+
+@register("dnag")
+class DNAGSolver(_GradientSolver):
+    """Distributed Nesterov accelerated gradient, Eq. (10)."""
+
+    paper_name = "D-NAG"
+    param_names = ("alpha", "beta")
+
+    def default_params(self, sys: BlockSystem):
+        return self.analyze(sys)[0]
+
+    def theoretical_rate(self, sys: BlockSystem):
+        return self.analyze(sys)[1]
+
+    def analyze(self, sys: BlockSystem):
+        a, b_, rho = spectral.dnag_optimal(*spectral.ata_extremes(sys))
+        return {"alpha": a, "beta": b_}, rho
+
+    def init(self, factors, b, params):
+        z = self._zeros(factors)
+        return DNAGState(x=z, y_prev=z, t=jnp.zeros((), jnp.int32))
+
+    def step(self, factors, b, state, params, *, use_kernel=False):
+        alpha, beta = params["alpha"], params["beta"]
+        y = state.x - alpha * _grad(factors.A, b, state.x)
+        return DNAGState(x=(1.0 + beta) * y - beta * state.y_prev, y_prev=y,
+                         t=state.t + 1)
+
+
+class DHBMState(NamedTuple):
+    x: jnp.ndarray
+    z: jnp.ndarray
+    t: jnp.ndarray
+
+
+@register("dhbm")
+class DHBMSolver(_GradientSolver):
+    """Distributed heavy-ball method, Eq. (12)."""
+
+    paper_name = "D-HBM"
+    param_names = ("alpha", "beta")
+
+    def default_params(self, sys: BlockSystem):
+        return self.analyze(sys)[0]
+
+    def theoretical_rate(self, sys: BlockSystem):
+        return self.analyze(sys)[1]
+
+    def analyze(self, sys: BlockSystem):
+        a, b_, rho = spectral.dhbm_optimal(*spectral.ata_extremes(sys))
+        return {"alpha": a, "beta": b_}, rho
+
+    def init(self, factors, b, params):
+        z = self._zeros(factors)
+        return DHBMState(x=z, z=z, t=jnp.zeros((), jnp.int32))
+
+    def step(self, factors, b, state, params, *, use_kernel=False):
+        z_new = params["beta"] * state.z + _grad(factors.A, b, state.x)
+        return DHBMState(x=state.x - params["alpha"] * z_new, z=z_new,
+                         t=state.t + 1)
+
+
+class PDHBMState(NamedTuple):
+    x: jnp.ndarray
+    z: jnp.ndarray
+    t: jnp.ndarray
+    d: jnp.ndarray      # (m, p) cached preconditioned RHS S_i b_i
+
+
+@register("pdhbm")
+class PDHBMSolver(DHBMSolver):
+    """D-HBM on the Sec-6 preconditioned system — matches the APC rate.
+
+    C^T C = m X exactly, so the optimal (alpha, beta) come from the
+    spectrum of X scaled by m, with no eigensolve on C itself.
+    """
+
+    paper_name = "P-DHBM"
+    param_names = ("alpha", "beta")
+
+    def analyze(self, sys: BlockSystem):
+        X = spectral.x_matrix(sys)
+        mu_min, mu_max = spectral.mu_extremes(X)
+        a, b_, rho = spectral.dhbm_optimal(sys.m * mu_min, sys.m * mu_max)
+        return {"alpha": a, "beta": b_}, rho
+
+    def prepare(self, A, params):
+        A64 = np.asarray(A, dtype=np.float64)
+        S = np.stack([_inv_sqrt_psd(Ai @ Ai.T) for Ai in A64])
+        C = np.einsum("mpq,mqn->mpn", S, A64)
+        dt = A.dtype
+        return PrecondFactors(C=jnp.asarray(C, dt), S=jnp.asarray(S, dt))
+
+    def init(self, factors, b, params):
+        z = self._zeros(factors)
+        return PDHBMState(x=z, z=z, t=jnp.zeros((), jnp.int32),
+                          d=jnp.einsum("mpq,mq->mp", factors.S, b))
+
+    def step(self, factors, b, state, params, *, use_kernel=False):
+        z_new = params["beta"] * state.z + _grad(factors.C, state.d, state.x)
+        return PDHBMState(x=state.x - params["alpha"] * z_new, z=z_new,
+                          t=state.t + 1, d=state.d)

@@ -1,0 +1,179 @@
+"""Projection-family solvers: APC, plain projection consensus, block Cimmino.
+
+All three share the per-worker null-space projection machinery of
+``core/apc.py`` (Gram Cholesky factors, P_i v = v - A^T G^{-1} A v), support
+the Pallas kernel path uniformly (``use_kernel=True``), and auto-tune their
+parameters from the Theorem-1 spectral analysis of X when none are given.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spectral
+from repro.core import apc as apc_core
+from repro.core.apc import APCState, _gram_chol, _gram_solve
+from repro.core.partition import BlockSystem
+
+from .api import Solver
+from .registry import register
+
+
+class ProjFactors(NamedTuple):
+    """b-independent per-worker factors (leading axis = worker)."""
+    A: jnp.ndarray      # (m, p, n) row blocks
+    chol: jnp.ndarray   # (m, p, p) Cholesky of Gram A_i A_i^T
+    B: Optional[jnp.ndarray] = None  # (m, n, p) pinv factors A^T G^{-1}
+                                     # (kernel path only, see kernel_factors)
+
+
+def _proj_prepare(A: jnp.ndarray, jitter: float) -> ProjFactors:
+    chol = jax.vmap(lambda Ai: _gram_chol(Ai, jitter))(A)
+    return ProjFactors(A=A, chol=chol)
+
+
+def _with_pinv(factors: ProjFactors) -> ProjFactors:
+    """Precompute B_i = A_i^T G_i^{-1} once (iteration-invariant)."""
+    if factors.B is not None:
+        return factors
+    B = jax.vmap(lambda Ai, Li: jax.scipy.linalg.cho_solve((Li, True), Ai).T)(
+        factors.A, factors.chol)
+    return factors._replace(B=B)
+
+
+def _min_norm_solutions(factors: ProjFactors, b: jnp.ndarray) -> jnp.ndarray:
+    """x0_i = A_i^T (A_i A_i^T)^{-1} b_i — the min-norm local solutions."""
+    return jax.vmap(lambda Ai, Li, bi: Ai.T @ _gram_solve(Li, bi))(
+        factors.A, factors.chol, b)
+
+
+@register("apc")
+class APCSolver(Solver):
+    """Accelerated Projection-based Consensus (paper Algorithm 1)."""
+
+    paper_name = "APC"
+    supports_kernel = True
+    param_names = ("gamma", "eta")
+
+    def default_params(self, sys: BlockSystem):
+        return self.analyze(sys)[0]
+
+    def theoretical_rate(self, sys: BlockSystem):
+        return self.analyze(sys)[1]
+
+    def analyze(self, sys: BlockSystem):
+        X = spectral.x_matrix(sys)
+        prm = spectral.apc_optimal(*spectral.mu_extremes(X))
+        return {"gamma": prm.gamma, "eta": prm.eta}, prm.rho
+
+    def prepare(self, A, params):
+        return _proj_prepare(A, params.get("jitter", 0.0))
+
+    def kernel_factors(self, factors):
+        return _with_pinv(factors)
+
+    def init(self, factors, b, params):
+        x0 = _min_norm_solutions(factors, b)
+        return APCState(x=x0, xbar=jnp.mean(x0, axis=0),
+                        t=jnp.zeros((), jnp.int32))
+
+    def step(self, factors, b, state, params, *, use_kernel=False):
+        gamma, eta = params["gamma"], params["eta"]
+        if use_kernel and factors.B is not None:
+            from repro.kernels import ops as kops
+
+            def worker(Ai, Bi, xi):
+                return kops.block_projection(Ai, Bi, xi, state.xbar, gamma)
+
+            x_new = jax.vmap(worker)(factors.A, factors.B, state.x)
+            xbar_new = eta * jnp.mean(x_new, axis=0) + (1.0 - eta) * state.xbar
+            return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
+        legacy = apc_core.APCFactors(A=factors.A, chol=factors.chol,
+                                     x0=None, b=None)
+        return apc_core.apc_step(legacy, state, gamma, eta,
+                                 use_kernel=use_kernel)
+
+    def extract(self, state):
+        return state.xbar
+
+
+@register("consensus")
+class ConsensusSolver(APCSolver):
+    """Plain projection consensus [11,14] == APC with gamma = eta = 1."""
+
+    paper_name = "Consensus"
+
+    def default_params(self, sys: BlockSystem):
+        return {"gamma": 1.0, "eta": 1.0}
+
+    def theoretical_rate(self, sys: BlockSystem):
+        X = spectral.x_matrix(sys)
+        mu_min, _ = spectral.mu_extremes(X)
+        return spectral.consensus_rate(mu_min)
+
+    def analyze(self, sys: BlockSystem):
+        return self.default_params(sys), self.theoretical_rate(sys)
+
+
+class CimminoState(NamedTuple):
+    xbar: jnp.ndarray   # (n,) master estimate
+    t: jnp.ndarray      # ()   iteration counter
+
+
+@register("cimmino")
+class CimminoSolver(Solver):
+    """Block Cimmino row projections (Sec 4.5; Proposition 2: APC gamma=1)."""
+
+    paper_name = "B-Cimmino"
+    supports_kernel = True
+    param_names = ("nu",)
+
+    def default_params(self, sys: BlockSystem):
+        return self.analyze(sys)[0]
+
+    def theoretical_rate(self, sys: BlockSystem):
+        return self.analyze(sys)[1]
+
+    def analyze(self, sys: BlockSystem):
+        X = spectral.x_matrix(sys)
+        nu_m, rho = spectral.cimmino_optimal(*spectral.mu_extremes(X))
+        return {"nu": nu_m / sys.m}, rho
+
+    def prepare(self, A, params):
+        return _proj_prepare(A, params.get("jitter", 0.0))
+
+    def kernel_factors(self, factors):
+        return _with_pinv(factors)
+
+    def init(self, factors, b, params):
+        n = factors.A.shape[2]
+        return CimminoState(xbar=jnp.zeros(n, factors.A.dtype),
+                            t=jnp.zeros((), jnp.int32))
+
+    def step(self, factors, b, state, params, *, use_kernel=False):
+        nu = params["nu"]
+        if use_kernel and factors.B is not None:
+            from repro.kernels import ops as kops
+
+            def worker(Ai, Bi, bi):
+                # r_i = A^T G^{-1}(b - A xbar) rewritten onto the kernel's
+                # y = x + gamma (d - B A d) form with x := x0, gamma := 1,
+                # using B A x0 = x0:  y - xbar = B(b - A xbar) = r_i.
+                x0i = Bi @ bi
+                y = kops.block_projection(Ai, Bi, x0i, state.xbar, 1.0)
+                return y - state.xbar
+
+            r = jax.vmap(worker)(factors.A, factors.B, b)
+        else:
+            def worker(Ai, Li, bi):
+                u = jax.scipy.linalg.cho_solve((Li, True), bi - Ai @ state.xbar)
+                return Ai.T @ u
+
+            r = jax.vmap(worker)(factors.A, factors.chol, b)
+        return CimminoState(xbar=state.xbar + nu * jnp.sum(r, axis=0),
+                            t=state.t + 1)
+
+    def extract(self, state):
+        return state.xbar

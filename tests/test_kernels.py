@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional property-testing dep not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import block_projection as bp
 from repro.kernels import ops, ref

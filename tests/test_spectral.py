@@ -1,7 +1,10 @@
 """Property tests (hypothesis) for the spectral analysis layer."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional property-testing dep not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import spectral
 from repro.data import linsys
