@@ -1,0 +1,77 @@
+"""Mesh-backend scaling: per-iteration wall time vs worker shard count.
+
+Runs the shard_map execution backend (``repro.solvers.mesh``) for a fixed
+problem while the 'data' mesh axis grows through the divisors of m that fit
+the device count.  Timing uses ``mesh_backend.compile_solve``: the jitted
+scan is built ONCE per (solver, shard count) and repeat executions of that
+same callable are timed, so trace/compile/placement costs drop out and the
+reported number is pure per-iteration execution time.  On one CPU device
+this only exercises the d=1 point; force a fleet with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python benchmarks/mesh_scaling.py
+
+(the __main__ entry sets that default itself).  On real hardware the psum
+cost per iteration is m*p floats (worker axis) + n floats (model axis) vs
+2pn matvec FLOPs — arithmetic intensity grows with n/m, so the curve should
+flatten toward ideal scaling as n grows.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # force a multi-device host before jax wakes up
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
+
+import time
+
+import jax
+
+from repro import solvers
+from repro.data import linsys
+from repro.launch import mesh as mesh_lib
+from repro.solvers import mesh as mesh_backend
+
+METHODS = ("apc", "dgd", "madmm")
+ITERS = 100
+REPS = 5
+
+
+def _shard_counts(m: int):
+    n_dev = len(jax.devices())
+    return [d for d in range(1, m + 1) if m % d == 0 and d <= n_dev]
+
+
+def run(verbose: bool = True, n: int = 256, m: int = 4):
+    jax.config.update("jax_enable_x64", True)
+    sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=30.0, seed=0)
+    n_dev = len(jax.devices())
+    rows = []
+    for name in METHODS:
+        s = solvers.get(name)
+        prm = s.resolve_params(sys_)
+        for d in _shard_counts(m):
+            mesh = mesh_lib.solver_mesh(d, 1)
+            cs = mesh_backend.compile_solve(s, sys_, mesh=mesh, iters=ITERS,
+                                            **prm)
+            jax.block_until_ready(cs.run(*cs.args))   # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(REPS):
+                out = cs.run(*cs.args)
+            jax.block_until_ready(out)
+            per_iter = (time.perf_counter() - t0) / (REPS * ITERS) * 1e6
+            rows.append((f"mesh_scaling/{name}/shards{d}", per_iter,
+                         f"n={n};m={m};devices={n_dev}"))
+            if verbose:
+                print(f"{name:8s} data={d}  {per_iter:9.1f} us/iter "
+                      f"({n_dev} devices)")
+    return rows
+
+
+def csv_rows():
+    return run(verbose=False)
+
+
+if __name__ == "__main__":
+    run()

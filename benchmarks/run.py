@@ -9,8 +9,8 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import batch_rhs, fig2_decay, periter, roofline, \
-    table1_rates, table2_times
+from benchmarks import batch_rhs, fig2_decay, mesh_scaling, periter, \
+    roofline, table1_rates, table2_times
 
 SUITES = {
     "table1": table1_rates,
@@ -18,6 +18,7 @@ SUITES = {
     "fig2": fig2_decay,
     "periter": periter,
     "batch_rhs": batch_rhs,
+    "mesh_scaling": mesh_scaling,
     "roofline": roofline,
 }
 

@@ -41,7 +41,7 @@ def main():
         solver = solvers.get(name)
         res = solver.solve(sys_, iters=iters)
         reached = (f"residual<{res.tol:.0e} @ iter {res.iters_to_tol}"
-                   if res.iters_to_tol else "tolerance not reached")
+                   if res.iters_to_tol != -1 else "tolerance not reached")
         print(f"{solver.paper_name:10s} after {iters} iters: rel-error "
               f"{float(res.errors[-1]):.3e}   ({reached})")
 

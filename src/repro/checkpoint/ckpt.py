@@ -6,8 +6,10 @@ Design (fault-tolerance contract, runtime/fault.py relies on it):
   * Versioned: every save is a new ``step_<n>`` directory; ``latest()``
     resolves the newest complete one (a COMMIT marker file seals it).
   * Self-describing: the pytree structure is stored alongside a manifest
-    (leaf shapes/dtypes), so restore can validate against the running
-    program and fail loudly on config drift.
+    (leaf shapes/dtypes), so restore validates BOTH against the running
+    program and fails loudly on config drift — including dtype drift from
+    a flipped ``jax_enable_x64`` (``allow_cast=True`` is the explicit
+    escape hatch).
   * Data pipeline: only the step counter needs saving — data/synthetic.py
     batches are a pure function of step.
 
@@ -86,8 +88,17 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, like: Any, *, step: Optional[int] = None) -> Any:
-    """Restore into the structure of `like` (validates shapes/dtypes)."""
+def restore(directory: str, like: Any, *, step: Optional[int] = None,
+            allow_cast: bool = False) -> Any:
+    """Restore into the structure of `like`, failing loudly on drift.
+
+    Both the leaf SHAPES and the manifest DTYPES must match the running
+    program — a dtype mismatch (the classic case: a run checkpointed under
+    ``jax_enable_x64`` restored without it, or vice versa) raises instead
+    of silently casting, because a silent f64 -> f32 cast makes a resumed
+    solve diverge from the uninterrupted one.  Pass ``allow_cast=True`` to
+    explicitly accept the cast to ``like``'s dtypes.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -106,5 +117,13 @@ def restore(directory: str, like: Any, *, step: Optional[int] = None) -> Any:
         want = tuple(np.shape(ref))
         if tuple(arr.shape) != want:
             raise ValueError(f"leaf {i}: shape {arr.shape} != {want}")
-        out.append(jnp.asarray(arr, dtype=jnp.asarray(ref).dtype))
+        want_dtype = jnp.asarray(ref).dtype
+        saved_dtype = manifest["leaves"][i].get("dtype")
+        if (saved_dtype is not None and saved_dtype != str(want_dtype)
+                and not allow_cast):
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {saved_dtype} != running "
+                f"{want_dtype} — dtype drift (was the x64 flag changed "
+                f"between save and resume?); pass allow_cast=True to cast")
+        out.append(jnp.asarray(arr, dtype=want_dtype))
     return jax.tree.unflatten(treedef, out)

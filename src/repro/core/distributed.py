@@ -1,35 +1,26 @@
-"""Mesh-distributed APC via shard_map (the production runtime).
+"""Mesh-distributed APC — now a thin shim over ``repro.solvers.mesh``.
 
-Mapping of the paper's roles onto a TPU mesh (see DESIGN.md §2):
+The general mesh execution backend lives in ``repro.solvers.mesh``: ANY
+registered solver runs sharded via ``solvers.get(name).solve(sys,
+backend="mesh", mesh=...)``, with the worker blocks on the ``data`` axis
+(the Eq. 2b master update is a psum — the taskmaster has no physical node)
+and the n dimension optionally cut along ``model``.  See that module for
+the data layout and collective structure.
 
-  * worker i            -> a slice of the ``data`` mesh axis (m workers).
-  * taskmaster          -> no physical node; the master update (Eq. 2b) is a
-                           ``psum`` over the ``data`` axis.
-  * each worker's block -> optionally column-sharded along ``model`` so that
-                           A_i (p x n) with n ~ 10^6+ fits per-device memory.
+This module keeps the APC-specialized surface the fault-tolerance runtime
+and older callers use — ``ShardedAPC`` (a compiled per-iteration step +
+residual monitor over raw (A, chol, x, xbar) arrays, e.g. for the elastic
+remesh cycle in ``runtime/fault.py``) and the ``solve_on_mesh`` one-call
+driver — all delegating to the backend's APC hooks so the iteration math
+exists in exactly one place (``solvers/projection.py``).
 
-Data layout (global shapes; P = PartitionSpec):
-  A_blocks (m, p, n)  sharded P("data", None, "model")
-  b_blocks (m, p)     sharded P("data", None)
-  chol     (m, p, p)  sharded P("data", None, None)   (replicated over model)
-  x        (m, n)     sharded P("data", "model")
-  xbar     (n,)       sharded P("model")              (replicated over data)
-
-Per iteration, the collectives are exactly:
-  1. psum over ``model`` of the p-vector A_i d        (worker-local GEMV glue)
-  2. psum over ``data`` of the n-shard of x_i          (master averaging)
-Both are latency-friendly: (1) moves m*p floats, (2) moves n floats, per
-iteration, versus the 2pn FLOPs of the matvecs — arithmetic intensity grows
-linearly in n/m.
-
-Multi-pod: the ``pod`` axis (when present) is folded into worker parallelism —
-blocks shard over ("pod","data") jointly and the Eq. 2b psum runs over both
-axes.  This is DP-style scaling of m with no code change (see launch/mesh.py).
+Imports of ``repro.solvers`` are deferred into the methods: ``repro.core``
+loads this module eagerly while the solver registry is itself importing
+``repro.core`` building blocks.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -42,7 +33,6 @@ except AttributeError:  # pragma: no cover - depends on installed jax
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from .partition import BlockSystem
-from . import spectral
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +43,19 @@ class ShardedAPC:
     model_axis: Optional[str]      # axis the n dimension shards over
     gamma: float
     eta: float
+
+    # ----- backend plumbing ----------------------------------------------
+    def _ctx(self):
+        from repro.solvers.mesh import MeshContext
+        return MeshContext(mesh=self.mesh, worker_axes=self.worker_axes,
+                           model_axis=self.model_axis)
+
+    def _solver(self):
+        from repro import solvers
+        return solvers.get("apc")
+
+    def _params(self):
+        return {"gamma": self.gamma, "eta": self.eta}
 
     # ----- shardings ------------------------------------------------------
     def specs(self):
@@ -66,58 +69,40 @@ class ShardedAPC:
             "xbar": P(ma),
         }
 
-    # ----- one APC iteration, shard_map body ------------------------------
-    def _step_body(self, A, chol, x, xbar):
-        """Executes on one device: local shard of every array.
-
-        A    (m_loc, p, n_loc)   chol (m_loc, p, p)
-        x    (m_loc, n_loc)      xbar (n_loc,)
-        """
-        gamma, eta = self.gamma, self.eta
-        m_axes = self.worker_axes
-
-        d = xbar[None, :] - x                             # (m_loc, n_loc)
-        u = jnp.einsum("mpn,mn->mp", A, d)                # partial A_i d
-        if self.model_axis is not None:
-            u = jax.lax.psum(u, self.model_axis)          # full A_i d
-        w = jax.vmap(lambda L, ui: jax.scipy.linalg.cho_solve((L, True), ui))(
-            chol, u)                                      # G^{-1} A_i d
-        proj = d - jnp.einsum("mpn,mp->mn", A, w)         # P_i d (n_loc shard)
-        x_new = x + gamma * proj                          # Eq. 2a
-
-        # Eq. 2b: master averaging == psum over every worker axis.
-        m_total = x.shape[0]
-        for ax in m_axes:
-            m_total = m_total * self.mesh.shape[ax]
-        s = jnp.sum(x_new, axis=0)
-        s = jax.lax.psum(s, m_axes)
-        xbar_new = (eta / m_total) * s + (1.0 - eta) * xbar
-        return x_new, xbar_new
-
+    # ----- one APC iteration over raw arrays ------------------------------
     def step_fn(self):
+        """jit(shard_map) of (A, chol, x, xbar) -> (x, xbar), one Eq. 2a/2b
+        iteration — the raw-array surface the elastic runtime drives."""
+        from repro.core.apc import APCState
+        from repro.solvers.projection import ProjFactors
+        ctx, solver, prm = self._ctx(), self._solver(), self._params()
+
+        def body(A, chol, x, xbar):
+            st = solver.mesh_step(
+                ProjFactors(A=A, chol=chol), None,
+                APCState(x=x, xbar=xbar, t=jnp.zeros((), jnp.int32)),
+                prm, ctx)
+            return st.x, st.xbar
+
         sp = self.specs()
         return jax.jit(_shard_map(
-            self._step_body, mesh=self.mesh,
+            body, mesh=self.mesh,
             in_specs=(sp["A"], sp["chol"], sp["x"], sp["xbar"]),
             out_specs=(sp["x"], sp["xbar"]),
         ))
 
     # ----- residual (for convergence monitoring / fault recovery) ---------
-    def _residual_body(self, A, b, xbar):
-        r = jnp.einsum("mpn,n->mp", A, xbar)
-        if self.model_axis is not None:
-            r = jax.lax.psum(r, self.model_axis)
-        r = r - b
-        ss = jnp.sum(r * r)
-        ss = jax.lax.psum(ss, self.worker_axes)
-        bs = jnp.sum(b * b)
-        bs = jax.lax.psum(bs, self.worker_axes)
-        return jnp.sqrt(ss) / jnp.sqrt(bs)
-
     def residual_fn(self):
+        from repro.solvers.mesh import residual_shard
+        ctx = self._ctx()
+
+        def body(A, b, xbar):
+            b_norm = jnp.sqrt(ctx.psum_workers(jnp.sum(b * b)))
+            return residual_shard(A, b, xbar, b_norm, ctx)
+
         sp = self.specs()
         return jax.jit(_shard_map(
-            self._residual_body, mesh=self.mesh,
+            body, mesh=self.mesh,
             in_specs=(sp["A"], sp["b"], sp["xbar"]),
             out_specs=P(),
         ))
@@ -144,23 +129,14 @@ def prepare_on_mesh(solver: ShardedAPC, sys: BlockSystem):
     The Gram/Cholesky/x0 computation runs as a shard_mapped setup step so no
     single host ever materializes the full A.
     """
+    ctx, apc, prm = solver._ctx(), solver._solver(), solver._params()
     sp = solver.specs()
     mesh = solver.mesh
 
     def setup(A, b):
-        # A (m_loc, p, n_loc), b (m_loc, p)
-        G = jnp.einsum("mpn,mqn->mpq", A, A)
-        if solver.model_axis is not None:
-            G = jax.lax.psum(G, solver.model_axis)
-        L = jnp.linalg.cholesky(G)
-        w = jax.vmap(lambda Li, bi: jax.scipy.linalg.cho_solve((Li, True), bi))(
-            L, b)
-        x0 = jnp.einsum("mpn,mp->mn", A, w)              # min-norm local sol
-        m_total = A.shape[0]
-        for ax in solver.worker_axes:
-            m_total = m_total * solver.mesh.shape[ax]
-        xbar0 = jax.lax.psum(jnp.sum(x0, axis=0), solver.worker_axes) / m_total
-        return L, x0, xbar0
+        factors = apc.mesh_prepare(A, prm, ctx)
+        st = apc.mesh_init(factors, b, prm, ctx)
+        return factors.chol, st.x, st.xbar
 
     setup_fn = jax.jit(_shard_map(
         setup, mesh=mesh, in_specs=(sp["A"], sp["b"]),
@@ -176,27 +152,14 @@ def solve_on_mesh(mesh: Mesh, sys: BlockSystem, *, iters: int = 500,
                   gamma: Optional[float] = None, eta: Optional[float] = None,
                   worker_axes: Sequence[str] = ("data",),
                   model_axis: Optional[str] = "model"):
-    """End-to-end distributed solve (used by launch/solve.py and tests)."""
-    if gamma is None or eta is None:
-        X = spectral.x_matrix(sys)
-        mu_min, mu_max = spectral.mu_extremes(X)
-        prm = spectral.apc_optimal(mu_min, mu_max)
-        gamma = prm.gamma if gamma is None else gamma
-        eta = prm.eta if eta is None else eta
-    solver = make_sharded_apc(mesh, worker_axes=worker_axes,
-                              model_axis=model_axis, gamma=gamma, eta=eta)
-    A, b, chol, x, xbar = prepare_on_mesh(solver, sys)
-    step = solver.step_fn()
-    res_fn = solver.residual_fn()
+    """End-to-end distributed APC (legacy surface; returns (xbar, residual)).
 
-    @jax.jit
-    def run(A, chol, x, xbar):
-        def body(carry, _):
-            x, xbar = carry
-            x, xbar = step(A, chol, x, xbar)
-            return (x, xbar), None
-        (x, xbar), _ = jax.lax.scan(body, (x, xbar), None, length=iters)
-        return x, xbar
-
-    x, xbar = run(A, chol, x, xbar)
-    return xbar, float(res_fn(A, b, xbar))
+    New code should call the backend directly for the full ``SolveResult``:
+    ``solvers.get(name).solve(sys, backend="mesh", mesh=mesh)``.
+    """
+    from repro import solvers
+    from repro.solvers.mesh import solve_mesh
+    res = solve_mesh(solvers.get("apc"), sys, mesh=mesh, iters=iters,
+                     worker_axes=worker_axes, model_axis=model_axis,
+                     gamma=gamma, eta=eta)
+    return res.x, float(res.residuals[-1])

@@ -4,7 +4,11 @@ block_projection.py — pl.pallas_call kernels (gather + scatter passes of
   the APC worker update) with explicit BlockSpec VMEM tiling.
 ops.py  — jit'd public wrappers (padding, Gram solve, worker vmap).
 ref.py  — pure-jnp oracles; every kernel is allclose-validated against
-  them across shapes and dtypes in tests/test_kernels.py (interpret mode
-  on CPU; flip block_projection._INTERPRET on real TPUs).
+  them across shapes and dtypes in tests/test_kernels.py.
+
+Interpret vs compiled is decided at trace time from the runtime backend
+(compiled on real TPU, interpret everywhere else); override with the
+``REPRO_PALLAS_INTERPRET=0/1`` env var or an explicit ``interpret=`` kwarg
+(see ``block_projection.default_interpret``).
 """
 from . import ops, ref  # noqa: F401

@@ -25,6 +25,8 @@ workers) and validated in interpret mode against ``ref.py``.
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +34,23 @@ from jax.experimental import pallas as pl
 
 
 DEFAULT_BN = 512          # lane-axis tile; multiple of 128
-_INTERPRET = True         # CPU container: flip to False on real TPU
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default, derived from the runtime.
+
+    On a real TPU the kernels compile (interpret=False); everywhere else
+    (CPU containers, GPU hosts) they run in interpret mode.  The env var
+    ``REPRO_PALLAS_INTERPRET=0/1`` overrides both — e.g. force-compile on
+    a TPU-less CI to catch lowering regressions, or force interpret on TPU
+    while bisecting a numerics issue.  Resolved when a kernel first traces
+    for a given shape; it is not a per-call toggle (pass ``interpret=``
+    explicitly for that).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
 
 
 def _gather_kernel(x_ref, xbar_ref, a_ref, u_ref, *, acc_dtype):
@@ -67,8 +85,10 @@ def _scatter_kernel(x_ref, xbar_ref, b_ref, u_ref, g_ref, y_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def apc_gather(A, x, xbar, *, bn: int = DEFAULT_BN,
-               interpret: bool = _INTERPRET):
+               interpret: Optional[bool] = None):
     """u = A (x̄ − x).   A (p, n); x, x̄ (1, n) lane-layout.  n % bn == 0."""
+    if interpret is None:
+        interpret = default_interpret()
     p, n = A.shape
     assert n % bn == 0, (n, bn)
     acc = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
@@ -89,8 +109,10 @@ def apc_gather(A, x, xbar, *, bn: int = DEFAULT_BN,
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def apc_scatter(B, x, xbar, u, gamma, *, bn: int = DEFAULT_BN,
-                interpret: bool = _INTERPRET):
+                interpret: Optional[bool] = None):
     """y = x + γ(d − B u).   B (n, p); x, x̄ (1, n); u (1, p); γ (1, 1)."""
+    if interpret is None:
+        interpret = default_interpret()
     n, p = B.shape
     assert n % bn == 0, (n, bn)
     acc = jnp.float64 if B.dtype == jnp.float64 else jnp.float32

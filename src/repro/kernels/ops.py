@@ -10,6 +10,7 @@ bookkeeping, and vmapping over the worker axis.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,13 +38,20 @@ def _pick_bn(n: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def block_projection(A, B, x, xbar, gamma, *, interpret: bool = bp._INTERPRET):
+def block_projection(A, B, x, xbar, gamma, *,
+                     interpret: Optional[bool] = None):
     """y = x + gamma * (d - B (A d)), d = xbar - x, via the two Pallas passes.
 
     A (p, n), B (n, p), x/xbar (n,). Pads p to a multiple of 8 and n to a
     multiple of 128 (zero rows/cols are exact: zero-padded A rows produce
     zero u entries; zero-padded B columns ignore them).
+
+    ``interpret=None`` defers to ``block_projection.default_interpret()``:
+    compiled on a real TPU, interpret mode elsewhere, env-overridable via
+    ``REPRO_PALLAS_INTERPRET``.
     """
+    if interpret is None:
+        interpret = bp.default_interpret()
     p, n = A.shape
     A2, _ = _pad_axis(A, 0, 8)
     A2, _ = _pad_axis(A2, 1, 128)
@@ -61,7 +69,7 @@ def block_projection(A, B, x, xbar, gamma, *, interpret: bool = bp._INTERPRET):
 
 
 def block_projection_batched(A, B, x, xbar, gamma, *,
-                             interpret: bool = bp._INTERPRET):
+                             interpret: Optional[bool] = None):
     """vmap over the leading worker axis: A (m,p,n), B (m,n,p), x (m,n)."""
     fn = functools.partial(block_projection, interpret=interpret)
     return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(A, B, x, xbar, gamma)

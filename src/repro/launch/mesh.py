@@ -51,5 +51,19 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
 
 
 def solver_mesh(workers: int, model: int = 1) -> Mesh:
-    """Mesh for the APC solver: 'data' = workers, 'model' = column shards."""
+    """Mesh for the solver backend: 'data' = workers, 'model' = col shards."""
     return make_compat_mesh((workers, model), ("data", "model"))
+
+
+def solver_mesh_for(workers: int, model: int = 1) -> Mesh:
+    """Largest solver mesh the available devices support.
+
+    The 'data' axis is the largest divisor of ``workers`` that fits the
+    device count (the backend shards the m worker blocks over it, so it
+    must divide m) — on a single-device host this degrades to a (1, 1)
+    mesh and the backend still runs, just unsharded.
+    """
+    budget = max(1, len(jax.devices()) // max(1, model))
+    data = max(d for d in range(1, workers + 1)
+               if workers % d == 0 and d <= budget)
+    return make_compat_mesh((data, model), ("data", "model"))

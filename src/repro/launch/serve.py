@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,23 @@ import numpy as np
 from repro import configs
 from repro.launch import mesh as mesh_lib
 from repro.models import model, sharding
+
+
+def take_group(queue, batch: int):
+    """Pop the next slot group off the request queue, FIFO.
+
+    Returns ``(group, n_real)``: up to ``batch`` requests in arrival order,
+    padded by repeating the last one so the compiled batch shape is stable.
+    Only ``n_real`` requests were actually served — padding must never be
+    counted in throughput.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    n_real = min(batch, len(queue))
+    group = [queue.popleft() for _ in range(n_real)]
+    while group and len(group) < batch:
+        group.append(group[-1])
+    return group, n_real
 
 
 def generate_batch(cfg, params, prompts, max_new: int, rules, extra=None):
@@ -61,8 +79,8 @@ def main(argv=None):
                                 jax.random.PRNGKey(0), jnp.dtype(cfg.dtype))
 
     rng = np.random.default_rng(0)
-    queue = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
-             for _ in range(args.requests)]
+    queue = deque(rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+                  for _ in range(args.requests))
     extra = {}
     if cfg.frontend == "vision":
         extra["patches"] = jnp.zeros(
@@ -74,15 +92,14 @@ def main(argv=None):
     done, t0 = 0, time.time()
     with mesh:
         while queue:
-            group = [queue.pop() for _ in range(min(args.batch, len(queue)))]
-            while len(group) < args.batch:      # pad the last group
-                group.append(group[-1])
+            group, n_real = take_group(queue, args.batch)
             prompts = jnp.asarray(np.stack(group), jnp.int32)
             toks = generate_batch(cfg, params, prompts, args.max_new, rules,
                                   extra)
-            done += len(group)
-            print(f"batch of {len(group)}: generated {toks.shape[1]} tokens "
-                  f"each; sample: {np.asarray(toks[0])[:8]}", flush=True)
+            done += n_real                      # padding is not traffic
+            print(f"batch of {n_real} (+{len(group) - n_real} pad): "
+                  f"generated {toks.shape[1]} tokens each; "
+                  f"sample: {np.asarray(toks[0])[:8]}", flush=True)
     dt = time.time() - t0
     print(f"served {done} requests in {dt:.1f}s "
           f"({done * args.max_new / dt:.1f} tok/s)")

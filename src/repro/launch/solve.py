@@ -4,6 +4,11 @@ Partitions a linear system across workers, runs ANY registered solver from
 ``repro.solvers`` (APC by default) with its auto-tuned optimal parameters,
 monitors the residual, and checkpoints the solver state for restart; a
 checkpointed run resumes via ``--resume`` (warm start from the saved state).
+``--use-mesh`` runs the same method through the shard_map mesh backend on
+however many devices exist (force more with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--x64/--no-x64``
+pins the float width explicitly so checkpoint dtypes are reproducible
+across resumes.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.solve --problem std_gaussian \
@@ -18,7 +23,7 @@ import jax
 import numpy as np
 
 from repro import solvers
-from repro.core import coding, distributed, spectral
+from repro.core import coding, spectral
 from repro.checkpoint import ckpt
 from repro.data import linsys
 from repro.launch import mesh as mesh_lib
@@ -39,10 +44,14 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="warm-start from the latest checkpoint in --ckpt-dir")
     ap.add_argument("--use-mesh", action="store_true",
-                    help="run the shard_map path on a device mesh (APC)")
+                    help="run --method through the shard_map mesh backend")
+    ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="float64 math (default on; checkpoints record the "
+                         "resulting dtypes — resume with the same setting)")
     args = ap.parse_args(argv)
 
-    jax.config.update("jax_enable_x64", True)
+    jax.config.update("jax_enable_x64", args.x64)
     sys_ = linsys.ALL_PROBLEMS[args.problem](seed=args.seed)
     # re-partition to the requested worker count
     A, b = sys_.dense()
@@ -60,24 +69,24 @@ def main(argv=None):
              if rho is not None else ""))
 
     t0 = time.time()
-    if args.redundancy > 1 or args.use_mesh:
-        if args.method != "apc":
-            ap.error("--redundancy/--use-mesh run the distributed APC path; "
-                     "combine them only with --method apc")
     if args.redundancy > 1:
+        if args.method != "apc":
+            ap.error("--redundancy runs the coded APC path; combine it only "
+                     "with --method apc")
+        if args.use_mesh:
+            ap.error("--redundancy and --use-mesh cannot be combined")
         xbar, residuals = coding.solve_redundant(
             sys_, args.redundancy, iters=args.iters,
             gamma=params.get("gamma"), eta=params.get("eta"))
         final_res = residuals[-1]
-    elif args.use_mesh:
-        mesh = mesh_lib.solver_mesh(args.workers)
-        xbar, final_res = distributed.solve_on_mesh(
-            mesh, sys_, iters=args.iters,
-            gamma=params.get("gamma"), eta=params.get("eta"))
     else:
-        # Factorize once; the same factors serve the restore template and
-        # the solve itself.
-        factors = solver.prepare(sys_.A_blocks, params)
+        # Single-host path: factorize once, the same factors serve the
+        # restore template and the solve.  Mesh path: factors stay None so
+        # the factorization happens on-mesh — except on resume, where the
+        # restore template forces a host prepare anyway, so those factors
+        # are handed to the backend instead of being recomputed.
+        factors = (None if args.use_mesh
+                   else solver.prepare(sys_.A_blocks, params))
         warm = None
         if args.resume:
             if not args.ckpt_dir:
@@ -87,13 +96,23 @@ def main(argv=None):
                 print(f"WARNING: no checkpoint found in {args.ckpt_dir}; "
                       "starting cold")
             else:
+                if factors is None:
+                    factors = solver.prepare(sys_.A_blocks, params)
                 probe = solver.init(factors, sys_.b_blocks, params)
                 warm = ckpt.restore(args.ckpt_dir, probe)
                 print(f"resuming from checkpointed state at iter {step}")
-        res = solver.solve(sys_, iters=args.iters, warm_state=warm,
-                           factors=factors, **params)
+        if args.use_mesh:
+            mesh = mesh_lib.solver_mesh_for(sys_.m)
+            print(f"mesh backend: {tuple(mesh.shape.items())} over "
+                  f"{len(jax.devices())} device(s)")
+            res = solver.solve(sys_, iters=args.iters, backend="mesh",
+                               mesh=mesh, warm_state=warm, factors=factors,
+                               **params)
+        else:
+            res = solver.solve(sys_, iters=args.iters, warm_state=warm,
+                               factors=factors, **params)
         xbar, final_res = res.x, float(res.residuals[-1])
-        if res.iters_to_tol is not None:
+        if res.iters_to_tol != -1:
             print(f"reached residual < {res.tol:.0e} after "
                   f"{res.iters_to_tol} iters")
         if args.ckpt_dir:

@@ -17,11 +17,16 @@ Warm starts / resume (feeds repro.checkpoint.ckpt):
     r1 = solvers.get("apc").solve(sys, iters=100)
     r2 = solvers.get("apc").solve(sys, iters=100, warm_state=r1.state)
 
-See ``api.Solver`` for the protocol and ``registry.register`` for adding a
-new method.
+Mesh execution (shard_map over a device mesh, any registered solver):
+
+    res = solvers.get("apc").solve(sys, backend="mesh", mesh=mesh)
+
+See ``api.Solver`` for the protocol, ``registry.register`` for adding a
+new method, and ``mesh`` for the sharded backend.
 """
 from .api import Solver, SolveResult, iters_to_tolerance  # noqa: F401
 from .registry import available, get, register  # noqa: F401
 
 # Importing the implementation modules populates the registry.
 from . import admm, gradient, projection  # noqa: F401, E402
+from . import mesh  # noqa: F401, E402  (the shard_map execution backend)

@@ -12,10 +12,12 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import BlockSystem
 
 from .api import Solver
+from .projection import _cho_solve_workers
 from .registry import register
 
 
@@ -63,3 +65,26 @@ class MADMMSolver(Solver):
 
     def extract(self, state):
         return state.xbar
+
+    # ----- mesh backend ---------------------------------------------------
+    def mesh_factor_specs(self, ctx):
+        return ADMMFactors(A=P(ctx.w, None, ctx.n), chol=P(ctx.w, None, None))
+
+    def mesh_state_specs(self, ctx):
+        return ADMMState(xbar=P(ctx.n), t=P(), Atb=P(ctx.w, ctx.n))
+
+    def mesh_prepare(self, A, params, ctx):
+        G = ctx.psum_model(jnp.einsum("mpn,mqn->mpq", A, A))
+        eye = jnp.eye(A.shape[1], dtype=A.dtype)
+        return ADMMFactors(A=A,
+                           chol=jnp.linalg.cholesky(G + params["xi"] * eye))
+
+    def mesh_step(self, factors, b, state, params, ctx):
+        xi = params["xi"]
+        v = state.Atb + xi * state.xbar[None, :]          # (m_loc, n_loc)
+        Av = ctx.psum_model(jnp.einsum("mpn,mn->mp", factors.A, v))
+        w = _cho_solve_workers(factors.chol, Av)
+        x_new = (v - jnp.einsum("mpn,mp->mn", factors.A, w)) / xi
+        m = ctx.workers_total(x_new.shape[0])
+        xbar = ctx.psum_workers(jnp.sum(x_new, axis=0)) / m
+        return ADMMState(xbar=xbar, t=state.t + 1, Atb=state.Atb)

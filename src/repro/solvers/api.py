@@ -25,6 +25,13 @@ Projection-family solvers (``apc``, ``consensus``, ``cimmino``) additionally
 accept ``use_kernel=True`` to route the per-worker projection through the
 Pallas TPU kernel, and auto-tune their parameters from the Theorem-1
 spectral analysis when none are given.
+
+Backends: ``solve(..., backend="mesh", mesh=...)`` runs the same lifecycle
+sharded across a device mesh via shard_map (see ``solvers/mesh.py``) — the
+row blocks shard over the mesh's worker axes, the master update becomes a
+psum, and setup runs on-mesh so no host materializes the full A.  States
+keep global shapes, so warm starts and checkpoints round-trip between the
+two backends.
 """
 from __future__ import annotations
 
@@ -51,8 +58,10 @@ class SolveResult:
     residuals: jnp.ndarray         # (T,) or (k, T)  ||Ax-b|| / ||b|| per iter
     errors: Optional[jnp.ndarray]  # (T,) ||x-x*||/||x*|| if sys.x_true given
     params: Dict[str, float]       # hyper-parameters actually used
-    iters_to_tol: Any = None       # first iter with residual < tol (None/-1 =
-                                   # never reached); array (k,) for solve_many
+    iters_to_tol: Any = -1         # first 1-based iter with residual < tol;
+                                   # the sentinel -1 means "never reached"
+                                   # (int for solve, (k,) int array for
+                                   # solve_many — SAME sentinel in both)
     tol: float = 1e-6              # tolerance iters_to_tol was computed at
 
     def iters_to(self, tol: float):
@@ -61,15 +70,16 @@ class SolveResult:
 
 
 def iters_to_tolerance(residuals, tol: float):
-    """First 1-based iteration whose residual is < tol.
+    """First 1-based iteration whose residual is < tol; -1 = never reached.
 
-    Returns None (scalar history) or -1 (batched history) where the
-    tolerance was never reached.
+    Returns an int for a (T,) history and a (k,) int array for a batched
+    (k, T) history — the never-reached sentinel is -1 in BOTH cases, so
+    ``solve`` and ``solve_many`` results compare uniformly.
     """
     r = np.asarray(residuals)
     hit = r < tol
     if r.ndim == 1:
-        return int(np.argmax(hit)) + 1 if hit.any() else None
+        return int(np.argmax(hit)) + 1 if hit.any() else -1
     first = np.argmax(hit, axis=-1) + 1
     return np.where(hit.any(axis=-1), first, -1)
 
@@ -133,6 +143,43 @@ class Solver:
         """
         return factors
 
+    # ----- mesh-backend hooks (see solvers/mesh.py) ------------------------
+    # The mesh backend runs these INSIDE shard_map: every array argument is
+    # the device-local shard (worker axis and optionally the n axis cut),
+    # and cross-shard reductions go through the MeshContext psum helpers.
+    # Specs use ctx.w (worker axis entry) / ctx.n (column axis entry).
+
+    def mesh_factor_specs(self, ctx):
+        """PartitionSpec pytree matching ``prepare``'s factor structure."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the mesh backend")
+
+    def mesh_state_specs(self, ctx):
+        """PartitionSpec pytree matching the solver state structure."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the mesh backend")
+
+    def mesh_prepare(self, A: jnp.ndarray, params: Dict[str, float], ctx):
+        """On-mesh ``prepare`` from a local (m_loc, p, n_loc) shard of A."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the mesh backend")
+
+    def mesh_init(self, factors: Any, b: jnp.ndarray,
+                  params: Dict[str, float], ctx) -> Any:
+        """On-mesh ``init``; the default reuses ``init``, which is correct
+        whenever it contains no cross-worker/cross-column reduction."""
+        return self.init(factors, b, params)
+
+    def mesh_step(self, factors: Any, b: jnp.ndarray, state: Any,
+                  params: Dict[str, float], ctx) -> Any:
+        """One iteration on local shards (collectives via ``ctx``)."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the mesh backend")
+
+    def mesh_factors(self, factors: Any) -> Any:
+        """Strip host-only fields before reusing factors on the mesh."""
+        return factors
+
     # ----- shared drivers --------------------------------------------------
     def resolve_params(self, sys: BlockSystem, **overrides) -> Dict[str, float]:
         """Merge explicit overrides over the auto-tuned defaults.
@@ -151,15 +198,43 @@ class Solver:
                 f"solver {self.name!r} is not projection-based and has no "
                 f"Pallas kernel path (use_kernel=True unsupported)")
 
+    def _dispatch_mesh(self, backend: str, use_kernel: bool,
+                       mesh: Any) -> bool:
+        if backend == "local":
+            if mesh is not None:
+                raise ValueError("a mesh was passed but backend is 'local' "
+                                 "— did you mean backend='mesh'?")
+            return False
+        if backend != "mesh":
+            raise ValueError(f"unknown backend {backend!r}; "
+                             "expected 'local' or 'mesh'")
+        if use_kernel:
+            raise ValueError("use_kernel=True is not supported on the mesh "
+                             "backend (the Pallas path is single-device)")
+        return True
+
     def solve(self, sys: BlockSystem, *, iters: int = 1000, tol: float = 1e-6,
               use_kernel: bool = False, warm_state: Any = None,
-              factors: Any = None, **params) -> SolveResult:
+              factors: Any = None, backend: str = "local", mesh: Any = None,
+              worker_axes=("data",), model_axis: Optional[str] = "model",
+              **params) -> SolveResult:
         """End-to-end solve: prepare -> init (or warm-start) -> scan steps.
 
         Pass ``factors`` (from an earlier ``prepare`` with the same params)
         to skip the one-time factorization — cached-factor serving and the
         checkpoint-resume driver use this.
+
+        ``backend="mesh"`` runs the identical lifecycle sharded over a
+        device mesh (``mesh=None`` builds one over the available devices);
+        ``worker_axes``/``model_axis`` choose which mesh axes the row
+        blocks and the n dimension shard over.
         """
+        if self._dispatch_mesh(backend, use_kernel, mesh):
+            from . import mesh as mesh_backend
+            return mesh_backend.solve_mesh(
+                self, sys, mesh=mesh, iters=iters, tol=tol,
+                worker_axes=worker_axes, model_axis=model_axis,
+                warm_state=warm_state, factors=factors, **params)
         self._check_kernel(use_kernel)
         prm = self.resolve_params(sys, **params)
         if factors is None:
@@ -179,13 +254,22 @@ class Solver:
 
     def solve_many(self, sys: BlockSystem, B, *, iters: int = 1000,
                    tol: float = 1e-6, use_kernel: bool = False,
-                   factors: Any = None, **params) -> SolveResult:
+                   factors: Any = None, backend: str = "local",
+                   mesh: Any = None, worker_axes=("data",),
+                   model_axis: Optional[str] = "model",
+                   **params) -> SolveResult:
         """Batched multi-RHS solve sharing ONE ``prepare`` factorization.
 
         ``B`` is (k, N) — k right-hand sides for the same A.  Returns a
         batched SolveResult: x (k, n), residuals (k, T), errors None.
-        ``factors`` behaves as in ``solve``.
+        ``factors`` and ``backend``/``mesh`` behave as in ``solve``.
         """
+        if self._dispatch_mesh(backend, use_kernel, mesh):
+            from . import mesh as mesh_backend
+            return mesh_backend.solve_many_mesh(
+                self, sys, B, mesh=mesh, iters=iters, tol=tol,
+                worker_axes=worker_axes, model_axis=model_axis,
+                factors=factors, **params)
         self._check_kernel(use_kernel)
         B = jnp.asarray(B)
         if B.ndim == 1:

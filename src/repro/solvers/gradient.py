@@ -13,6 +13,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import spectral
 from repro.core.partition import BlockSystem
@@ -37,10 +38,34 @@ def _grad(A, b, x):
 
 
 class _GradientSolver(Solver):
-    """Shared lifecycle scaffolding for the gradient family."""
+    """Shared lifecycle scaffolding for the gradient family.
+
+    Every member is "psum of per-worker partial gradients + a master-side
+    momentum update": ``step``/``mesh_step`` compute the gradient of
+    (1/2)||Cx-d||^2 over the blocks from ``_blocks``/``_rhs`` and hand it
+    to the per-solver ``_update`` — so the single-host and mesh backends
+    share the update math verbatim.
+    """
 
     def prepare(self, A, params):
         return GradFactors(A=A)
+
+    def _blocks(self, factors):
+        """The (m, p, n) row blocks the gradient runs over."""
+        return factors.A
+
+    def _rhs(self, factors, b, state):
+        """The (m, p) right-hand side paired with ``_blocks``."""
+        return b
+
+    def _update(self, state, g, params):
+        """Master update from the summed gradient g (override per solver)."""
+        raise NotImplementedError
+
+    def step(self, factors, b, state, params, *, use_kernel=False):
+        g = _grad(self._blocks(factors), self._rhs(factors, b, state),
+                  state.x)
+        return self._update(state, g, params)
 
     def _zeros(self, factors):
         A = factors.A if isinstance(factors, GradFactors) else factors.C
@@ -48,6 +73,20 @@ class _GradientSolver(Solver):
 
     def extract(self, state):
         return state.x
+
+    # ----- mesh backend ---------------------------------------------------
+    def mesh_factor_specs(self, ctx):
+        return GradFactors(A=P(ctx.w, None, ctx.n))
+
+    def mesh_prepare(self, A, params, ctx):
+        return GradFactors(A=A)
+
+    def mesh_step(self, factors, b, state, params, ctx):
+        A = self._blocks(factors)
+        d = self._rhs(factors, b, state)
+        Ax = ctx.psum_model(jnp.einsum("mpn,n->mp", A, state.x))
+        g = ctx.psum_workers(jnp.einsum("mpn,mp->n", A, Ax - d))
+        return self._update(state, g, params)
 
 
 class DGDState(NamedTuple):
@@ -75,10 +114,11 @@ class DGDSolver(_GradientSolver):
     def init(self, factors, b, params):
         return DGDState(x=self._zeros(factors), t=jnp.zeros((), jnp.int32))
 
-    def step(self, factors, b, state, params, *, use_kernel=False):
-        return DGDState(
-            x=state.x - params["alpha"] * _grad(factors.A, b, state.x),
-            t=state.t + 1)
+    def _update(self, state, g, params):
+        return DGDState(x=state.x - params["alpha"] * g, t=state.t + 1)
+
+    def mesh_state_specs(self, ctx):
+        return DGDState(x=P(ctx.n), t=P())
 
 
 class DNAGState(NamedTuple):
@@ -108,11 +148,14 @@ class DNAGSolver(_GradientSolver):
         z = self._zeros(factors)
         return DNAGState(x=z, y_prev=z, t=jnp.zeros((), jnp.int32))
 
-    def step(self, factors, b, state, params, *, use_kernel=False):
+    def _update(self, state, g, params):
         alpha, beta = params["alpha"], params["beta"]
-        y = state.x - alpha * _grad(factors.A, b, state.x)
+        y = state.x - alpha * g
         return DNAGState(x=(1.0 + beta) * y - beta * state.y_prev, y_prev=y,
                          t=state.t + 1)
+
+    def mesh_state_specs(self, ctx):
+        return DNAGState(x=P(ctx.n), y_prev=P(ctx.n), t=P())
 
 
 class DHBMState(NamedTuple):
@@ -142,10 +185,13 @@ class DHBMSolver(_GradientSolver):
         z = self._zeros(factors)
         return DHBMState(x=z, z=z, t=jnp.zeros((), jnp.int32))
 
-    def step(self, factors, b, state, params, *, use_kernel=False):
-        z_new = params["beta"] * state.z + _grad(factors.A, b, state.x)
+    def _update(self, state, g, params):
+        z_new = params["beta"] * state.z + g
         return DHBMState(x=state.x - params["alpha"] * z_new, z=z_new,
                          t=state.t + 1)
+
+    def mesh_state_specs(self, ctx):
+        return DHBMState(x=P(ctx.n), z=P(ctx.n), t=P())
 
 
 class PDHBMState(NamedTuple):
@@ -184,7 +230,33 @@ class PDHBMSolver(DHBMSolver):
         return PDHBMState(x=z, z=z, t=jnp.zeros((), jnp.int32),
                           d=jnp.einsum("mpq,mq->mp", factors.S, b))
 
-    def step(self, factors, b, state, params, *, use_kernel=False):
-        z_new = params["beta"] * state.z + _grad(factors.C, state.d, state.x)
+    def _blocks(self, factors):
+        return factors.C
+
+    def _rhs(self, factors, b, state):
+        return state.d
+
+    def _update(self, state, g, params):
+        z_new = params["beta"] * state.z + g
         return PDHBMState(x=state.x - params["alpha"] * z_new, z=z_new,
                           t=state.t + 1, d=state.d)
+
+    def mesh_factor_specs(self, ctx):
+        return PrecondFactors(C=P(ctx.w, None, ctx.n), S=P(ctx.w, None, None))
+
+    def mesh_prepare(self, A, params, ctx):
+        # On-mesh (A_i A_i^T)^{-1/2}: the Gram is a psum over column shards,
+        # the p x p inverse square root an eigh on every worker's shard.
+        # Eigenvalues are clamped like core/precond._inv_sqrt_psd so a
+        # rank-deficient block yields a huge-but-finite preconditioner
+        # instead of NaN (eigh can return ~0/slightly-negative values);
+        # precision follows the running dtype — enable x64 for
+        # ill-conditioned blocks, where cond(G) = cond(A_i)^2.
+        G = ctx.psum_model(jnp.einsum("mpn,mqn->mpq", A, A))
+        w, V = jnp.linalg.eigh(G)
+        w = jnp.maximum(w, jnp.finfo(w.dtype).tiny)
+        S = jnp.einsum("mpq,mq,mrq->mpr", V, 1.0 / jnp.sqrt(w), V)
+        return PrecondFactors(C=jnp.einsum("mpq,mqn->mpn", S, A), S=S)
+
+    def mesh_state_specs(self, ctx):
+        return PDHBMState(x=P(ctx.n), z=P(ctx.n), t=P(), d=P(ctx.w, None))

@@ -11,6 +11,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import spectral
 from repro.core import apc as apc_core
@@ -47,6 +48,22 @@ def _min_norm_solutions(factors: ProjFactors, b: jnp.ndarray) -> jnp.ndarray:
     """x0_i = A_i^T (A_i A_i^T)^{-1} b_i — the min-norm local solutions."""
     return jax.vmap(lambda Ai, Li, bi: Ai.T @ _gram_solve(Li, bi))(
         factors.A, factors.chol, b)
+
+
+def _cho_solve_workers(chol, u):
+    """Per-worker G_i^{-1} u_i with the stored Cholesky factors."""
+    return jax.vmap(
+        lambda Li, ui: jax.scipy.linalg.cho_solve((Li, True), ui))(chol, u)
+
+
+def _mesh_gram_chol(A, jitter: float, ctx):
+    """Cholesky of the full Gram A_i A_i^T from column-sharded blocks."""
+    G = ctx.psum_model(jnp.einsum("mpn,mqn->mpq", A, A))
+    if jitter:
+        p = G.shape[-1]
+        tr = jnp.trace(G, axis1=-2, axis2=-1)[:, None, None]
+        G = G + jitter * tr / p * jnp.eye(p, dtype=G.dtype)
+    return jnp.linalg.cholesky(G)
 
 
 @register("apc")
@@ -97,6 +114,40 @@ class APCSolver(Solver):
 
     def extract(self, state):
         return state.xbar
+
+    # ----- mesh backend ---------------------------------------------------
+    def mesh_factor_specs(self, ctx):
+        return ProjFactors(A=P(ctx.w, None, ctx.n),
+                           chol=P(ctx.w, None, None), B=None)
+
+    def mesh_state_specs(self, ctx):
+        return APCState(x=P(ctx.w, ctx.n), xbar=P(ctx.n), t=P())
+
+    def mesh_factors(self, factors):
+        return factors._replace(B=None)     # pinv factors are kernel-only
+
+    def mesh_prepare(self, A, params, ctx):
+        return ProjFactors(
+            A=A, chol=_mesh_gram_chol(A, params.get("jitter", 0.0), ctx))
+
+    def mesh_init(self, factors, b, params, ctx):
+        w = _cho_solve_workers(factors.chol, b)
+        x0 = jnp.einsum("mpn,mp->mn", factors.A, w)   # min-norm local sols
+        m = ctx.workers_total(x0.shape[0])
+        xbar0 = ctx.psum_workers(jnp.sum(x0, axis=0)) / m
+        return APCState(x=x0, xbar=xbar0, t=jnp.zeros((), jnp.int32))
+
+    def mesh_step(self, factors, b, state, params, ctx):
+        gamma, eta = params["gamma"], params["eta"]
+        d = state.xbar[None, :] - state.x                 # (m_loc, n_loc)
+        u = ctx.psum_model(jnp.einsum("mpn,mn->mp", factors.A, d))
+        w = _cho_solve_workers(factors.chol, u)           # G^{-1} A_i d
+        proj = d - jnp.einsum("mpn,mp->mn", factors.A, w)
+        x_new = state.x + gamma * proj                    # Eq. 2a
+        m = ctx.workers_total(x_new.shape[0])
+        s = ctx.psum_workers(jnp.sum(x_new, axis=0))      # Eq. 2b psum
+        xbar_new = (eta / m) * s + (1.0 - eta) * state.xbar
+        return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
 
 
 @register("consensus")
@@ -177,3 +228,26 @@ class CimminoSolver(Solver):
 
     def extract(self, state):
         return state.xbar
+
+    # ----- mesh backend ---------------------------------------------------
+    def mesh_factor_specs(self, ctx):
+        return ProjFactors(A=P(ctx.w, None, ctx.n),
+                           chol=P(ctx.w, None, None), B=None)
+
+    def mesh_state_specs(self, ctx):
+        return CimminoState(xbar=P(ctx.n), t=P())
+
+    def mesh_factors(self, factors):
+        return factors._replace(B=None)
+
+    def mesh_prepare(self, A, params, ctx):
+        return ProjFactors(
+            A=A, chol=_mesh_gram_chol(A, params.get("jitter", 0.0), ctx))
+
+    def mesh_step(self, factors, b, state, params, ctx):
+        u = ctx.psum_model(jnp.einsum("mpn,n->mp", factors.A, state.xbar))
+        w = _cho_solve_workers(factors.chol, b - u)       # G^{-1}(b - A xbar)
+        r = jnp.einsum("mpn,mp->mn", factors.A, w)        # row projections
+        s = ctx.psum_workers(jnp.sum(r, axis=0))
+        return CimminoState(xbar=state.xbar + params["nu"] * s,
+                            t=state.t + 1)

@@ -55,3 +55,25 @@ def test_structure_validation(tmp_path):
 def test_resume_missing_dir():
     with pytest.raises(FileNotFoundError):
         ckpt.restore("/tmp/definitely_missing_ckpt_dir_xyz", _tree())
+
+
+def test_restore_dtype_drift_raises(tmp_path):
+    """A checkpoint written under x64 restored into an f32 program (or any
+    other dtype drift) must fail loudly, not silently cast."""
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"w": jnp.arange(4, dtype=jnp.float64)})
+    like = {"w": jnp.zeros(4, jnp.float32)}
+    with pytest.raises(ValueError, match="dtype drift"):
+        ckpt.restore(d, like)
+    # the explicit escape hatch casts to the running program's dtype
+    out = ckpt.restore(d, like, allow_cast=True)
+    assert out["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out["w"]), np.arange(4.0))
+
+
+def test_restore_same_dtype_unaffected(tmp_path):
+    d = str(tmp_path)
+    t = _tree(2.0)
+    ckpt.save(d, 1, t)
+    out = ckpt.restore(d, _tree())             # same dtypes: no error
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(t["a"]))

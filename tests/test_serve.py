@@ -1,0 +1,38 @@
+"""Serving driver queue semantics: FIFO order, padding never counted."""
+from collections import deque
+
+import pytest
+
+from repro.launch.serve import take_group
+
+
+def test_take_group_fifo_and_padding_accounting():
+    queue = deque(range(5))
+    served, reals = [], []
+    while queue:
+        group, n_real = take_group(queue, 2)
+        assert len(group) == 2                 # compiled batch shape stable
+        served.extend(group[:n_real])
+        reals.append(n_real)
+    assert served == [0, 1, 2, 3, 4]           # FIFO, not LIFO
+    assert reals == [2, 2, 1]                  # last group is padded...
+    assert sum(reals) == 5                     # ...but padding is not traffic
+
+
+def test_take_group_pads_by_repeating_last():
+    queue = deque([7])
+    group, n_real = take_group(queue, 3)
+    assert group == [7, 7, 7] and n_real == 1
+    assert not queue
+
+
+def test_take_group_exact_batch_no_padding():
+    queue = deque([1, 2, 3])
+    group, n_real = take_group(queue, 3)
+    assert group == [1, 2, 3] and n_real == 3
+
+
+def test_take_group_rejects_nonpositive_batch():
+    # batch=0 would otherwise never drain the queue (infinite serve loop)
+    with pytest.raises(ValueError, match="batch"):
+        take_group(deque([1]), 0)

@@ -44,7 +44,7 @@ def test_lifecycle_roundtrip_and_convergence(sys_, name):
     assert res.name == name
     assert res.params.keys() >= set(s.param_names)
     assert float(res.residuals[-1]) < 1e-6, name
-    assert res.iters_to_tol is not None and res.iters_to_tol <= ITERS[name]
+    assert res.iters_to_tol != -1 and res.iters_to_tol <= ITERS[name]
 
 
 @pytest.mark.parametrize("name,legacy", [
@@ -217,11 +217,27 @@ def test_kernel_flag_uniform_on_projection_family(sys_):
 def test_iters_to_tolerance_semantics(sys_):
     r = solvers.get("apc").solve(sys_, iters=300, tol=1e-6)
     k = r.iters_to_tol
-    assert k is not None
+    assert k != -1
     res = np.asarray(r.residuals)
     assert res[k - 1] < 1e-6 and (k == 1 or res[k - 2] >= 1e-6)
     assert r.iters_to(1e300) == 1
-    assert r.iters_to(0.0) is None
+    assert r.iters_to(0.0) == -1
+
+
+def test_never_reached_sentinel_uniform_across_drivers(sys_):
+    """solve and solve_many use the SAME -1 sentinel for "never reached",
+    so downstream comparisons cannot silently disagree between drivers."""
+    s = solvers.get("dgd")
+    r1 = s.solve(sys_, iters=3, tol=1e-30)
+    assert r1.iters_to_tol == -1
+    B = np.random.default_rng(0).standard_normal((4, sys_.N))
+    rb = s.solve_many(sys_, B, iters=3, tol=1e-30)
+    got = np.asarray(rb.iters_to_tol)
+    assert got.shape == (4,) and (got == -1).all()
+    # reached case stays a positive 1-based count in both drivers
+    r2 = s.solve(sys_, iters=3, tol=1e300)
+    rb2 = s.solve_many(sys_, B, iters=3, tol=1e300)
+    assert r2.iters_to_tol == 1 and (np.asarray(rb2.iters_to_tol) == 1).all()
 
 
 def test_theoretical_rates_match_spectral_summary(sys_):
