@@ -10,7 +10,7 @@ import sys
 import time
 
 from benchmarks import batch_rhs, fig2_decay, mesh_scaling, periter, \
-    roofline, table1_rates, table2_times
+    roofline, straggler, table1_rates, table2_times
 
 SUITES = {
     "table1": table1_rates,
@@ -19,6 +19,7 @@ SUITES = {
     "periter": periter,
     "batch_rhs": batch_rhs,
     "mesh_scaling": mesh_scaling,
+    "straggler": straggler,
     "roofline": roofline,
 }
 

@@ -1,0 +1,197 @@
+"""Straggler-tolerant redundant execution: per-iteration cost and
+iterations-to-tolerance vs straggler rate and redundancy r.
+
+Two claims are measured on the default problem:
+
+  * Exactness (solvers/redundant.py invariant): iters-to-tol is INVARIANT
+    to the straggler rate — dropping covered workers never slows
+    convergence in iteration count.  The ``derived`` column carries
+    ``to_tol`` per (r, rate) so the CSV shows it directly.
+  * The jitted ``lax.scan`` over precomputed selection-weight masks is
+    measurably faster per iteration than the legacy host loop that
+    ``core/coding.py:solve_redundant`` used to run (selection weights
+    rebuilt and a jitted step re-dispatched from Python every iteration,
+    residual pulled to host each step) — ``straggler/legacy_loop_r2`` vs
+    ``straggler/apc/r2/rate0.3``.
+
+Timing follows benchmarks/mesh_scaling.py: the scan is built and jitted
+ONCE per configuration and repeat executions of that same callable are
+timed, so trace/compile and schedule-lowering costs drop out and the
+number is pure per-iteration execution time; the legacy loop likewise
+warms its jitted step in-call before its timed window.
+
+    PYTHONPATH=src python benchmarks/straggler.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import solvers
+from repro.data import linsys
+from repro.solvers import redundant
+
+ITERS = 200
+REPS = 5
+TOL = 1e-8
+RATES = (0.0, 0.3, 1.0)
+RS = (2, 3)
+
+
+def _default_problem(n: int = 256, m: int = 8):
+    return linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=0)
+
+
+def _schedule(m: int, rate: float, seed: int = 0):
+    rng = np.random.default_rng(seed)
+
+    def sched(t):
+        a = np.ones(m, bool)
+        if rng.random() < rate:
+            a[rng.integers(0, m)] = False
+        return a
+
+    return sched
+
+
+def _time_compiled(run, *args):
+    """us/iteration of repeat executions of one already-built callable."""
+    jax.block_until_ready(run(*args))            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = run(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / (REPS * ITERS) * 1e6
+
+
+def _redundant_setup(solver, sys_, r: int):
+    """Replicated factors/b, initial state, and the step context."""
+    prm = solver.resolve_params(sys_)
+    assign = redundant.Assignment(m=sys_.m, r=r)
+    frep = solver.red_factors(solver.prepare(sys_.A_blocks, prm), assign)
+    _, b_rep = redundant.replicate_system(sys_, assign)
+    dtype = sys_.A_blocks.dtype
+    W_all = jnp.asarray(
+        redundant.selection_weights(np.ones(sys_.m, bool), sys_.m, r), dtype)
+    state0 = solver.red_init(frep, b_rep, prm, W_all, redundant._LOCAL)
+    return prm, frep, b_rep, state0, dtype
+
+
+def _compiled_plain(solver, sys_):
+    prm = solver.resolve_params(sys_)
+    factors = solver.prepare(sys_.A_blocks, prm)
+    state0 = solver.init(factors, sys_.b_blocks, prm)
+    A, b = sys_.A_blocks, sys_.b_blocks
+    b_norm = jnp.sqrt(jnp.sum(b * b))
+
+    @jax.jit
+    def run(state):
+        def body(st, _):
+            st = solver.step(factors, b, st, prm)
+            rr = jnp.einsum("mpn,n->mp", A, solver.extract(st)) - b
+            return st, jnp.sqrt(jnp.sum(rr * rr)) / b_norm
+
+        return jax.lax.scan(body, state, None, length=ITERS)
+
+    return run, state0
+
+
+def _compiled_redundant(solver, sys_, r: int, rate: float):
+    prm, frep, b_rep, state0, dtype = _redundant_setup(solver, sys_, r)
+    alive = redundant.resolve_schedule(_schedule(sys_.m, rate), sys_.m, ITERS)
+    W_seq = jnp.asarray(redundant.schedule_weights(alive, r), dtype)
+    A, b = sys_.A_blocks, sys_.b_blocks
+    b_norm = jnp.sqrt(jnp.sum(b * b))
+
+    @jax.jit
+    def run(state, Ws):
+        def body(st, Wt):
+            st = solver.red_step(frep, b_rep, st, prm, Wt, redundant._LOCAL)
+            rr = jnp.einsum("mpn,n->mp", A, solver.extract(st)) - b
+            return st, jnp.sqrt(jnp.sum(rr * rr)) / b_norm
+
+        return jax.lax.scan(body, state, Ws)
+
+    return run, state0, W_seq
+
+
+def _legacy_loop_per_iter(solver, sys_, r: int, rate: float,
+                          warmup: int = 5):
+    """The pre-scan reference driver: identical per-iteration math (the
+    same jitted redundant step), but orchestrated the way the old
+    ``core/coding.py`` host loop was — selection weights rebuilt in Python
+    every iteration, the step re-dispatched per call, and the residual
+    pulled to host each step.  The jitted step is warmed in-call so the
+    timed window holds no compilation."""
+    prm, frep, b_rep, state, dtype = _redundant_setup(solver, sys_, r)
+    step = jax.jit(lambda st, W: solver.red_step(frep, b_rep, st, prm, W,
+                                                 redundant._LOCAL))
+    sched = _schedule(sys_.m, rate)
+    A, b = sys_.A_blocks, sys_.b_blocks
+    b_norm = float(jnp.sqrt(jnp.sum(b * b)))
+
+    def one_iter(state, t):
+        W = jnp.asarray(
+            redundant.selection_weights(sched(t), sys_.m, r), dtype)
+        state = step(state, W)
+        rr = jnp.einsum("mpn,n->mp", A, solver.extract(state)) - b
+        res = float(jnp.sqrt(jnp.sum(rr * rr))) / b_norm
+        return state, res
+
+    for t in range(warmup):
+        state, _ = one_iter(state, t)
+    t0 = time.perf_counter()
+    for t in range(ITERS):
+        state, _ = one_iter(state, t)
+    return (time.perf_counter() - t0) / ITERS * 1e6
+
+
+def run(verbose: bool = True, n: int = 256, m: int = 8):
+    jax.config.update("jax_enable_x64", True)
+    sys_ = _default_problem(n=n, m=m)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    rows = []
+
+    run_p, st0 = _compiled_plain(s, sys_)
+    res0 = s.solve(sys_, iters=ITERS, tol=TOL, **prm)
+    rows.append(("straggler/apc/plain", _time_compiled(run_p, st0),
+                 f"n={n};m={m};to_tol={res0.iters_to_tol}"))
+    for r in RS:
+        for rate in RATES:
+            res = s.solve(sys_, iters=ITERS, tol=TOL, redundancy=r,
+                          alive_schedule=_schedule(m, rate), **prm)
+            # exactness: convergence never degrades.  Check the documented
+            # contract (history match to 1e-6 relative) — the integer
+            # iters_to_tol is reported in the CSV, not asserted, since a
+            # crossing inside the fp noise band may legitimately shift it.
+            assert np.allclose(np.asarray(res.residuals),
+                               np.asarray(res0.residuals),
+                               rtol=1e-6, atol=1e-12), (r, rate)
+            run_r, st_r, W_seq = _compiled_redundant(s, sys_, r, rate)
+            rows.append((f"straggler/apc/r{r}/rate{rate}",
+                         _time_compiled(run_r, st_r, W_seq),
+                         f"n={n};m={m};to_tol={res.iters_to_tol}"))
+
+    # legacy host loop (what core/coding.py shipped before the scan)
+    per_legacy = _legacy_loop_per_iter(s, sys_, 2, 0.3)
+    scan_r2 = next(v for k, v, _ in rows if k == "straggler/apc/r2/rate0.3")
+    rows.append(("straggler/legacy_loop_r2", per_legacy,
+                 f"n={n};m={m};vs_scan_speedup="
+                 f"{per_legacy / max(scan_r2, 1e-9):.1f}x"))
+
+    if verbose:
+        for row in rows:
+            print(f"{row[0]:32s} {row[1]:10.1f} us/iter   {row[2]}")
+    return rows
+
+
+def csv_rows():
+    return run(verbose=False)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,5 +1,11 @@
-"""Fault-tolerance demo: r-redundant APC keeps converging while workers
-randomly stall, and the run is bit-identical to the no-failure run.
+"""Fault-tolerance demo on the unified solver API: redundant execution
+(``solve(sys, redundancy=r, alive_schedule=...)``, solvers/redundant.py)
+keeps converging while workers randomly stall, and the run matches the
+no-failure run exactly — on any projection-family solver.  Also shows a
+``runtime.fault.HeartbeatMonitor`` as the alive-mask source: its
+``drop_set()`` (dead OR straggling workers) is snapshotted when the
+schedule is lowered at launch (re-lower via warm-started segments to
+track mid-run health changes).
 
     PYTHONPATH=src python examples/straggler_sim.py
 """
@@ -9,7 +15,7 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 
-from repro.core import coding  # noqa: E402
+from repro import solvers  # noqa: E402
 from repro.data import linsys  # noqa: E402
 from repro.runtime import fault  # noqa: E402
 
@@ -27,15 +33,30 @@ def main():
         assert fault.covering_ok(a, r)
         return a
 
-    x_clean, res_clean = coding.solve_redundant(sys_, r, iters=300)
-    rng = np.random.default_rng(0)
-    x_fail, res_fail = coding.solve_redundant(sys_, r, iters=300,
-                                              alive_schedule=alive_schedule)
-    print(f"no-failure final residual:   {res_clean[-1]:.3e}")
-    print(f"with-straggler residual:     {res_fail[-1]:.3e}")
-    print(f"iterate deviation:           "
-          f"{float(np.abs(np.asarray(x_clean) - np.asarray(x_fail)).max()):.3e}")
-    print("straggler mitigation is EXACT (coding.py invariant)")
+    apc = solvers.get("apc")
+    clean = apc.solve(sys_, iters=300)
+    failing = apc.solve(sys_, iters=300, redundancy=r,
+                        alive_schedule=alive_schedule)
+    dev = float(np.abs(np.asarray(clean.x) - np.asarray(failing.x)).max())
+    print(f"no-failure final residual:   {clean.residuals[-1]:.3e}")
+    print(f"with-straggler residual:     {failing.residuals[-1]:.3e}")
+    print(f"iterate deviation:           {dev:.3e}")
+    print("straggler mitigation is EXACT (solvers/redundant.py invariant)")
+
+    # live alive-masks from the heartbeat runtime: worker 5 goes silent,
+    # worker 2 is 5x slower than the median -> both land in drop_set()
+    import time
+    mon = fault.HeartbeatMonitor(n_workers=m, timeout=60.0,
+                                 straggler_factor=3.0)
+    now = time.monotonic()
+    for w in range(m):
+        mon.beat(w, now=now, duration=5.0 if w == 2 else 1.0)
+    mon.mark_dead(5)
+    dropped = [int(w) for w in np.flatnonzero(mon.drop_set())]
+    monitored = apc.solve(sys_, iters=300, redundancy=r, alive_schedule=mon)
+    dev_m = float(np.abs(np.asarray(clean.x) - np.asarray(monitored.x)).max())
+    print(f"monitor drops workers {dropped}; residual "
+          f"{monitored.residuals[-1]:.3e}  deviation {dev_m:.3e}")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,8 @@ deprecated shims over the registry):
   precond.precondition                          Sec 6 block preconditioner
   precond.preconditioned_dhbm                   shim -> solvers.get("pdhbm")
   distributed.solve_on_mesh                     shard_map production runtime
-  coding.solve_redundant                        straggler-tolerant APC
+  coding.solve_redundant                        shim -> solve(redundancy=r)
+                                                (repro.solvers.redundant)
   consensus.run_consensus                       generic combinator
 """
 from . import apc, baselines, coding, consensus, distributed, partition  # noqa

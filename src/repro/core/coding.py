@@ -1,38 +1,34 @@
-"""Straggler-tolerant block assignment (beyond-paper; refs [10, 20]).
+"""DEPRECATED shim — straggler-tolerant execution moved to the registry.
 
-The paper's taskmaster must wait for *all* m machines each iteration — one
-straggler stalls the fleet.  We add an r-redundant cyclic assignment in the
-style of gradient coding [20]: worker i holds blocks {i, i+1, ..., i+r-1 mod
-m}.  Any iteration can then be completed from the responses of workers whose
-union of blocks covers {0..m-1}; with r-redundancy, ANY m - r + 1 workers
-suffice.
+The r-redundant cyclic assignment, selection weights, and the redundant
+solve driver now live in ``repro.solvers.redundant`` as a first-class
+option of the unified solver API:
 
-The master's Eq. (2b) average needs each block's x_j exactly once.  Given the
-alive-mask a ∈ {0,1}^m, we pick for each block j its lowest-index alive
-holder (deterministic, no communication needed — the mask is broadcast with
-the heartbeat, see runtime/fault.py), expressed as a weight matrix
-W(a) ∈ {0,1}^{m x r} so the masked mean stays a single psum.
+    from repro import solvers
+    res = solvers.get("apc").solve(sys, redundancy=r,
+                                   alive_schedule=lambda t: mask_t)
 
-Semantics are EXACT, not approximate: an iteration with stragglers computes
-the same x̄(t+1) as a non-redundant iteration over all m blocks, because each
-block's update x_j(t+1) only depends on (x_j(t), x̄(t)) — every replica of
-block j holds an identical copy of x_j(t).  (Replicas apply identical,
-deterministic updates from identical inputs, so they never diverge while
-alive; a worker that *rejoins* must refresh its replicas from a live holder —
-runtime/fault.py handles that resync.)
+which runs the whole projection family (``apc``, ``consensus``,
+``cimmino``) on BOTH backends (local jitted scan / shard_map mesh) with
+warm starts and checkpoints, replacing this module's APC-only host-loop
+reference driver.  The exactness invariant (an iteration under any
+covering alive-mask equals the no-failure iteration) is documented and
+enforced there.
+
+Kept here: the legacy entry points as thin delegations so existing
+callers keep working.  The previously documented ``seed`` parameter of
+``solve_redundant`` was dead (initialization is the deterministic
+min-norm solution — there is nothing to seed) and has been REMOVED
+rather than silently ignored.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .partition import BlockSystem
-from . import apc as apc_mod
-from . import spectral
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,99 +45,33 @@ class RedundantSystem:
     @property
     def holder_of(self) -> np.ndarray:
         """(m, r) holder_of[i, k] = block id held in slot k of worker i."""
-        m = self.base.m
-        return (np.arange(m)[:, None] + np.arange(self.r)[None, :]) % m
+        from repro.solvers.redundant import Assignment
+        return Assignment(m=self.base.m, r=self.r).holder
 
 
 def replicate(sys: BlockSystem, r: int) -> RedundantSystem:
-    m = sys.m
-    if not (1 <= r <= m):
-        raise ValueError(f"redundancy r={r} must be in [1, m={m}]")
-    idx = (np.arange(m)[:, None] + np.arange(r)[None, :]) % m
-    return RedundantSystem(base=sys, r=r,
-                           A_rep=sys.A_blocks[idx], b_rep=sys.b_blocks[idx])
+    from repro.solvers.redundant import Assignment, replicate_system
+    if not (1 <= r <= sys.m):
+        raise ValueError(f"redundancy r={r} must be in [1, m={sys.m}]")
+    A_rep, b_rep = replicate_system(sys, Assignment(m=sys.m, r=r))
+    return RedundantSystem(base=sys, r=r, A_rep=A_rep, b_rep=b_rep)
 
 
 def selection_weights(alive: np.ndarray, m: int, r: int) -> np.ndarray:
-    """W ∈ {0,1}^{m x r}: W[i,k]=1 iff worker i is the designated provider of
-    the block in its slot k.  Provider = lowest-index alive holder.
-
-    Raises if some block has no alive holder (fleet lost > r-1 'adjacent'
-    workers); the runtime then falls back to a full re-partition (fault.py).
-    """
-    alive = np.asarray(alive, dtype=bool)
-    holder = (np.arange(m)[:, None] + np.arange(r)[None, :]) % m
-    W = np.zeros((m, r))
-    for blk in range(m):
-        # workers holding blk: i = (blk - k) mod m  at slot k
-        providers = [((blk - k) % m, k) for k in range(r)]
-        providers = [(i, k) for (i, k) in providers if alive[i]]
-        if not providers:
-            raise RuntimeError(
-                f"block {blk} unrecoverable: no alive holder (r={r})")
-        i, k = min(providers)
-        W[i, k] = 1.0
-    return W
-
-
-def apc_step_redundant(rsys: RedundantSystem, chol_rep, x_rep, xbar,
-                       gamma: float, eta: float, W: jnp.ndarray):
-    """One APC iteration under an alive-mask selection matrix W.
-
-    x_rep (m, r, n): slot k of worker i carries x_{(i+k)%m}.  Dead workers'
-    entries are simply ignored by W; their local state is stale but unused.
-    """
-    m = rsys.base.m
-
-    def worker(A_i, L_i, x_i):
-        # A_i (r, p, n), x_i (r, n): update every held replica.
-        def slot(Ak, Lk, xk):
-            d = xbar - xk
-            u = jax.scipy.linalg.cho_solve((Lk, True), Ak @ d)
-            return xk + gamma * (d - Ak.T @ u)
-        return jax.vmap(slot)(A_i, L_i, x_i)
-
-    x_new = jax.vmap(worker)(rsys.A_rep, chol_rep, x_rep)     # (m, r, n)
-    # masked mean: each block contributes exactly once via W.
-    s = jnp.einsum("mk,mkn->n", W, x_new)
-    xbar_new = (eta / m) * s + (1.0 - eta) * xbar
-    return x_new, xbar_new
+    """Deprecated alias of ``repro.solvers.redundant.selection_weights``."""
+    from repro.solvers.redundant import selection_weights as sw
+    return sw(alive, m, r)
 
 
 def solve_redundant(sys: BlockSystem, r: int, *, iters: int = 500,
-                    gamma: Optional[float] = None, eta: Optional[float] = None,
-                    alive_schedule=None, seed: int = 0):
-    """Reference driver: run redundant APC under a (possibly time-varying)
-    alive schedule.  alive_schedule: callable t -> bool mask (m,), or None
-    for all-alive."""
-    if gamma is None or eta is None:
-        X = spectral.x_matrix(sys)
-        prm = spectral.apc_optimal(*spectral.mu_extremes(X))
-        gamma = prm.gamma if gamma is None else gamma
-        eta = prm.eta if eta is None else eta
+                    gamma=None, eta=None, alive_schedule=None):
+    """Deprecated shim over ``solvers.get("apc").solve(redundancy=r, ...)``.
 
-    rsys = replicate(sys, r)
-    m, r_, p, n = rsys.A_rep.shape
-    G = jnp.einsum("mrpn,mrqn->mrpq", rsys.A_rep, rsys.A_rep)
-    chol = jnp.linalg.cholesky(G)
-    w0 = jax.vmap(jax.vmap(
-        lambda L, b: jax.scipy.linalg.cho_solve((L, True), b)))(chol, rsys.b_rep)
-    x0 = jnp.einsum("mrpn,mrp->mrn", rsys.A_rep, w0)
-    # init xbar from block-unique average (all alive at t=0)
-    W_all = jnp.asarray(selection_weights(np.ones(m, bool), m, r))
-    xbar = jnp.einsum("mk,mkn->n", W_all, x0) / m
-
-    x_rep = x0
-    residuals = []
-    A, b = sys.A_blocks, sys.b_blocks
-    b_norm = float(jnp.sqrt(jnp.sum(b * b)))
-    step = jax.jit(lambda xr, xb, W: apc_step_redundant(
-        rsys, chol, xr, xb, gamma, eta, W))
-    for t in range(iters):
-        alive = (np.ones(m, bool) if alive_schedule is None
-                 else np.asarray(alive_schedule(t), dtype=bool))
-        W = jnp.asarray(selection_weights(alive, m, r))
-        x_rep, xbar = step(x_rep, xbar, W)
-        res = jnp.einsum("mpn,n->mp", A, xbar) - b
-        residuals.append(float(jnp.sqrt(jnp.sum(res * res))) / b_norm)
-    return xbar, np.asarray(residuals)
+    Returns the legacy ``(xbar, residuals)`` tuple; new code should call
+    the registry API directly and use the full ``SolveResult``.
+    """
+    from repro import solvers
+    res = solvers.get("apc").solve(sys, iters=iters, redundancy=r,
+                                   alive_schedule=alive_schedule,
+                                   gamma=gamma, eta=eta)
+    return res.x, np.asarray(res.residuals)

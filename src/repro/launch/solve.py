@@ -8,7 +8,11 @@ checkpointed run resumes via ``--resume`` (warm start from the saved state).
 however many devices exist (force more with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--x64/--no-x64``
 pins the float width explicitly so checkpoint dtypes are reproducible
-across resumes.
+across resumes.  ``--redundancy r`` (projection family, either backend)
+replicates blocks r-redundantly for straggler tolerance, and
+``--straggler-sim RATE`` stalls one random worker per iteration with that
+probability — the run still matches the no-failure one exactly
+(``repro.solvers.redundant``).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.solve --problem std_gaussian \
@@ -23,7 +27,7 @@ import jax
 import numpy as np
 
 from repro import solvers
-from repro.core import coding, spectral
+from repro.core import spectral
 from repro.checkpoint import ckpt
 from repro.data import linsys
 from repro.launch import mesh as mesh_lib
@@ -39,7 +43,12 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=500)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--redundancy", type=int, default=1,
-                    help="r-redundant blocks for straggler tolerance (APC)")
+                    help="r-redundant blocks for straggler tolerance "
+                         "(projection-family methods, local or mesh)")
+    ap.add_argument("--straggler-sim", type=float, default=0.0,
+                    metavar="RATE",
+                    help="per-iteration probability that one random worker "
+                         "stalls (needs --redundancy >= 2 to stay covered)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true",
                     help="warm-start from the latest checkpoint in --ckpt-dir")
@@ -69,56 +78,70 @@ def main(argv=None):
              if rho is not None else ""))
 
     t0 = time.time()
-    if args.redundancy > 1:
-        if args.method != "apc":
-            ap.error("--redundancy runs the coded APC path; combine it only "
-                     "with --method apc")
-        if args.use_mesh:
-            ap.error("--redundancy and --use-mesh cannot be combined")
-        xbar, residuals = coding.solve_redundant(
-            sys_, args.redundancy, iters=args.iters,
-            gamma=params.get("gamma"), eta=params.get("eta"))
-        final_res = residuals[-1]
-    else:
-        # Single-host path: factorize once, the same factors serve the
-        # restore template and the solve.  Mesh path: factors stay None so
-        # the factorization happens on-mesh — except on resume, where the
-        # restore template forces a host prepare anyway, so those factors
-        # are handed to the backend instead of being recomputed.
-        factors = (None if args.use_mesh
-                   else solver.prepare(sys_.A_blocks, params))
-        warm = None
-        if args.resume:
-            if not args.ckpt_dir:
-                ap.error("--resume requires --ckpt-dir")
-            step = ckpt.latest_step(args.ckpt_dir)
-            if step is None:
-                print(f"WARNING: no checkpoint found in {args.ckpt_dir}; "
-                      "starting cold")
-            else:
-                if factors is None:
-                    factors = solver.prepare(sys_.A_blocks, params)
-                probe = solver.init(factors, sys_.b_blocks, params)
-                warm = ckpt.restore(args.ckpt_dir, probe)
-                print(f"resuming from checkpointed state at iter {step}")
-        if args.use_mesh:
-            mesh = mesh_lib.solver_mesh_for(sys_.m)
-            print(f"mesh backend: {tuple(mesh.shape.items())} over "
-                  f"{len(jax.devices())} device(s)")
-            res = solver.solve(sys_, iters=args.iters, backend="mesh",
-                               mesh=mesh, warm_state=warm, factors=factors,
-                               **params)
+    if args.redundancy > 1 and not solver.supports_redundancy:
+        ap.error(f"--redundancy needs a projection-family method "
+                 f"(apc/consensus/cimmino); {args.method!r} does not "
+                 "support redundant execution")
+    alive_schedule = None
+    if args.straggler_sim > 0.0:
+        if args.redundancy < 2:
+            ap.error("--straggler-sim needs --redundancy >= 2 (a stalled "
+                     "worker is unrecoverable without a redundant holder)")
+        rng = np.random.default_rng(args.seed)
+        m, rate = sys_.m, args.straggler_sim
+
+        def alive_schedule(t):
+            a = np.ones(m, bool)
+            if rng.random() < rate:
+                a[rng.integers(0, m)] = False
+            return a
+
+    # Single-host path: factorize once, the same factors serve the
+    # restore template and the solve (the redundant layer replicates them
+    # itself).  Mesh path: factors stay None so the factorization happens
+    # on-mesh — except on resume, where the restore template forces a host
+    # prepare anyway, so those factors are handed to the backend instead of
+    # being recomputed.
+    factors = (None if args.use_mesh
+               else solver.prepare(sys_.A_blocks, params))
+    warm = None
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume requires --ckpt-dir")
+        step = ckpt.latest_step(args.ckpt_dir)
+        if step is None:
+            print(f"WARNING: no checkpoint found in {args.ckpt_dir}; "
+                  "starting cold")
         else:
-            res = solver.solve(sys_, iters=args.iters, warm_state=warm,
-                               factors=factors, **params)
-        xbar, final_res = res.x, float(res.residuals[-1])
-        if res.iters_to_tol != -1:
-            print(f"reached residual < {res.tol:.0e} after "
-                  f"{res.iters_to_tol} iters")
-        if args.ckpt_dir:
-            total = int(res.state.t) if hasattr(res.state, "t") else args.iters
-            ckpt.save(args.ckpt_dir, total, res.state)
-            print(f"solver state checkpointed at iter {total}")
+            if factors is None:
+                factors = solver.prepare(sys_.A_blocks, params)
+            probe = solver.init(factors, sys_.b_blocks, params)
+            warm = ckpt.restore(args.ckpt_dir, probe)
+            print(f"resuming from checkpointed state at iter {step}")
+    if args.redundancy > 1:
+        print(f"redundant execution: r={args.redundancy}"
+              + (f", straggler rate {args.straggler_sim}"
+                 if args.straggler_sim else ", no simulated stragglers"))
+    if args.use_mesh:
+        mesh = mesh_lib.solver_mesh_for(sys_.m)
+        print(f"mesh backend: {tuple(mesh.shape.items())} over "
+              f"{len(jax.devices())} device(s)")
+        res = solver.solve(sys_, iters=args.iters, backend="mesh",
+                           mesh=mesh, warm_state=warm, factors=factors,
+                           redundancy=args.redundancy,
+                           alive_schedule=alive_schedule, **params)
+    else:
+        res = solver.solve(sys_, iters=args.iters, warm_state=warm,
+                           factors=factors, redundancy=args.redundancy,
+                           alive_schedule=alive_schedule, **params)
+    xbar, final_res = res.x, float(res.residuals[-1])
+    if res.iters_to_tol != -1:
+        print(f"reached residual < {res.tol:.0e} after "
+              f"{res.iters_to_tol} iters")
+    if args.ckpt_dir:
+        total = int(res.state.t) if hasattr(res.state, "t") else args.iters
+        ckpt.save(args.ckpt_dir, total, res.state)
+        print(f"solver state checkpointed at iter {total}")
 
     err = (float(np.linalg.norm(np.asarray(xbar) - np.asarray(sys_.x_true)) /
                  np.linalg.norm(np.asarray(sys_.x_true)))

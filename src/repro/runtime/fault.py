@@ -14,11 +14,15 @@ What runs where:
     for > ``timeout`` is marked dead; one slower than ``straggler_factor``×
     median is a straggler.
 
-  * **Straggler mitigation for APC** — with r-redundant blocks
-    (core/coding.py) an iteration closes as soon as a covering subset of
-    workers responded: the monitor produces the alive-mask, coding.py's
-    ``selection_weights`` reweights the master averaging.  Semantically
-    exact (see coding.py docstring), so convergence is unaffected.
+  * **Straggler mitigation** — with r-redundant blocks
+    (repro.solvers.redundant) an iteration closes as soon as a covering
+    subset of workers responded: the monitor produces the alive-mask,
+    ``redundant.selection_weights`` reweights the master averaging.
+    Semantically exact (see solvers/redundant.py docstring), so convergence
+    is unaffected.  ``solve(..., alive_schedule=monitor)`` accepts a
+    ``HeartbeatMonitor`` directly; its ``drop_set()`` is snapshotted when
+    the schedule is lowered at launch, so a long-running deployment keeps
+    masks fresh by solving in warm-started segments (one lowering each).
 
   * **Elastic re-mesh** — for LM training, device loss requires a new mesh:
     `ElasticPlan.shrink` computes the largest (data', model) mesh that fits
@@ -51,11 +55,31 @@ class HeartbeatMonitor:
 
     def beat(self, worker: int, now: Optional[float] = None,
              duration: Optional[float] = None):
+        """Record progress.  A beat never readmits an explicitly-dead
+        worker — its replicas may be stale, so readmission goes through the
+        ``rejoin`` resync handshake."""
         now = time.monotonic() if now is None else now
         self._last[worker] = now
         if duration is not None:
             self._durations[worker] = duration
-        self._dead.discard(worker)
+
+    def mark_dead(self, worker: int):
+        """Explicitly evict a worker (sticky until ``rejoin``)."""
+        self._dead.add(worker)
+
+    def sweep(self, now: Optional[float] = None) -> np.ndarray:
+        """Mark every timed-out worker dead and return the alive mask.
+
+        This is the explicit state transition that ``alive_mask`` used to
+        perform as a read side effect: once swept, a timed-out worker stays
+        dead (even if heartbeats resume) until it ``rejoin``s with a resync.
+        """
+        now = time.monotonic() if now is None else now
+        for w in range(self.n_workers):
+            last = self._last.get(w)
+            if last is None or now - last > self.timeout:
+                self._dead.add(w)
+        return self.alive_mask(now)
 
     def rejoin(self, worker: int, *, resynced: bool):
         """A dead worker may only rejoin after resyncing its block state."""
@@ -66,27 +90,49 @@ class HeartbeatMonitor:
         self._last[worker] = time.monotonic()
 
     def alive_mask(self, now: Optional[float] = None) -> np.ndarray:
+        """PURE read: alive = not explicitly dead AND beaten within timeout.
+
+        Two consecutive reads (same ``now``) always agree; death becomes
+        sticky only through the explicit ``mark_dead`` / ``sweep`` paths.
+        """
         now = time.monotonic() if now is None else now
         mask = np.ones(self.n_workers, dtype=bool)
         for w in range(self.n_workers):
             last = self._last.get(w)
             if w in self._dead or last is None or now - last > self.timeout:
                 mask[w] = False
-                self._dead.add(w)
         return mask
 
-    def stragglers(self) -> np.ndarray:
+    def stragglers(self, now: Optional[float] = None) -> np.ndarray:
+        """Live workers slower than ``straggler_factor`` x the live median.
+
+        Dead workers' stale durations are excluded from the median — one
+        dead-slow worker must not inflate it and mask live stragglers — and
+        a dead worker is never itself flagged (it is already excluded via
+        the alive mask).
+        """
+        now = time.monotonic() if now is None else now
+        alive = self.alive_mask(now)
         mask = np.zeros(self.n_workers, dtype=bool)
-        if len(self._durations) >= max(2, self.n_workers // 2):
-            med = float(np.median(list(self._durations.values())))
-            for w, d in self._durations.items():
+        live = {w: d for w, d in self._durations.items() if alive[w]}
+        # quorum over the LIVE fleet: a heavily degraded fleet must not
+        # lose straggler detection just because most workers are dead
+        if len(live) >= max(2, int(alive.sum()) // 2):
+            med = float(np.median(list(live.values())))
+            for w, d in live.items():
                 if d > self.straggler_factor * med:
                     mask[w] = True
         return mask
 
-    def drop_set(self) -> np.ndarray:
-        """Workers to exclude this iteration: dead OR straggling."""
-        return ~self.alive_mask() | self.stragglers()
+    def drop_set(self, now: Optional[float] = None) -> np.ndarray:
+        """Workers to exclude this iteration: dead OR straggling (pure).
+
+        ``now`` is resolved ONCE so both terms see the same instant — a
+        worker straddling the timeout boundary must not be alive in one
+        term and dead in the other within a single read.
+        """
+        now = time.monotonic() if now is None else now
+        return ~self.alive_mask(now) | self.stragglers(now)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,10 +159,11 @@ def covering_ok(alive: np.ndarray, r: int) -> bool:
     Block j is lost iff workers {j, j-1, ..., j-r+1 (mod m)} are all dead —
     i.e. r cyclically-consecutive failures.
     """
+    alive = np.asarray(alive, dtype=bool)
     m = len(alive)
-    dead = ~np.asarray(alive, dtype=bool)
+    dead = ~alive
     if r >= m:
-        return alive.any()
+        return bool(alive.any())
     run = 0
     # unwrap: scan 2m to catch wrap-around runs
     for i in range(2 * m):

@@ -21,8 +21,14 @@ Mesh execution (shard_map over a device mesh, any registered solver):
 
     res = solvers.get("apc").solve(sys, backend="mesh", mesh=mesh)
 
+Straggler-tolerant redundant execution (projection family, both backends):
+
+    res = solvers.get("apc").solve(sys, redundancy=2,
+                                   alive_schedule=lambda t: mask_t)
+
 See ``api.Solver`` for the protocol, ``registry.register`` for adding a
-new method, and ``mesh`` for the sharded backend.
+new method, ``mesh`` for the sharded backend, and ``redundant`` for the
+r-redundant straggler-tolerant layer.
 """
 from .api import Solver, SolveResult, iters_to_tolerance  # noqa: F401
 from .registry import available, get, register  # noqa: F401
@@ -30,3 +36,4 @@ from .registry import available, get, register  # noqa: F401
 # Importing the implementation modules populates the registry.
 from . import admm, gradient, projection  # noqa: F401, E402
 from . import mesh  # noqa: F401, E402  (the shard_map execution backend)
+from . import redundant  # noqa: F401, E402  (straggler-tolerant layer)

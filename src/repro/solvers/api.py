@@ -180,6 +180,64 @@ class Solver:
         """Strip host-only fields before reusing factors on the mesh."""
         return factors
 
+    # ----- redundancy hooks (see solvers/redundant.py) ---------------------
+    # Straggler-tolerant execution replicates the row blocks r-redundantly
+    # (cyclic assignment) and replaces the worker-axis reduction with a
+    # masked block-unique one.  ``red_step``/``red_init`` are written ONCE
+    # against the MeshContext psum contract: on the local backend the psums
+    # are identities, on backend="mesh" they are the usual collectives.
+    # Array layouts grow a slot axis: factors/b (m, r, ...), W is the
+    # (m, r) selection-weight mask for the iteration.
+
+    supports_redundancy: bool = False
+
+    def red_factors(self, factors: Any, assign) -> Any:
+        """Replicate b-independent factors along the cyclic assignment.
+
+        Default: gather every leaf's leading worker axis through
+        ``assign.holder`` — correct whenever all factor leaves are
+        per-worker (leading axis m)."""
+        return jax.tree.map(lambda f: jnp.asarray(f)[assign.holder], factors)
+
+    def red_init(self, factors: Any, b: jnp.ndarray,
+                 params: Dict[str, float], W0, ctx) -> Any:
+        """Initial GLOBAL-structure state from replicated factors/b and the
+        all-alive selection weights ``W0``."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement redundant execution")
+
+    def red_step(self, factors: Any, b: jnp.ndarray, state: Any,
+                 params: Dict[str, float], W, ctx) -> Any:
+        """One masked iteration: every replica updates, the master reduce
+        takes each block exactly once via ``W``."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement redundant execution")
+
+    def red_expand(self, state: Any, assign) -> Any:
+        """Lift a plain global-shape state to the replicated internal one
+        (exactness invariant: replicas are identical copies).  Default:
+        identity, for states with no per-block leaves."""
+        return state
+
+    def red_collapse(self, state: Any, assign) -> Any:
+        """Inverse of ``red_expand``: back to the plain global shape so
+        warm starts and checkpoints round-trip with non-redundant runs."""
+        return state
+
+    def red_factor_specs(self, ctx):
+        """Mesh placement of replicated factors: the slot axis is local to
+        its worker, so insert an unsharded dim after the worker axis."""
+        from jax.sharding import PartitionSpec as _P
+        return jax.tree.map(
+            lambda s: _P(tuple(s)[0], None, *tuple(s)[1:]),
+            self.mesh_factor_specs(ctx),
+            is_leaf=lambda s: isinstance(s, _P))
+
+    def red_state_specs(self, ctx):
+        """Mesh placement of the replicated internal state (defaults to the
+        plain state specs; override when state gains a slot axis)."""
+        return self.mesh_state_specs(ctx)
+
     # ----- shared drivers --------------------------------------------------
     def resolve_params(self, sys: BlockSystem, **overrides) -> Dict[str, float]:
         """Merge explicit overrides over the auto-tuned defaults.
@@ -217,6 +275,7 @@ class Solver:
               use_kernel: bool = False, warm_state: Any = None,
               factors: Any = None, backend: str = "local", mesh: Any = None,
               worker_axes=("data",), model_axis: Optional[str] = "model",
+              redundancy: int = 1, alive_schedule: Any = None,
               **params) -> SolveResult:
         """End-to-end solve: prepare -> init (or warm-start) -> scan steps.
 
@@ -228,7 +287,26 @@ class Solver:
         device mesh (``mesh=None`` builds one over the available devices);
         ``worker_axes``/``model_axis`` choose which mesh axes the row
         blocks and the n dimension shard over.
+
+        ``redundancy=r`` (projection family, both backends) replicates the
+        row blocks r-redundantly so iterations tolerate stragglers named by
+        ``alive_schedule`` (callable t -> (m,) mask, a mask array, or a
+        ``runtime.fault.HeartbeatMonitor``) with EXACT semantics — see
+        ``solvers/redundant.py``.
         """
+        if redundancy != 1 or alive_schedule is not None:
+            use_mesh = self._dispatch_mesh(backend, use_kernel, mesh)
+            if use_kernel:
+                raise ValueError(
+                    "use_kernel=True is not supported with redundant "
+                    "execution (the Pallas path has no replicated layout)")
+            from . import redundant as red_backend
+            return red_backend.solve_redundant(
+                self, sys, r=redundancy, iters=iters, tol=tol,
+                alive_schedule=alive_schedule, warm_state=warm_state,
+                factors=factors, backend="mesh" if use_mesh else "local",
+                mesh=mesh, worker_axes=worker_axes, model_axis=model_axis,
+                **params)
         if self._dispatch_mesh(backend, use_kernel, mesh):
             from . import mesh as mesh_backend
             return mesh_backend.solve_mesh(
@@ -257,6 +335,7 @@ class Solver:
                    factors: Any = None, backend: str = "local",
                    mesh: Any = None, worker_axes=("data",),
                    model_axis: Optional[str] = "model",
+                   redundancy: int = 1, alive_schedule: Any = None,
                    **params) -> SolveResult:
         """Batched multi-RHS solve sharing ONE ``prepare`` factorization.
 
@@ -264,6 +343,13 @@ class Solver:
         batched SolveResult: x (k, n), residuals (k, T), errors None.
         ``factors`` and ``backend``/``mesh`` behave as in ``solve``.
         """
+        if redundancy != 1 or alive_schedule is not None:
+            # fail loudly rather than let the kwargs fall into **params and
+            # run the batch withOUT the straggler tolerance it asked for
+            raise ValueError(
+                "redundant execution is not supported by solve_many; run "
+                "solve(redundancy=..., alive_schedule=...) per right-hand "
+                "side, or batch without redundancy")
         if self._dispatch_mesh(backend, use_kernel, mesh):
             from . import mesh as mesh_backend
             return mesh_backend.solve_many_mesh(

@@ -56,6 +56,11 @@ def _cho_solve_workers(chol, u):
         lambda Li, ui: jax.scipy.linalg.cho_solve((Li, True), ui))(chol, u)
 
 
+def _cho_solve_replicas(chol, u):
+    """Replicated form: leading (m, r) worker x slot axes."""
+    return jax.vmap(_cho_solve_workers)(chol, u)
+
+
 def _mesh_gram_chol(A, jitter: float, ctx):
     """Cholesky of the full Gram A_i A_i^T from column-sharded blocks."""
     G = ctx.psum_model(jnp.einsum("mpn,mqn->mpq", A, A))
@@ -148,6 +153,43 @@ class APCSolver(Solver):
         s = ctx.psum_workers(jnp.sum(x_new, axis=0))      # Eq. 2b psum
         xbar_new = (eta / m) * s + (1.0 - eta) * state.xbar
         return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
+
+    # ----- redundant execution (solvers/redundant.py) ---------------------
+    # Internal state keeps the APCState structure with x grown to the
+    # replicated (m, r, n) layout; xbar stays global.  Eq. 2b becomes the
+    # W-masked block-unique mean — the same worker-axis psum as above.
+    supports_redundancy = True
+
+    def red_init(self, factors, b, params, W0, ctx):
+        w = _cho_solve_replicas(factors.chol, b)
+        x0 = jnp.einsum("mrpn,mrp->mrn", factors.A, w)    # min-norm per slot
+        m = ctx.workers_total(x0.shape[0])
+        xbar0 = ctx.psum_workers(jnp.einsum("mr,mrn->n", W0, x0)) / m
+        return APCState(x=x0, xbar=xbar0, t=jnp.zeros((), jnp.int32))
+
+    def red_step(self, factors, b, state, params, W, ctx):
+        gamma, eta = params["gamma"], params["eta"]
+        d = state.xbar[None, None, :] - state.x           # (m, r, n)
+        u = ctx.psum_model(jnp.einsum("mrpn,mrn->mrp", factors.A, d))
+        w = _cho_solve_replicas(factors.chol, u)
+        proj = d - jnp.einsum("mrpn,mrp->mrn", factors.A, w)
+        x_new = state.x + gamma * proj                    # every replica
+        m = ctx.workers_total(x_new.shape[0])
+        s = ctx.psum_workers(jnp.einsum("mr,mrn->n", W, x_new))
+        xbar_new = (eta / m) * s + (1.0 - eta) * state.xbar
+        return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
+
+    def red_expand(self, state, assign):
+        x = jnp.asarray(state.x)
+        return APCState(x=x[assign.holder], xbar=jnp.asarray(state.xbar),
+                        t=state.t)
+
+    def red_collapse(self, state, assign):
+        # slot 0 of worker j holds block j, and replicas are identical
+        return APCState(x=state.x[:, 0], xbar=state.xbar, t=state.t)
+
+    def red_state_specs(self, ctx):
+        return APCState(x=P(ctx.w, None, ctx.n), xbar=P(ctx.n), t=P())
 
 
 @register("consensus")
@@ -249,5 +291,23 @@ class CimminoSolver(Solver):
         w = _cho_solve_workers(factors.chol, b - u)       # G^{-1}(b - A xbar)
         r = jnp.einsum("mpn,mp->mn", factors.A, w)        # row projections
         s = ctx.psum_workers(jnp.sum(r, axis=0))
+        return CimminoState(xbar=state.xbar + params["nu"] * s,
+                            t=state.t + 1)
+
+    # ----- redundant execution (solvers/redundant.py) ---------------------
+    # State is the master estimate alone (already global-shaped): the
+    # masked sum of row projections replaces the plain worker-axis sum.
+    supports_redundancy = True
+
+    def red_init(self, factors, b, params, W0, ctx):
+        return CimminoState(xbar=jnp.zeros(factors.A.shape[3],
+                                           factors.A.dtype),
+                            t=jnp.zeros((), jnp.int32))
+
+    def red_step(self, factors, b, state, params, W, ctx):
+        u = ctx.psum_model(jnp.einsum("mrpn,n->mrp", factors.A, state.xbar))
+        w = _cho_solve_replicas(factors.chol, b - u)
+        r = jnp.einsum("mrpn,mrp->mrn", factors.A, w)     # row projections
+        s = ctx.psum_workers(jnp.einsum("mr,mrn->n", W, r))
         return CimminoState(xbar=state.xbar + params["nu"] * s,
                             t=state.t + 1)

@@ -1,4 +1,11 @@
-"""Straggler-tolerant r-redundant APC (core/coding.py, runtime/fault.py)."""
+"""Straggler-tolerant r-redundant APC (core/coding.py, runtime/fault.py).
+
+core/coding.py is now a deprecated shim over repro.solvers.redundant; the
+tests here pin the shim's legacy surface and the fault runtime.  The full
+redundant-execution contract is covered in tests/test_redundant.py.
+"""
+import inspect
+
 import numpy as np
 import pytest
 
@@ -58,6 +65,15 @@ def test_straggler_run_matches_no_straggler(sys_):
     assert res2[-1] < 1e-8
 
 
+def test_solve_redundant_seed_param_removed(sys_):
+    """Regression: the old ``seed`` parameter was accepted and documented
+    but never used (init is the deterministic min-norm solution); it is
+    gone rather than silently ignored."""
+    assert "seed" not in inspect.signature(coding.solve_redundant).parameters
+    with pytest.raises(TypeError):
+        coding.solve_redundant(sys_, 2, iters=1, seed=0)
+
+
 def test_heartbeat_monitor():
     mon = fault.HeartbeatMonitor(n_workers=4, timeout=5.0)
     for w in range(4):
@@ -77,6 +93,78 @@ def test_straggler_detection():
         mon.beat(w, duration=1.0 if w else 10.0)   # worker 0 is 10x median
     s = mon.stragglers()
     assert s[0] and not s[1:].any()
+
+
+def test_dead_worker_excluded_from_straggler_median():
+    """A dead-slow worker's stale duration must not inflate the median and
+    mask a live straggler."""
+    mon = fault.HeartbeatMonitor(n_workers=4, timeout=5.0,
+                                 straggler_factor=3.0)
+    mon.beat(0, now=100.0, duration=100.0)   # slow worker, then dies
+    mon.beat(1, now=108.0, duration=5.0)     # live straggler
+    mon.beat(2, now=108.0, duration=1.0)
+    mon.beat(3, now=108.0, duration=1.0)
+    s = mon.stragglers(now=110.0)            # worker 0 timed out by now
+    # live median is 1.0 -> worker 1 (5x) is flagged; with the dead
+    # worker's 100.0 left in, the median was 3.0 and 5.0 slipped under
+    # the 3x threshold.  The dead worker itself is never flagged.
+    assert s[1] and not s[0] and not s[2:].any()
+    assert mon.drop_set(now=110.0).tolist() == [True, True, False, False]
+
+
+def test_straggler_quorum_counts_live_workers():
+    """Detection must stay active in a heavily degraded fleet: the quorum
+    is over LIVE workers, not the full fleet size."""
+    mon = fault.HeartbeatMonitor(n_workers=8, timeout=5.0,
+                                 straggler_factor=3.0)
+    for w in range(5):                       # 5 workers die
+        mon.beat(w, now=0.0, duration=1.0)
+    mon.beat(5, now=100.0, duration=1.0)
+    mon.beat(6, now=100.0, duration=1.0)
+    mon.beat(7, now=100.0, duration=50.0)    # live straggler
+    s = mon.stragglers(now=101.0)            # 3 live < 8 // 2 = 4: with a
+    assert s[7] and not s[:7].any()          # fleet-size quorum this is off
+
+
+def test_alive_mask_reads_are_pure():
+    """Reads never mutate _dead: a timed-out worker that resumes beating
+    is alive again, while an explicit sweep() makes death sticky until the
+    rejoin resync handshake."""
+    mon = fault.HeartbeatMonitor(n_workers=2, timeout=5.0)
+    mon.beat(0, now=0.0)
+    mon.beat(1, now=8.0)
+    m1 = mon.alive_mask(now=10.0)
+    m2 = mon.alive_mask(now=10.0)            # consecutive reads agree
+    assert m1.tolist() == m2.tolist() == [False, True]
+    mon.beat(0, now=11.0)                    # the read had no side effect,
+    assert mon.alive_mask(now=12.0)[0]       # so a fresh beat readmits
+    mon.sweep(now=20.0)                      # both silent > timeout: sticky
+    mon.beat(0, now=21.0)
+    mon.beat(1, now=21.0)
+    assert not mon.alive_mask(now=22.0).any()   # beats do not resurrect
+    mon.rejoin(0, resynced=True)
+    assert mon.alive_mask()[0] and not mon.alive_mask()[1]
+
+
+def test_mark_dead_is_explicit_and_sticky():
+    mon = fault.HeartbeatMonitor(n_workers=3, timeout=5.0)
+    for w in range(3):
+        mon.beat(w, now=0.0)
+    mon.mark_dead(2)
+    assert mon.alive_mask(now=1.0).tolist() == [True, True, False]
+    mon.beat(2, now=2.0)                     # heartbeat alone: still dead
+    assert not mon.alive_mask(now=2.5)[2]
+    mon.rejoin(2, resynced=True)
+    assert mon.alive_mask()[2]
+
+
+def test_covering_ok_accepts_plain_lists():
+    """Regression: the r >= m branch crashed with AttributeError on a
+    plain-list mask (``alive.any()`` before np.asarray)."""
+    assert fault.covering_ok([True, False, False], r=3) is True
+    assert fault.covering_ok([False, False, False], r=3) is False
+    assert fault.covering_ok([True, False, True, True], r=2) is True
+    assert fault.covering_ok([False, False, True, True], r=2) is False
 
 
 def test_elastic_plan():
