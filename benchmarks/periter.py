@@ -14,6 +14,7 @@ import jax
 
 from repro import solvers
 from repro.data import linsys
+from repro.solvers.store import FactorStore
 
 
 def _time(fn, *args, iters=50, warmup=3):
@@ -30,21 +31,24 @@ def _time(fn, *args, iters=50, warmup=3):
 def run(verbose: bool = True, n: int = 512, m: int = 4):
     jax.config.update("jax_enable_x64", True)
     sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=50.0, seed=0)
+    store = FactorStore(capacity=len(solvers.available()) + 1)
     rows = []
 
     for name in solvers.available():
         s = solvers.get(name)
         prm = s.resolve_params(sys_)
-        factors = s.prepare(sys_.A_blocks, prm)
+        factors = store.factors(s, sys_, **prm)
         state = s.init(factors, sys_.b_blocks, prm)
         step = jax.jit(lambda st, _f=factors, _p=prm, _s=s: _s.step(
             _f, sys_.b_blocks, st, _p))
         rows.append((f"periter/{name}", _time(step, state), f"n={n};m={m}"))
 
-    # Pallas kernel path, interpret mode (functional check, not TPU perf)
+    # Pallas kernel path, interpret mode (functional check, not TPU perf);
+    # use_kernel=True hands back pinv-augmented factors so the step takes
+    # the actual kernel fast path
     s = solvers.get("apc")
     prm = {"gamma": 1.3, "eta": 1.2}
-    factors = s.prepare(sys_.A_blocks, prm)
+    factors = store.factors(s, sys_, use_kernel=True, **prm)
     state = s.init(factors, sys_.b_blocks, prm)
     stepk = jax.jit(lambda st: s.step(factors, sys_.b_blocks, st, prm,
                                       use_kernel=True))

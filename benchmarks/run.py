@@ -10,7 +10,7 @@ import sys
 import time
 
 from benchmarks import batch_rhs, fig2_decay, mesh_scaling, periter, \
-    roofline, straggler, table1_rates, table2_times
+    roofline, serve_traffic, straggler, table1_rates, table2_times
 
 SUITES = {
     "table1": table1_rates,
@@ -20,6 +20,7 @@ SUITES = {
     "batch_rhs": batch_rhs,
     "mesh_scaling": mesh_scaling,
     "straggler": straggler,
+    "serve_traffic": serve_traffic,
     "roofline": roofline,
 }
 

@@ -1,0 +1,104 @@
+"""Serve-traffic benchmark: cold vs warm-cache request latency + steady
+state through ``LinsysServer``.
+
+What the factor-store/serving subsystem claims, measured:
+
+  * COLD request latency — the first batch for a system pays the
+    one-time b-independent ``prepare`` (a store miss) AND the executor
+    compile.  WARM latency — every later same-system batch is a store
+    hit on an already-compiled executor, so only the per-RHS iterations
+    remain.  The paper's cost split (expensive projection/factorization
+    phase, cheap per-RHS iterations) is exactly this amortization; the
+    acceptance bar is warm >= 5x below cold.
+  * ZERO retraces in steady state — the compile-once executor cache is
+    keyed by (solver, shapes, params, backend), so the jit cache size
+    must be CONSTANT across the last K batches (asserted when the
+    running jax can report it).
+  * Steady-state throughput in RHS/s, padding excluded.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data import linsys
+from repro.solvers.serve import LinsysServer
+from repro.solvers.store import FactorStore
+
+ITERS = 150
+BATCH = 4
+WARM_BATCHES = 8    # per system, after the cold one
+TAIL_K = 5          # jit cache must be constant across the last K batches
+
+
+def _serve_one_batch(srv, fp, N, rng):
+    for _ in range(BATCH):
+        srv.submit(fp, rng.standard_normal(N))
+    t0 = time.perf_counter()
+    served = srv.step()
+    dt = time.perf_counter() - t0
+    assert len(served) == BATCH
+    return dt
+
+
+def run(verbose: bool = True, n: int = 256, m: int = 4):
+    jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    systems = [linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=s)
+               for s in (0, 1)]
+    store = FactorStore()
+    srv = LinsysServer(store, solver="apc", iters=ITERS, batch=BATCH,
+                       # shared explicit params -> ONE executor for both
+                       # systems, so system 2's cold batch isolates the
+                       # prepare cost from the compile cost
+                       gamma=1.0, eta=1.0)
+    fps = [srv.register(s) for s in systems]
+
+    t_cold = _serve_one_batch(srv, fps[0], systems[0].N, rng)   # miss+compile
+    t_cold2 = _serve_one_batch(srv, fps[1], systems[1].N, rng)  # miss only
+
+    warm, cache_sizes = [], []
+    for i in range(WARM_BATCHES):
+        fp, sys_ = fps[i % 2], systems[i % 2]
+        warm.append(_serve_one_batch(srv, fp, sys_.N, rng))
+        cache_sizes.append(srv.jit_cache_size())
+    t_warm = float(np.median(warm))
+
+    speedup = t_cold / t_warm
+    tail = cache_sizes[-TAIL_K:]
+    steady = (-1 in tail) or len(set(tail)) == 1
+    assert steady, f"jit cache grew across steady-state batches: {tail}"
+    assert speedup >= 5.0, (
+        f"warm-cache batch only {speedup:.1f}x faster than cold "
+        f"({t_cold * 1e3:.1f} ms vs {t_warm * 1e3:.1f} ms)")
+    assert store.stats.misses == 2 and store.stats.hits >= WARM_BATCHES
+
+    rhs_per_s = BATCH / t_warm              # full batches: no padding
+    retraces = "unknown" if -1 in tail else 0
+    rows = [
+        ("serve_traffic/cold_batch", t_cold * 1e6,
+         f"n={n};m={m};prepare+compile;batch={BATCH}"),
+        ("serve_traffic/cold_batch_prepare_only", t_cold2 * 1e6,
+         "2nd system reuses the compiled executor"),
+        ("serve_traffic/warm_batch", t_warm * 1e6,
+         f"speedup={speedup:.1f}x;retraces={retraces};"
+         f"rhs_per_s={rhs_per_s:.1f}"),
+    ]
+    if verbose:
+        print(f"cold  {t_cold * 1e3:8.1f} ms   (prepare + compile)")
+        print(f"cold2 {t_cold2 * 1e3:8.1f} ms   (prepare only, executor "
+              f"shared)")
+        print(f"warm  {t_warm * 1e3:8.1f} ms   ({speedup:.1f}x, "
+              f"{rhs_per_s:.1f} RHS/s, jit cache {tail})")
+        print(f"store {store.stats}")
+    return rows
+
+
+def csv_rows():
+    return run(verbose=False)
+
+
+if __name__ == "__main__":
+    run()

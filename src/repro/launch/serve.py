@@ -22,27 +22,31 @@ import numpy as np
 from repro import configs
 from repro.launch import mesh as mesh_lib
 from repro.models import model, sharding
+# the queue semantics are shared with the linear-system request server
+# (solvers/serve.py owns them now; re-exported here for compatibility)
+from repro.solvers.serve import take_group  # noqa: F401
 
 
-def take_group(queue, batch: int):
-    """Pop the next slot group off the request queue, FIFO.
+def make_decode(cfg, rules):
+    """Compile-once greedy decode step.
 
-    Returns ``(group, n_real)``: up to ``batch`` requests in arrival order,
-    padded by repeating the last one so the compiled batch shape is stable.
-    Only ``n_real`` requests were actually served — padding must never be
-    counted in throughput.
+    Built OUTSIDE the per-batch loop: a ``jax.jit`` created inside
+    ``generate_batch`` would be a fresh wrapper per batch, so every batch
+    would retrace — hoisting it here keeps one jit cache across the whole
+    serving run.
     """
-    if batch < 1:
-        raise ValueError(f"batch must be >= 1, got {batch}")
-    n_real = min(batch, len(queue))
-    group = [queue.popleft() for _ in range(n_real)]
-    while group and len(group) < batch:
-        group.append(group[-1])
-    return group, n_real
+    return jax.jit(lambda p, t, c, l: model.decode_step(
+        cfg, p, t, c, l, rules=rules))
 
 
-def generate_batch(cfg, params, prompts, max_new: int, rules, extra=None):
-    """Greedy-decode a batch of same-length prompts.  Returns (B, max_new)."""
+def generate_batch(cfg, params, prompts, max_new: int, rules, extra=None,
+                   decode=None):
+    """Greedy-decode a batch of same-length prompts.  Returns (B, max_new).
+
+    Pass ``decode`` (from ``make_decode``) to reuse one jitted decode step
+    across batches; omitting it builds a throwaway wrapper (fine for a
+    single call, a retrace-per-batch bug inside a serving loop).
+    """
     B, S = prompts.shape
     cache = model.init_cache(cfg, B, S + max_new,
                              jnp.dtype(cfg.dtype))
@@ -52,8 +56,8 @@ def generate_batch(cfg, params, prompts, max_new: int, rules, extra=None):
     logits, cache = model.prefill(cfg, params, batch, cache, rules=rules)
     out = []
     tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1)
-    decode = jax.jit(lambda p, t, c, l: model.decode_step(
-        cfg, p, t, c, l, rules=rules))
+    if decode is None:
+        decode = make_decode(cfg, rules)
     for i in range(max_new):
         out.append(tok)
         logits, cache = decode(params, tok, cache,
@@ -90,12 +94,13 @@ def main(argv=None):
             (args.batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
 
     done, t0 = 0, time.time()
+    decode = make_decode(cfg, rules)        # ONE jit across all batches
     with mesh:
         while queue:
             group, n_real = take_group(queue, args.batch)
             prompts = jnp.asarray(np.stack(group), jnp.int32)
             toks = generate_batch(cfg, params, prompts, args.max_new, rules,
-                                  extra)
+                                  extra, decode=decode)
             done += n_real                      # padding is not traffic
             print(f"batch of {n_real} (+{len(group) - n_real} pad): "
                   f"generated {toks.shape[1]} tokens each; "

@@ -50,6 +50,10 @@ def main(argv=None):
                     help="per-iteration probability that one random worker "
                          "stalls (needs --redundancy >= 2 to stay covered)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--store-dir", default=None,
+                    help="disk tier for the factor store — cached "
+                         "factorizations survive restarts, so a resumed "
+                         "run's prepare becomes a disk hit")
     ap.add_argument("--resume", action="store_true",
                     help="warm-start from the latest checkpoint in --ckpt-dir")
     ap.add_argument("--use-mesh", action="store_true",
@@ -96,14 +100,14 @@ def main(argv=None):
                 a[rng.integers(0, m)] = False
             return a
 
-    # Single-host path: factorize once, the same factors serve the
-    # restore template and the solve (the redundant layer replicates them
-    # itself).  Mesh path: factors stay None so the factorization happens
-    # on-mesh — except on resume, where the restore template forces a host
-    # prepare anyway, so those factors are handed to the backend instead of
-    # being recomputed.
-    factors = (None if args.use_mesh
-               else solver.prepare(sys_.A_blocks, params))
+    # ALL factor acquisition goes through the content-addressed store:
+    # the solve's `factors is None` branch is a cache lookup (memory LRU +
+    # the --store-dir disk tier), the resume path reuses the SAME entry
+    # for its restore template, and both backends accept the host factors
+    # (the redundant layer replicates them itself).  A resume that has to
+    # re-prepare is counted as a cache miss (store.stats.resume_misses)
+    # instead of silently repaying the b-independent work.
+    store = solvers.FactorStore(directory=args.store_dir)
     warm = None
     if args.resume:
         if not args.ckpt_dir:
@@ -113,11 +117,11 @@ def main(argv=None):
             print(f"WARNING: no checkpoint found in {args.ckpt_dir}; "
                   "starting cold")
         else:
-            if factors is None:
-                factors = solver.prepare(sys_.A_blocks, params)
+            factors = store.factors(solver, sys_, resume=True, **params)
             probe = solver.init(factors, sys_.b_blocks, params)
             warm = ckpt.restore(args.ckpt_dir, probe)
-            print(f"resuming from checkpointed state at iter {step}")
+            print(f"resuming from checkpointed state at iter {step} "
+                  f"(factor store: {store.stats})")
     if args.redundancy > 1:
         print(f"redundant execution: r={args.redundancy}"
               + (f", straggler rate {args.straggler_sim}"
@@ -127,12 +131,12 @@ def main(argv=None):
         print(f"mesh backend: {tuple(mesh.shape.items())} over "
               f"{len(jax.devices())} device(s)")
         res = solver.solve(sys_, iters=args.iters, backend="mesh",
-                           mesh=mesh, warm_state=warm, factors=factors,
+                           mesh=mesh, warm_state=warm, store=store,
                            redundancy=args.redundancy,
                            alive_schedule=alive_schedule, **params)
     else:
         res = solver.solve(sys_, iters=args.iters, warm_state=warm,
-                           factors=factors, redundancy=args.redundancy,
+                           store=store, redundancy=args.redundancy,
                            alive_schedule=alive_schedule, **params)
     xbar, final_res = res.x, float(res.residuals[-1])
     if res.iters_to_tol != -1:

@@ -26,9 +26,16 @@ Straggler-tolerant redundant execution (projection family, both backends):
     res = solvers.get("apc").solve(sys, redundancy=2,
                                    alive_schedule=lambda t: mask_t)
 
+Cached factorizations + request serving (the serve-traffic hot path):
+
+    store = solvers.FactorStore(directory="/ckpt/factors")
+    res = solvers.get("apc").solve(sys, store=store)     # hit after 1st
+    srv = solvers.LinsysServer(store, solver="apc", batch=4)
+
 See ``api.Solver`` for the protocol, ``registry.register`` for adding a
-new method, ``mesh`` for the sharded backend, and ``redundant`` for the
-r-redundant straggler-tolerant layer.
+new method, ``mesh`` for the sharded backend, ``redundant`` for the
+r-redundant straggler-tolerant layer, ``store`` for the content-addressed
+factor cache, and ``serve`` for the linear-system request server.
 """
 from .api import Solver, SolveResult, iters_to_tolerance  # noqa: F401
 from .registry import available, get, register  # noqa: F401
@@ -37,3 +44,5 @@ from .registry import available, get, register  # noqa: F401
 from . import admm, gradient, projection  # noqa: F401, E402
 from . import mesh  # noqa: F401, E402  (the shard_map execution backend)
 from . import redundant  # noqa: F401, E402  (straggler-tolerant layer)
+from .store import FactorStore, fingerprint  # noqa: F401, E402
+from .serve import LinsysServer  # noqa: F401, E402

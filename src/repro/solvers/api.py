@@ -36,6 +36,7 @@ two backends.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -43,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition import BlockSystem
+
+log = logging.getLogger("repro.solvers")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +98,13 @@ class Solver:
     paper_name: str = ""           # display name used in the paper's tables
     supports_kernel: bool = False  # Pallas block-projection path available
     param_names: Tuple[str, ...] = ()
+    # A prior state is a valid warm start for a DIFFERENT right-hand side:
+    # the iteration re-reads b every step and the state caches nothing
+    # RHS-dependent.  True for the gradient family and Cimmino; False for
+    # APC (iterates stay feasible for the OLD b), M-ADMM (caches A^T b),
+    # and P-DHBM (caches S b).  The serving layer gates perturbed-RHS warm
+    # starts on this flag.
+    warm_rhs_ok: bool = False
 
     # ----- lifecycle hooks (override) -------------------------------------
     def default_params(self, sys: BlockSystem) -> Dict[str, float]:
@@ -139,7 +149,12 @@ class Solver:
         """Augment factors with kernel-path precomputation (pinv factors).
 
         Called once per solve when ``use_kernel=True`` so per-step code
-        never refactorizes iteration-invariant quantities.
+        never refactorizes iteration-invariant quantities.  MUST be
+        idempotent: implementations detect already-augmented factors (or
+        tag them) and return them unchanged, so cached or user-supplied
+        factors passed back into ``solve(use_kernel=True)`` are never
+        re-augmented — the ``FactorStore`` relies on this to write the
+        augmentation back into the cache slot exactly once.
         """
         return factors
 
@@ -271,17 +286,35 @@ class Solver:
                              "backend (the Pallas path is single-device)")
         return True
 
+    def _store_factors(self, store, sys, factors, params, *,
+                       use_kernel: bool = False, resume: bool = False):
+        """Route the ``factors is None`` branch through a ``FactorStore``.
+
+        Returns ``(factors, params)`` with params fully resolved when the
+        store was consulted (so downstream ``resolve_params`` calls are
+        cheap no-ops and the store key matches what actually runs).
+        """
+        if factors is not None or store is None:
+            return factors, params
+        prm = self.resolve_params(sys, **params)
+        return store.factors(self, sys, use_kernel=use_kernel,
+                             resume=resume, **prm), prm
+
     def solve(self, sys: BlockSystem, *, iters: int = 1000, tol: float = 1e-6,
               use_kernel: bool = False, warm_state: Any = None,
-              factors: Any = None, backend: str = "local", mesh: Any = None,
+              factors: Any = None, store: Any = None,
+              backend: str = "local", mesh: Any = None,
               worker_axes=("data",), model_axis: Optional[str] = "model",
               redundancy: int = 1, alive_schedule: Any = None,
               **params) -> SolveResult:
         """End-to-end solve: prepare -> init (or warm-start) -> scan steps.
 
         Pass ``factors`` (from an earlier ``prepare`` with the same params)
-        to skip the one-time factorization — cached-factor serving and the
-        checkpoint-resume driver use this.
+        to skip the one-time factorization, or — better — a ``store``
+        (``solvers.FactorStore``): the ``factors is None`` branch is then a
+        content-addressed cache lookup (memory LRU, optional disk tier)
+        instead of an unconditional re-``prepare``.  Cached-factor serving
+        (``solvers.serve``) and the checkpoint-resume driver use these.
 
         ``backend="mesh"`` runs the identical lifecycle sharded over a
         device mesh (``mesh=None`` builds one over the available devices);
@@ -294,12 +327,15 @@ class Solver:
         ``runtime.fault.HeartbeatMonitor``) with EXACT semantics — see
         ``solvers/redundant.py``.
         """
+        resume = warm_state is not None
         if redundancy != 1 or alive_schedule is not None:
             use_mesh = self._dispatch_mesh(backend, use_kernel, mesh)
             if use_kernel:
                 raise ValueError(
                     "use_kernel=True is not supported with redundant "
                     "execution (the Pallas path has no replicated layout)")
+            factors, params = self._store_factors(store, sys, factors,
+                                                  params, resume=resume)
             from . import redundant as red_backend
             return red_backend.solve_redundant(
                 self, sys, r=redundancy, iters=iters, tol=tol,
@@ -308,15 +344,32 @@ class Solver:
                 mesh=mesh, worker_axes=worker_axes, model_axis=model_axis,
                 **params)
         if self._dispatch_mesh(backend, use_kernel, mesh):
+            # the store is threaded INTO the backend: a miss there runs
+            # the on-mesh sharded mesh_prepare (no host factorization)
+            # and inserts the result, so hits flow both ways
             from . import mesh as mesh_backend
             return mesh_backend.solve_mesh(
                 self, sys, mesh=mesh, iters=iters, tol=tol,
                 worker_axes=worker_axes, model_axis=model_axis,
-                warm_state=warm_state, factors=factors, **params)
+                warm_state=warm_state, factors=factors, store=store,
+                **params)
         self._check_kernel(use_kernel)
         prm = self.resolve_params(sys, **params)
         if factors is None:
-            factors = self.prepare(sys.A_blocks, prm)
+            if store is not None:
+                factors = store.factors(self, sys, use_kernel=use_kernel,
+                                        resume=resume, **prm)
+            else:
+                if resume:
+                    # a warm-start resume silently repaying the full
+                    # b-independent prepare is the cost a FactorStore
+                    # exists to amortize — make it visible
+                    log.info(
+                        "solve(warm_state=...) without cached factors: "
+                        "re-running the full prepare for %r (pass store= "
+                        "to count and amortize this as a cache miss)",
+                        self.name)
+                factors = self.prepare(sys.A_blocks, prm)
         if use_kernel:
             factors = self.kernel_factors(factors)
         state = (self.init(factors, sys.b_blocks, prm)
@@ -332,7 +385,8 @@ class Solver:
 
     def solve_many(self, sys: BlockSystem, B, *, iters: int = 1000,
                    tol: float = 1e-6, use_kernel: bool = False,
-                   factors: Any = None, backend: str = "local",
+                   factors: Any = None, store: Any = None,
+                   backend: str = "local",
                    mesh: Any = None, worker_axes=("data",),
                    model_axis: Optional[str] = "model",
                    redundancy: int = 1, alive_schedule: Any = None,
@@ -341,7 +395,8 @@ class Solver:
 
         ``B`` is (k, N) — k right-hand sides for the same A.  Returns a
         batched SolveResult: x (k, n), residuals (k, T), errors None.
-        ``factors`` and ``backend``/``mesh`` behave as in ``solve``.
+        ``factors``/``store`` and ``backend``/``mesh`` behave as in
+        ``solve``.
         """
         if redundancy != 1 or alive_schedule is not None:
             # fail loudly rather than let the kwargs fall into **params and
@@ -355,7 +410,7 @@ class Solver:
             return mesh_backend.solve_many_mesh(
                 self, sys, B, mesh=mesh, iters=iters, tol=tol,
                 worker_axes=worker_axes, model_axis=model_axis,
-                factors=factors, **params)
+                factors=factors, store=store, **params)
         self._check_kernel(use_kernel)
         B = jnp.asarray(B)
         if B.ndim == 1:
@@ -366,7 +421,11 @@ class Solver:
         Bb = B.reshape(k, sys.m, sys.p)
         prm = self.resolve_params(sys, **params)
         if factors is None:
-            factors = self.prepare(sys.A_blocks, prm)      # once, shared
+            if store is not None:
+                factors = store.factors(self, sys, use_kernel=use_kernel,
+                                        **prm)
+            else:
+                factors = self.prepare(sys.A_blocks, prm)  # once, shared
         if use_kernel:
             factors = self.kernel_factors(factors)
         states = jax.vmap(lambda b: self.init(factors, b, prm))(Bb)

@@ -45,7 +45,13 @@ class _GradientSolver(Solver):
     (1/2)||Cx-d||^2 over the blocks from ``_blocks``/``_rhs`` and hand it
     to the per-solver ``_update`` — so the single-host and mesh backends
     share the update math verbatim.
+
+    The iteration re-reads b every step, so a prior state warm-starts a
+    PERTURBED right-hand side too (``warm_rhs_ok``) — except P-DHBM,
+    whose state caches the transformed RHS S b (overridden below).
     """
+
+    warm_rhs_ok = True
 
     def prepare(self, A, params):
         return GradFactors(A=A)
@@ -211,6 +217,7 @@ class PDHBMSolver(DHBMSolver):
 
     paper_name = "P-DHBM"
     param_names = ("alpha", "beta")
+    warm_rhs_ok = False     # state caches S b — stale under a new RHS
 
     def analyze(self, sys: BlockSystem):
         X = spectral.x_matrix(sys)

@@ -143,18 +143,31 @@ def _batched_specs(specs: Any) -> Any:
                         is_leaf=lambda s: isinstance(s, P))
 
 
-def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors):
-    """Shard A/b, run on-mesh prepare (unless factors are given)."""
+def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors,
+           store=None, resume: bool = False):
+    """Shard A/b, run on-mesh prepare (unless factors are given).
+
+    With a ``store``, the ``factors is None`` branch becomes a cache
+    lookup; a MISS still runs the on-mesh sharded ``mesh_prepare`` (no
+    host ever factorizes the full A) and the result is inserted back, so
+    later solves — either backend — hit it.  An entry therefore holds
+    whichever mathematically-equivalent factorization first populated it
+    (host or on-mesh prepare; for most solvers they are bit-identical).
+    """
     mesh = ctx.mesh
     A_spec, b_spec = P(ctx.w, None, ctx.n), P(ctx.w, None)
     fspecs = solver.mesh_factor_specs(ctx)
     A = jax.device_put(sys.A_blocks, NamedSharding(mesh, A_spec))
     b = jax.device_put(sys.b_blocks, NamedSharding(mesh, b_spec))
+    if factors is None and store is not None:
+        factors = store.lookup(solver, sys, **prm)
     if factors is None:
         prep = jax.jit(shard_map(
             lambda A_: solver.mesh_prepare(A_, prm, ctx), mesh=mesh,
             in_specs=(A_spec,), out_specs=fspecs))
         factors = prep(A)
+        if store is not None:
+            store.insert(solver, sys, factors, resume=resume, **prm)
     else:
         factors = _put_tree(solver.mesh_factors(factors), fspecs, mesh)
     return A, b, A_spec, b_spec, fspecs, factors
@@ -179,15 +192,16 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                   worker_axes: Sequence[str] = ("data",),
                   model_axis: Optional[str] = "model",
                   warm_state: Any = None, factors: Any = None,
-                  **params) -> CompiledSolve:
+                  store: Any = None, **params) -> CompiledSolve:
     """Placement + on-mesh setup + the jitted scan, without executing it."""
     if mesh is None:
         mesh = _default_mesh(sys.m)
     ctx = make_context(mesh, sys, worker_axes=worker_axes,
                        model_axis=model_axis)
     prm = solver.resolve_params(sys, **params)
-    A, b, A_spec, b_spec, fspecs, factors = _place(solver, sys, ctx, prm,
-                                                   factors)
+    A, b, A_spec, b_spec, fspecs, factors = _place(
+        solver, sys, ctx, prm, factors, store=store,
+        resume=warm_state is not None)
     sspecs = solver.mesh_state_specs(ctx)
 
     if warm_state is None:
@@ -236,7 +250,7 @@ def solve_mesh(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                worker_axes: Sequence[str] = ("data",),
                model_axis: Optional[str] = "model",
                warm_state: Any = None, factors: Any = None,
-               **params) -> SolveResult:
+               store: Any = None, **params) -> SolveResult:
     """Sharded ``solve``: the mesh twin of ``Solver.solve``.
 
     Returns the same ``SolveResult`` (full residual/error history,
@@ -244,7 +258,8 @@ def solve_mesh(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
     """
     cs = compile_solve(solver, sys, mesh=mesh, iters=iters,
                        worker_axes=worker_axes, model_axis=model_axis,
-                       warm_state=warm_state, factors=factors, **params)
+                       warm_state=warm_state, factors=factors, store=store,
+                       **params)
     state, res, err = cs.run(*cs.args)
     return SolveResult(
         name=solver.name, x=solver.extract(state), state=state,
@@ -252,37 +267,42 @@ def solve_mesh(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
         params=cs.params, iters_to_tol=iters_to_tolerance(res, tol), tol=tol)
 
 
-def solve_many_mesh(solver, sys: BlockSystem, B, *,
-                    mesh: Optional[Mesh] = None, iters: int = 1000,
-                    tol: float = 1e-6,
-                    worker_axes: Sequence[str] = ("data",),
-                    model_axis: Optional[str] = "model",
-                    factors: Any = None, **params) -> SolveResult:
-    """Sharded multi-RHS solve: one on-mesh factorization, k right-hand
-    sides vmapped inside the shard_map body (batch axis replicated)."""
-    if mesh is None:
-        mesh = _default_mesh(sys.m)
-    ctx = make_context(mesh, sys, worker_axes=worker_axes,
-                       model_axis=model_axis)
-    B = jnp.asarray(B)
-    if B.ndim == 1:
-        B = B[None, :]
-    if B.shape[-1] != sys.N:
-        raise ValueError(f"RHS batch has {B.shape[-1]} rows, need N={sys.N}")
-    k = B.shape[0]
-    prm = solver.resolve_params(sys, **params)
-    A, _, A_spec, _, fspecs, factors = _place(solver, sys, ctx, prm, factors)
-    sspecs = _batched_specs(solver.mesh_state_specs(ctx))
+class BatchedRunner(NamedTuple):
+    """Compile-once batched executor for one (solver, params, mesh) config.
 
-    Bb_spec = P(None, ctx.w, None)
-    Bb = jax.device_put(B.reshape(k, sys.m, sys.p),
-                        NamedSharding(mesh, Bb_spec))
+    ``init``/``run`` are jitted shard_map callables over PLACED arrays —
+    calling them repeatedly with same-shape/same-sharding arguments never
+    retraces, which is what lets ``solvers.serve.LinsysServer`` keep a
+    steady-state serving loop at zero retraces.  ``cache_size()`` exposes
+    the underlying jit caches so benchmarks can assert exactly that.
+    """
+    init: Any           # (factors, Bb)            -> states
+    run: Any            # (A, Bb, factors, states) -> (states, X, res (k,T))
+    A_spec: Any
+    Bb_spec: Any
+    factor_specs: Any
+    state_specs: Any
+
+    def cache_size(self) -> int:
+        sizes = [getattr(f, "_cache_size", lambda: -1)()
+                 for f in (self.init, self.run)]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+
+def batched_runner(solver, ctx: MeshContext, prm, iters: int) -> BatchedRunner:
+    """Build the jitted multi-RHS init/run pair shared by ``solve_many_mesh``
+    and the serving layer.  Nothing system-specific is baked in beyond the
+    params and the mesh context: A / b / factors / states are arguments, so
+    one runner serves every same-shape system."""
+    mesh = ctx.mesh
+    A_spec, Bb_spec = P(ctx.w, None, ctx.n), P(None, ctx.w, None)
+    fspecs = solver.mesh_factor_specs(ctx)
+    sspecs = _batched_specs(solver.mesh_state_specs(ctx))
 
     init_fn = jax.jit(shard_map(
         lambda f, Bb_: jax.vmap(
             lambda bb: solver.mesh_init(f, bb, prm, ctx))(Bb_),
         mesh=mesh, in_specs=(fspecs, Bb_spec), out_specs=sspecs))
-    states = init_fn(factors, Bb)
 
     def run_body(A_, Bb_, f_, s_):
         b_norms = jnp.sqrt(ctx.psum_workers(jnp.sum(Bb_ * Bb_, axis=(1, 2))))
@@ -297,13 +317,44 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
             return sts, res
 
         s_, res = jax.lax.scan(body, s_, None, length=iters)
-        return s_, res.T                                       # (k, T)
+        return s_, jax.vmap(solver.extract)(s_), res.T         # (k, T)
 
     run = jax.jit(shard_map(run_body, mesh=mesh,
                             in_specs=(A_spec, Bb_spec, fspecs, sspecs),
-                            out_specs=(sspecs, P())))
-    states, res = run(A, Bb, factors, states)
-    X = jax.vmap(solver.extract)(states)
+                            out_specs=(sspecs, P(None, ctx.n), P())))
+    return BatchedRunner(init=init_fn, run=run, A_spec=A_spec,
+                         Bb_spec=Bb_spec, factor_specs=fspecs,
+                         state_specs=sspecs)
+
+
+def solve_many_mesh(solver, sys: BlockSystem, B, *,
+                    mesh: Optional[Mesh] = None, iters: int = 1000,
+                    tol: float = 1e-6,
+                    worker_axes: Sequence[str] = ("data",),
+                    model_axis: Optional[str] = "model",
+                    factors: Any = None, store: Any = None,
+                    **params) -> SolveResult:
+    """Sharded multi-RHS solve: one on-mesh factorization, k right-hand
+    sides vmapped inside the shard_map body (batch axis replicated)."""
+    if mesh is None:
+        mesh = _default_mesh(sys.m)
+    ctx = make_context(mesh, sys, worker_axes=worker_axes,
+                       model_axis=model_axis)
+    B = jnp.asarray(B)
+    if B.ndim == 1:
+        B = B[None, :]
+    if B.shape[-1] != sys.N:
+        raise ValueError(f"RHS batch has {B.shape[-1]} rows, need N={sys.N}")
+    k = B.shape[0]
+    prm = solver.resolve_params(sys, **params)
+    A, _, _, _, _, factors = _place(solver, sys, ctx, prm, factors,
+                                    store=store)
+    runner = batched_runner(solver, ctx, prm, iters)
+
+    Bb = jax.device_put(B.reshape(k, sys.m, sys.p),
+                        NamedSharding(mesh, runner.Bb_spec))
+    states = runner.init(factors, Bb)
+    states, X, res = runner.run(A, Bb, factors, states)
     return SolveResult(
         name=solver.name, x=X, state=states, residuals=res, errors=None,
         params=prm, iters_to_tol=iters_to_tolerance(res, tol), tol=tol)

@@ -222,6 +222,9 @@ class CimminoSolver(Solver):
     paper_name = "B-Cimmino"
     supports_kernel = True
     param_names = ("nu",)
+    # state is the master estimate alone and b enters every step, so a
+    # prior state warm-starts perturbed right-hand sides too
+    warm_rhs_ok = True
 
     def default_params(self, sys: BlockSystem):
         return self.analyze(sys)[0]

@@ -1,0 +1,332 @@
+"""Linear-system request server on the unified solver API.
+
+``LinsysServer`` turns the paper's cost split into a serving loop: a
+stream of ``(system_fingerprint, rhs)`` requests is coalesced into
+same-system ``solve_many`` batches, every factorization comes from a
+content-addressed ``FactorStore`` (memory LRU + optional disk tier), and a
+compile-once executor cache keyed by (solver, shapes, params, backend)
+means steady-state serving never retraces.
+
+    store = FactorStore(directory="/ckpt/factors")
+    srv = LinsysServer(store, solver="apc", iters=500, batch=4)
+    fp = srv.register(sys)                      # fingerprint the system
+    srv.submit(fp, b1); srv.submit(fp, b2)      # enqueue right-hand sides
+    for served in srv.drain():                  # FIFO, coalesced batches
+        served.x, served.residual
+
+Batching follows the LM serving driver's queue semantics (``take_group``
+lives here and ``repro.launch.serve`` imports it): groups are FIFO, a
+short final group is padded by repeating the last request so the compiled
+batch shape stays stable, and padding is NEVER counted in throughput.
+
+Warm starts (``warm_start=True``): a system's previous batch state seeds
+the next one.  Repeated right-hand sides always qualify (that is exactly
+``solve(warm_state=...)`` resume); PERTURBED right-hand sides only
+qualify for solvers whose iteration re-reads b every step and whose state
+caches nothing RHS-dependent (``Solver.warm_rhs_ok`` — the gradient
+family and Cimmino; APC iterates stay feasible for the OLD b, and
+M-ADMM / P-DHBM cache transformed right-hand sides in their state, so the
+server silently falls back to a cold init for them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.core.partition import BlockSystem
+
+from .api import _history_scan_many, iters_to_tolerance
+from .store import FactorStore
+
+
+def take_group(queue, batch: int):
+    """Pop the next slot group off the request queue, FIFO.
+
+    Returns ``(group, n_real)``: up to ``batch`` requests in arrival order,
+    padded by repeating the last one so the compiled batch shape is stable.
+    Only ``n_real`` requests were actually served — padding must never be
+    counted in throughput.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    n_real = min(batch, len(queue))
+    group = [queue.popleft() for _ in range(n_real)]
+    while group and len(group) < batch:
+        group.append(group[-1])
+    return group, n_real
+
+
+class Request(NamedTuple):
+    rid: int            # server-assigned id, arrival order
+    fp: str             # system fingerprint (FactorStore key)
+    rhs: np.ndarray     # (N,) right-hand side
+
+
+class Served(NamedTuple):
+    """Per-request result handed back by ``step``/``drain``."""
+    rid: int
+    fp: str
+    x: np.ndarray       # (n,) solution estimate
+    residual: float     # final relative residual ||Ax-b||/||b||
+    iters_to_tol: int   # -1 sentinel = tolerance never reached
+    warm: bool          # batch was warm-started from a prior state
+
+
+@dataclasses.dataclass
+class ServerStats:
+    served: int = 0             # real requests completed (padding excluded)
+    padded: int = 0             # pad slots run (never counted as traffic)
+    batches: int = 0
+    warm_batches: int = 0
+    executor_builds: int = 0    # compile-once cache misses
+
+
+@dataclasses.dataclass
+class _System:
+    """Per-registered-system serving state."""
+    sys: BlockSystem
+    prm: Dict[str, float]
+    dtype: Any                      # A's dtype, read once at register()
+    executor_key: Tuple             # compile-once cache key, built once
+    A_placed: Any = None            # backend-placed A blocks
+    factors_placed: Any = None      # backend-placed factors
+    placed_src: Any = None          # host factors the placement came from
+    last_states: Any = None         # prior batch's final states (warm start)
+    last_Bb: Optional[np.ndarray] = None
+
+
+class _LocalExecutor:
+    """Compile-once single-host executor: jitted init+scan over a padded
+    (batch, m, p) RHS block.  One instance serves every system that shares
+    its (shapes, params) key."""
+
+    def __init__(self, solver, prm, iters: int):
+        def _run(A, factors, Bb, states):
+            step = lambda f, b, s: solver.step(f, b, s, prm)
+            states, res = _history_scan_many(step, solver.extract, factors,
+                                             Bb, states, A, iters)
+            return states, jax.vmap(solver.extract)(states), res
+
+        def _cold(A, factors, Bb):
+            states = jax.vmap(lambda b: solver.init(factors, b, prm))(Bb)
+            return _run(A, factors, Bb, states)
+
+        self._cold = jax.jit(_cold)
+        self._warm = jax.jit(_run)
+
+    def place_system(self, sys: BlockSystem, factors):
+        return sys.A_blocks, factors
+
+    def place_B(self, Bb: np.ndarray):
+        return jnp.asarray(Bb)
+
+    def run(self, A, factors, Bb, states=None):
+        if states is None:
+            return self._cold(A, factors, Bb)
+        return self._warm(A, factors, Bb, states)
+
+    def cache_size(self) -> int:
+        sizes = [getattr(f, "_cache_size", lambda: -1)()
+                 for f in (self._cold, self._warm)]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+
+class _MeshExecutor:
+    """Mesh twin: wraps ``mesh.batched_runner`` and owns placement."""
+
+    def __init__(self, solver, prm, iters: int, sys: BlockSystem,
+                 mesh, worker_axes, model_axis):
+        from . import mesh as mesh_backend
+        self.solver = solver
+        self.mesh = mesh if mesh is not None \
+            else mesh_backend._default_mesh(sys.m)
+        self.ctx = mesh_backend.make_context(
+            self.mesh, sys, worker_axes=worker_axes, model_axis=model_axis)
+        self.runner = mesh_backend.batched_runner(solver, self.ctx, prm,
+                                                  iters)
+
+    def place_system(self, sys: BlockSystem, factors):
+        from . import mesh as mesh_backend
+        A = jax.device_put(sys.A_blocks,
+                           NamedSharding(self.mesh, self.runner.A_spec))
+        f = mesh_backend._put_tree(self.solver.mesh_factors(factors),
+                                   self.runner.factor_specs, self.mesh)
+        return A, f
+
+    def place_B(self, Bb: np.ndarray):
+        return jax.device_put(jnp.asarray(Bb),
+                              NamedSharding(self.mesh, self.runner.Bb_spec))
+
+    def run(self, A, factors, Bb, states=None):
+        if states is None:
+            states = self.runner.init(factors, Bb)
+        return self.runner.run(A, Bb, factors, states)
+
+    def cache_size(self) -> int:
+        return self.runner.cache_size()
+
+
+class LinsysServer:
+    """Batched linear-system serving on the unified solver lifecycle.
+
+    Requests for the SAME system (by content fingerprint) are coalesced
+    into ``solve_many`` batches; the oldest pending request picks which
+    system is served next, so no system starves while coalescing still
+    fills batches.  All factor acquisition goes through the
+    ``FactorStore`` — the first request for a system pays ``prepare``
+    (a store miss, or a disk hit after a restart), every later one is a
+    cache hit.
+    """
+
+    def __init__(self, store: Optional[FactorStore] = None, *,
+                 solver="apc", iters: int = 500, tol: float = 1e-6,
+                 batch: int = 4, backend: str = "local", mesh=None,
+                 warm_start: bool = False,
+                 worker_axes: Sequence[str] = ("data",),
+                 model_axis: Optional[str] = "model", **params):
+        if backend not in ("local", "mesh"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             "expected 'local' or 'mesh'")
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        from .registry import get
+        self.store = store if store is not None else FactorStore()
+        self.solver = get(solver) if isinstance(solver, str) else solver
+        self.iters, self.tol, self.batch = iters, tol, batch
+        self.backend, self.mesh = backend, mesh
+        self.warm_start = warm_start
+        self.worker_axes, self.model_axis = tuple(worker_axes), model_axis
+        self.params = params
+        self.stats = ServerStats()
+        self._systems: Dict[str, _System] = {}
+        self._queues: Dict[str, deque] = {}
+        self._executors: Dict[Tuple, Any] = {}
+        self._rid = 0
+
+    # ----- request intake ---------------------------------------------------
+    def register(self, sys: BlockSystem, **params) -> str:
+        """Fingerprint ``sys`` and make it servable.  Factors are NOT
+        prefetched — the first request pays the store miss (or disk hit),
+        which is what the cold/warm benchmarks measure.  Per-register
+        ``params`` override the server-level ones key by key."""
+        prm = self.solver.resolve_params(sys, **{**self.params, **params})
+        fp = self.store.key(self.solver, sys, **prm)
+        dtype = sys.A_blocks.dtype
+        executor_key = (self.solver.name, sys.m, sys.p, sys.n, str(dtype),
+                        tuple(sorted(prm.items())), self.backend,
+                        self.batch, self.iters)
+        self._systems[fp] = _System(sys=sys, prm=prm, dtype=dtype,
+                                    executor_key=executor_key)
+        self._queues.setdefault(fp, deque())
+        return fp
+
+    def submit(self, fp: str, rhs) -> int:
+        """Enqueue one right-hand side for a registered system."""
+        ent = self._systems.get(fp)
+        if ent is None:
+            raise KeyError(f"unknown system fingerprint {fp[:16]}...; "
+                           "register() the system first")
+        rhs = np.asarray(rhs, dtype=ent.dtype)
+        if rhs.shape != (ent.sys.N,):
+            raise ValueError(f"rhs has shape {rhs.shape}, need "
+                             f"({ent.sys.N},) for this system")
+        rid = self._rid
+        self._rid += 1
+        self._queues[fp].append(Request(rid=rid, fp=fp, rhs=rhs))
+        return rid
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ----- executors (compile-once cache) -----------------------------------
+    def _executor(self, ent: _System):
+        key = ent.executor_key
+        ex = self._executors.get(key)
+        if ex is None:
+            self.stats.executor_builds += 1
+            if self.backend == "mesh":
+                ex = _MeshExecutor(self.solver, ent.prm, self.iters,
+                                   ent.sys, self.mesh, self.worker_axes,
+                                   self.model_axis)
+            else:
+                ex = _LocalExecutor(self.solver, ent.prm, self.iters)
+            self._executors[key] = ex
+        return ex
+
+    def jit_cache_size(self) -> int:
+        """Total jit-cache entries across executors (-1 if the running
+        jax cannot report it).  Constant across batches == zero retraces."""
+        sizes = [ex.cache_size() for ex in self._executors.values()]
+        if not sizes:
+            return 0
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
+    # ----- serving ----------------------------------------------------------
+    def _warm_ok(self, ent: _System, Bb: np.ndarray) -> bool:
+        if not self.warm_start or ent.last_states is None \
+                or ent.last_Bb is None:
+            return False
+        if np.array_equal(ent.last_Bb, Bb):
+            return True                       # repeated RHS: plain resume
+        return bool(getattr(self.solver, "warm_rhs_ok", False))
+
+    def step(self):
+        """Serve ONE coalesced batch (the oldest pending request's system).
+
+        Returns the list of ``Served`` results for the REAL requests in
+        the batch ([] when nothing is pending).
+        """
+        # oldest pending request picks the system; coalescing then fills
+        # the batch with that system's next requests (which may have
+        # arrived later than other systems' — that is the point)
+        pending = [(q[0].rid, fp) for fp, q in self._queues.items() if q]
+        if not pending:
+            return []
+        fp = min(pending)[1]
+        ent = self._systems[fp]
+        group, n_real = take_group(self._queues[fp], self.batch)
+
+        # every factor acquisition goes through the store (hit after the
+        # first batch; key precomputed at register() so no re-hash of A)
+        factors = self.store.factors(self.solver, ent.sys, key=fp,
+                                     **ent.prm)
+        ex = self._executor(ent)
+        if ent.placed_src is not factors:     # first batch / post-eviction
+            ent.A_placed, ent.factors_placed = ex.place_system(ent.sys,
+                                                               factors)
+            ent.placed_src = factors
+
+        Bb = np.stack([r.rhs for r in group]).reshape(
+            len(group), ent.sys.m, ent.sys.p)
+        warm = self._warm_ok(ent, Bb)
+        states, X, res = ex.run(ent.A_placed, ent.factors_placed,
+                                ex.place_B(Bb),
+                                ent.last_states if warm else None)
+        ent.last_states, ent.last_Bb = states, Bb
+
+        self.stats.batches += 1
+        self.stats.served += n_real
+        self.stats.padded += len(group) - n_real
+        self.stats.warm_batches += int(warm)
+        X = np.asarray(X)
+        res = np.asarray(res)
+        to_tol = np.atleast_1d(iters_to_tolerance(res, self.tol))
+        return [Served(rid=r.rid, fp=fp, x=X[i],
+                       residual=float(res[i, -1]),
+                       iters_to_tol=int(to_tol[i]), warm=warm)
+                for i, r in enumerate(group[:n_real])]
+
+    def drain(self):
+        """Serve until every queue is empty; results in served order."""
+        out = []
+        while True:
+            batch = self.step()
+            if not batch:
+                return out
+            out.extend(batch)

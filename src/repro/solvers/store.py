@@ -1,0 +1,345 @@
+"""Content-addressed factor store: cached one-time factorizations.
+
+The paper's cost split — an expensive b-INDEPENDENT ``prepare`` (Gram
+Cholesky factors, preconditioners) followed by cheap per-RHS iterations —
+is exactly what serve traffic amortizes.  This module makes that explicit:
+``FactorStore`` is the ONE way any driver, benchmark, or example obtains
+factors.
+
+    store = FactorStore(capacity=8, directory="/ckpt/factors")
+    factors = store.factors(solvers.get("apc"), sys, **params)
+    store.stats            # hits / disk_hits / misses / evictions / ...
+
+Systems are fingerprinted by a sha256 over the A-blocks' CONTENT, the
+partition (m, p, n), the dtype, the solver name, and the resolved
+parameters — so a hit is bit-equivalent to re-running ``prepare``, never a
+lookup on an object identity that might alias a different system.
+
+Two tiers:
+
+  * memory — an LRU of device factors (capacity entries, per-store);
+  * disk (optional) — every miss is persisted using the checkpoint
+    layout from ``repro.checkpoint.ckpt`` (tmp dir -> leaf_*.npy +
+    manifest.json + COMMIT marker -> atomic ``os.replace``), so
+    factorizations survive restarts and a cold process warm-starts from
+    disk.  The manifest is validated on load (solver / partition / dtype /
+    leaf shapes) and drift fails LOUDLY — a silently-cast factor makes a
+    resumed solve diverge from the uninterrupted one.
+
+Factors obtained here round-trip both backends: the mesh path accepts
+host factors (``Solver.mesh_factors`` strips host-only fields before
+placement) and the redundant layer replicates them itself.
+
+Kernel path: ``factors(..., use_kernel=True)`` augments the cached entry
+with the pinv precomputation ONCE (``Solver.kernel_factors`` is
+idempotent — it detects already-augmented factors) and writes the
+augmented factors back into the cache slot, so repeated kernel solves on
+a hit never re-run the augmentation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import importlib
+import json
+import logging
+import os
+import shutil
+from collections import OrderedDict
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import COMMIT
+from repro.core.partition import BlockSystem
+
+log = logging.getLogger("repro.solvers.store")
+
+
+def fingerprint(solver_name: str, sys: BlockSystem,
+                params: Dict[str, Any]) -> str:
+    """Content hash identifying (A-blocks, partition, solver, params).
+
+    Everything ``prepare`` can depend on is in the digest; b is NOT — the
+    factorization is b-independent by the lifecycle contract, so one entry
+    serves every right-hand side of the same system.
+    """
+    A = np.asarray(jax.device_get(sys.A_blocks))
+    h = hashlib.sha256()
+    h.update(f"solver={solver_name}".encode())
+    h.update(f"partition={tuple(A.shape)}".encode())
+    h.update(f"dtype={A.dtype}".encode())
+    for k in sorted(params):
+        try:
+            # normalize numeric types: 1.3, np.float64(1.3) and a jax
+            # scalar must hash identically or cross-call-path lookups
+            # (auto-tuned vs hand-passed params) silently always miss
+            v = repr(float(params[k]))
+        except (TypeError, ValueError):
+            v = repr(params[k])
+        h.update(f"param:{k}={v}".encode())
+    h.update(np.ascontiguousarray(A).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Running counters; ``hits``/``disk_hits`` vs ``misses`` is the
+    serve-traffic amortization the benchmarks report."""
+    hits: int = 0           # in-memory LRU hits
+    disk_hits: int = 0      # restored from the disk tier
+    misses: int = 0         # full ``prepare`` re-runs
+    evictions: int = 0      # LRU drops (memory tier only)
+    disk_writes: int = 0    # entries persisted
+    resume_misses: int = 0  # misses during a warm-start resume (visible
+                            # cost that used to be silent — see api.solve)
+
+    @property
+    def total_hits(self) -> int:
+        return self.hits + self.disk_hits
+
+
+# ---------------------------------------------------------------------------
+# Pytree (de)serialization for the disk tier.  Factor pytrees are
+# NamedTuples / tuples / dicts of arrays with optional None fields; the
+# structure is recorded in the manifest so a COLD process can restore an
+# entry without re-running ``prepare`` to obtain a template.
+# ---------------------------------------------------------------------------
+
+
+def _encode(node: Any, leaves: list) -> Any:
+    if node is None:
+        return {"kind": "none"}
+    if hasattr(node, "_fields"):                       # NamedTuple
+        cls = type(node)
+        return {"kind": "namedtuple",
+                "cls": f"{cls.__module__}:{cls.__qualname__}",
+                "fields": [[f, _encode(getattr(node, f), leaves)]
+                           for f in node._fields]}
+    if isinstance(node, dict):
+        return {"kind": "dict",
+                "items": [[k, _encode(v, leaves)]
+                          for k, v in sorted(node.items())]}
+    if isinstance(node, (list, tuple)):
+        return {"kind": "list" if isinstance(node, list) else "tuple",
+                "items": [_encode(v, leaves) for v in node]}
+    leaves.append(np.asarray(jax.device_get(node)))
+    return {"kind": "leaf", "index": len(leaves) - 1}
+
+
+def _decode(spec: Any, leaves: list) -> Any:
+    kind = spec["kind"]
+    if kind == "none":
+        return None
+    if kind == "leaf":
+        return jnp.asarray(leaves[spec["index"]])
+    if kind == "namedtuple":
+        mod, qual = spec["cls"].split(":")
+        cls: Any = importlib.import_module(mod)
+        for part in qual.split("."):
+            cls = getattr(cls, part)
+        return cls(**{f: _decode(s, leaves) for f, s in spec["fields"]})
+    if kind == "dict":
+        return {k: _decode(s, leaves) for k, s in spec["items"]}
+    if kind in ("list", "tuple"):
+        items = [_decode(s, leaves) for s in spec["items"]]
+        return items if kind == "list" else tuple(items)
+    raise ValueError(f"unknown factor-structure node kind {kind!r}")
+
+
+class FactorStore:
+    """Content-addressed cache of b-independent solver factorizations.
+
+    ``factors(solver, sys, **params)`` is the one entry point; drivers
+    pass the store down via ``Solver.solve(..., store=...)``.
+    """
+
+    def __init__(self, capacity: int = 8,
+                 directory: Optional[str] = None) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.directory = directory
+        self.stats = StoreStats()
+        self._mem: "OrderedDict[str, Any]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._mem
+
+    def clear(self) -> None:
+        """Drop the memory tier (the disk tier, if any, is untouched)."""
+        self._mem.clear()
+
+    # ----- keys ------------------------------------------------------------
+    @staticmethod
+    def _as_solver(solver):
+        if isinstance(solver, str):
+            from .registry import get
+            return get(solver)
+        return solver
+
+    def key(self, solver, sys: BlockSystem, **params) -> str:
+        """The content-addressed key a ``factors`` call would use."""
+        solver = self._as_solver(solver)
+        prm = solver.resolve_params(sys, **params)
+        return fingerprint(solver.name, sys, prm)
+
+    # ----- the one way to obtain factors ------------------------------------
+    def factors(self, solver, sys: BlockSystem, *, use_kernel: bool = False,
+                resume: bool = False, key: Optional[str] = None, **params):
+        """Cached ``solver.prepare(sys.A_blocks, params)``.
+
+        Lookup order: memory LRU -> disk tier -> full ``prepare`` (counted
+        as a miss; persisted when a ``directory`` is configured).  Pass a
+        precomputed ``key`` (from ``self.key``) to skip re-hashing A on
+        hot serving paths.  ``resume=True`` marks the call as part of a
+        warm-start resume so a miss there is counted separately — resume
+        cost should be visible, not silent.
+        """
+        solver = self._as_solver(solver)
+        prm = solver.resolve_params(sys, **params)
+        if key is None:
+            key = fingerprint(solver.name, sys, prm)
+        factors = self.lookup(solver, sys, key=key, **prm)
+        if factors is None:
+            factors = self.insert(solver, sys,
+                                  solver.prepare(sys.A_blocks, prm),
+                                  resume=resume, key=key, **prm)
+        if use_kernel:
+            augmented = solver.kernel_factors(factors)
+            if augmented is not factors:
+                # augment ONCE per entry; later hits get the augmented
+                # factors back and kernel_factors detects them (idempotent)
+                self._mem[key] = augmented
+            factors = augmented
+        return factors
+
+    def lookup(self, solver, sys: BlockSystem, *,
+               key: Optional[str] = None, **params):
+        """Memory/disk lookup that does NOT prepare on a miss (returns
+        None instead).  Backends whose factorization should not run on
+        the host (the mesh backend prepares on-mesh under shard_map) use
+        this + ``insert`` so a miss is repaid THEIR way while hits and
+        persistence still flow through the store."""
+        solver = self._as_solver(solver)
+        if key is None:
+            prm = solver.resolve_params(sys, **params)
+            key = fingerprint(solver.name, sys, prm)
+        factors = self._mem.get(key)
+        if factors is not None:
+            self._mem.move_to_end(key)
+            self.stats.hits += 1
+            return factors
+        factors = self._disk_load(key, solver, sys)
+        if factors is not None:
+            self.stats.disk_hits += 1
+            self._insert(key, factors)
+            return factors
+        return None
+
+    def insert(self, solver, sys: BlockSystem, factors, *,
+               resume: bool = False, key: Optional[str] = None, **params):
+        """Record a caller-prepared factorization: counts the miss the
+        caller just repaid, persists to the disk tier, and caches it."""
+        solver = self._as_solver(solver)
+        prm = solver.resolve_params(sys, **params)
+        if key is None:
+            key = fingerprint(solver.name, sys, prm)
+        self.stats.misses += 1
+        if resume:
+            self.stats.resume_misses += 1
+            log.warning(
+                "factor-store MISS during warm-start resume: re-running "
+                "the full b-independent prepare for solver %r (configure "
+                "a disk tier to amortize resumes across processes)",
+                solver.name)
+        self._disk_store(key, solver, sys, prm, factors)
+        self._insert(key, factors)
+        return factors
+
+    def _insert(self, key: str, factors: Any) -> None:
+        self._mem[key] = factors
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.stats.evictions += 1
+
+    # ----- disk tier --------------------------------------------------------
+    def _entry_dir(self, key: str) -> str:
+        return os.path.join(self.directory, key)
+
+    def _disk_store(self, key: str, solver, sys: BlockSystem,
+                    prm: Dict[str, Any], factors: Any) -> None:
+        if self.directory is None:
+            return
+        os.makedirs(self.directory, exist_ok=True)
+        tmp = os.path.join(self.directory, f"tmp.{key}")
+        final = self._entry_dir(key)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves: list = []
+        structure = _encode(factors, leaves)
+        manifest = {
+            "key": key,
+            "solver": solver.name,
+            "partition": [sys.m, sys.p, sys.n],
+            "dtype": str(np.asarray(sys.A_blocks).dtype),
+            "params": {k: float(v) for k, v in prm.items()},
+            "structure": structure,
+            "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                       for l in leaves],
+        }
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, COMMIT), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self.stats.disk_writes += 1
+
+    def _disk_load(self, key: str, solver, sys: BlockSystem) -> Any:
+        """Restore a committed entry, failing LOUDLY on manifest drift."""
+        if self.directory is None:
+            return None
+        path = self._entry_dir(key)
+        if not os.path.exists(os.path.join(path, COMMIT)):
+            return None
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        want_part = [sys.m, sys.p, sys.n]
+        want_dtype = str(np.asarray(sys.A_blocks).dtype)
+        if manifest.get("solver") != solver.name:
+            raise ValueError(
+                f"factor-store manifest drift at {path}: entry was written "
+                f"by solver {manifest.get('solver')!r}, requested "
+                f"{solver.name!r}")
+        if list(manifest.get("partition", [])) != want_part:
+            raise ValueError(
+                f"factor-store manifest drift at {path}: partition "
+                f"{manifest.get('partition')} != running {want_part} — was "
+                f"the system re-partitioned since the entry was written?")
+        if manifest.get("dtype") != want_dtype:
+            raise ValueError(
+                f"factor-store manifest drift at {path}: dtype "
+                f"{manifest.get('dtype')} != running {want_dtype} — was the "
+                f"x64 flag changed since the entry was written?")
+        leaves = []
+        for i, ref in enumerate(manifest["leaves"]):
+            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            if list(arr.shape) != list(ref["shape"]) \
+                    or str(arr.dtype) != ref["dtype"]:
+                raise ValueError(
+                    f"factor-store entry corrupt at {path}: leaf {i} is "
+                    f"{arr.shape}/{arr.dtype}, manifest says "
+                    f"{ref['shape']}/{ref['dtype']}")
+            leaves.append(arr)
+        return _decode(manifest["structure"], leaves)

@@ -1,0 +1,289 @@
+"""FactorStore: content addressing, LRU, disk persistence, drift rejection.
+
+The serving contract under test: a store hit must be indistinguishable —
+BIT-exact — from re-running ``prepare``, across processes (disk tier) and
+across backends (local and mesh), and any manifest drift must fail loudly
+instead of silently casting.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.data import linsys
+from repro.solvers.store import FactorStore, fingerprint
+
+
+@pytest.fixture(scope="module")
+def sys_a():
+    return linsys.conditioned_gaussian(n=48, m=4, cond=10.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def sys_b():
+    return linsys.conditioned_gaussian(n=48, m=4, cond=10.0, seed=1)
+
+
+def _tree_equal(t1, t2):
+    import jax
+    l1, d1 = jax.tree.flatten(t1)
+    l2, d2 = jax.tree.flatten(t2)
+    return d1 == d2 and all(
+        np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(l1, l2))
+
+
+# ---------------------------------------------------------------------------
+# fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_is_content_addressed(sys_a, sys_b):
+    prm = {"gamma": 1.0, "eta": 1.0}
+    k = fingerprint("apc", sys_a, prm)
+    assert k == fingerprint("apc", sys_a, prm)            # deterministic
+    assert k != fingerprint("apc", sys_b, prm)            # different A
+    assert k != fingerprint("cimmino", sys_a, prm)        # different solver
+    assert k != fingerprint("apc", sys_a, {"gamma": 1.5, "eta": 1.0})
+
+
+def test_fingerprint_normalizes_numeric_param_types(sys_a):
+    # auto-tuned params arrive as numpy scalars, hand-passed ones as
+    # Python floats — they must hash identically or disk entries written
+    # by one call path are never hit by the other
+    k_py = fingerprint("apc", sys_a, {"gamma": 1.25, "eta": 1.5})
+    k_np = fingerprint("apc", sys_a, {"gamma": np.float64(1.25),
+                                      "eta": np.float64(1.5)})
+    assert k_py == k_np
+
+
+def test_fingerprint_sees_partition_not_just_content(sys_a):
+    from repro.core.partition import partition
+    A, b = sys_a.dense()
+    re2 = partition(A, b, 2, x_true=sys_a.x_true)         # same A, m=2
+    prm = {"gamma": 1.0, "eta": 1.0}
+    assert fingerprint("apc", sys_a, prm) != fingerprint("apc", re2, prm)
+
+
+# ---------------------------------------------------------------------------
+# memory tier
+# ---------------------------------------------------------------------------
+
+
+def test_memory_hit_returns_same_object(sys_a):
+    store = FactorStore()
+    s = solvers.get("apc")
+    f1 = store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    f2 = store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    assert f2 is f1
+    assert store.stats.misses == 1 and store.stats.hits == 1
+
+
+def test_lru_eviction(sys_a, sys_b):
+    store = FactorStore(capacity=1)
+    s = solvers.get("apc")
+    store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    store.factors(s, sys_b, gamma=1.0, eta=1.0)           # evicts sys_a
+    assert len(store) == 1 and store.stats.evictions == 1
+    store.factors(s, sys_a, gamma=1.0, eta=1.0)           # miss again
+    assert store.stats.misses == 3 and store.stats.hits == 0
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        FactorStore(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# kernel-path augmentation is idempotent and cached
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_factors_idempotent(sys_a):
+    s = solvers.get("apc")
+    prm = {"gamma": 1.0, "eta": 1.0}
+    f = s.prepare(sys_a.A_blocks, prm)
+    aug = s.kernel_factors(f)
+    assert aug.B is not None
+    assert s.kernel_factors(aug) is aug                   # detect, no re-run
+
+
+def test_store_augments_entry_once(sys_a):
+    store = FactorStore()
+    s = solvers.get("apc")
+    f1 = store.factors(s, sys_a, use_kernel=True, gamma=1.0, eta=1.0)
+    assert f1.B is not None
+    # the augmented factors were written back: a second kernel hit gets the
+    # SAME object (no pinv recomputation), and a plain hit sees it too
+    f2 = store.factors(s, sys_a, use_kernel=True, gamma=1.0, eta=1.0)
+    f3 = store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    assert f2 is f1 and f3 is f1
+    assert store.stats.misses == 1 and store.stats.hits == 2
+
+
+# ---------------------------------------------------------------------------
+# solve(store=) wiring
+# ---------------------------------------------------------------------------
+
+
+def test_solve_through_store_is_bit_exact(sys_a):
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_a)
+    fresh = s.solve(sys_a, iters=40, **prm)
+    store = FactorStore()
+    r1 = s.solve(sys_a, iters=40, store=store, **prm)
+    r2 = s.solve(sys_a, iters=40, store=store, **prm)
+    for r in (r1, r2):
+        assert np.array_equal(np.asarray(r.residuals),
+                              np.asarray(fresh.residuals))
+        assert np.array_equal(np.asarray(r.x), np.asarray(fresh.x))
+    assert store.stats.misses == 1 and store.stats.hits == 1
+
+
+def test_solve_many_through_store(sys_a):
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_a)
+    B = np.random.default_rng(0).standard_normal((3, sys_a.N))
+    fresh = s.solve_many(sys_a, B, iters=40, **prm)
+    store = FactorStore()
+    r1 = s.solve_many(sys_a, B, iters=40, store=store, **prm)
+    r2 = s.solve_many(sys_a, B, iters=40, store=store, **prm)
+    assert store.stats.misses == 1 and store.stats.hits == 1
+    for r in (r1, r2):
+        assert np.array_equal(np.asarray(r.residuals),
+                              np.asarray(fresh.residuals))
+
+
+def test_redundant_solve_through_store(sys_a):
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_a)
+    store = FactorStore()
+    r0 = s.solve(sys_a, iters=40, **prm)
+    r1 = s.solve(sys_a, iters=40, redundancy=2, store=store, **prm)
+    assert store.stats.misses == 1
+    assert np.allclose(np.asarray(r1.residuals), np.asarray(r0.residuals),
+                       rtol=1e-6, atol=1e-12)
+
+
+def test_mesh_solve_prepares_on_mesh_and_shares_the_entry(sys_a):
+    # a mesh-backend miss must NOT fall back to a host prepare: the
+    # on-mesh mesh_prepare runs and its result is inserted, after which
+    # BOTH backends hit the same entry
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_a)
+    store = FactorStore()
+    r1 = s.solve(sys_a, iters=40, backend="mesh", store=store, **prm)
+    assert store.stats.misses == 1
+    r2 = s.solve(sys_a, iters=40, backend="mesh", store=store, **prm)
+    assert store.stats.hits == 1
+    r3 = s.solve(sys_a, iters=40, store=store, **prm)          # local hit
+    assert store.stats.hits == 2 and store.stats.misses == 1
+    for r in (r2, r3):
+        assert np.allclose(np.asarray(r.residuals),
+                           np.asarray(r1.residuals), rtol=1e-6, atol=1e-12)
+
+
+def test_resume_without_cached_factors_counts_as_miss(sys_a):
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_a)
+    prior = s.solve(sys_a, iters=10, **prm)
+    store = FactorStore()                       # cold store: resume re-pays
+    s.solve(sys_a, iters=10, warm_state=prior.state, store=store, **prm)
+    assert store.stats.resume_misses == 1 and store.stats.misses == 1
+    # resuming again is a hit — no resume miss recorded
+    s.solve(sys_a, iters=10, warm_state=prior.state, store=store, **prm)
+    assert store.stats.resume_misses == 1 and store.stats.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# disk tier: persistence across "processes", both backends, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["apc", "pdhbm"])   # projection + gradient
+@pytest.mark.parametrize("backend", ["local", "mesh"])
+def test_disk_round_trip_bit_exact(tmp_path, sys_a, name, backend):
+    s = solvers.get(name)
+    prm = s.resolve_params(sys_a)
+    store1 = FactorStore(directory=str(tmp_path))
+    f_fresh = store1.factors(s, sys_a, **prm)             # miss + disk write
+    assert store1.stats.disk_writes == 1
+
+    # a COLD store over the same directory models a restarted process: the
+    # factorization must come back from disk, structure included, with no
+    # prepare template available
+    store2 = FactorStore(directory=str(tmp_path))
+    f_restored = store2.factors(s, sys_a, **prm)
+    assert store2.stats.disk_hits == 1 and store2.stats.misses == 0
+    assert _tree_equal(f_fresh, f_restored)
+
+    kw = {"backend": backend} if backend == "mesh" else {}
+    r_fresh = s.solve(sys_a, iters=40, factors=f_fresh, **prm, **kw)
+    r_rest = s.solve(sys_a, iters=40, factors=f_restored, **prm, **kw)
+    assert np.array_equal(np.asarray(r_fresh.residuals),
+                          np.asarray(r_rest.residuals))
+    assert np.array_equal(np.asarray(r_fresh.x), np.asarray(r_rest.x))
+
+
+def test_disk_entry_layout_matches_checkpoint_contract(tmp_path, sys_a):
+    from repro.checkpoint.ckpt import COMMIT
+    s = solvers.get("apc")
+    store = FactorStore(directory=str(tmp_path))
+    store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    key = store.key(s, sys_a, gamma=1.0, eta=1.0)
+    entry = tmp_path / key
+    assert (entry / COMMIT).exists()                      # sealed
+    assert (entry / "manifest.json").exists()
+    manifest = json.loads((entry / "manifest.json").read_text())
+    assert manifest["solver"] == "apc"
+    assert manifest["partition"] == [sys_a.m, sys_a.p, sys_a.n]
+    n_leaves = len(manifest["leaves"])
+    assert all((entry / f"leaf_{i:05d}.npy").exists()
+               for i in range(n_leaves))
+
+
+def test_uncommitted_entry_is_ignored(tmp_path, sys_a):
+    from repro.checkpoint.ckpt import COMMIT
+    s = solvers.get("apc")
+    store = FactorStore(directory=str(tmp_path))
+    store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    key = store.key(s, sys_a, gamma=1.0, eta=1.0)
+    os.remove(tmp_path / key / COMMIT)                    # crashed mid-write
+    store2 = FactorStore(directory=str(tmp_path))
+    store2.factors(s, sys_a, gamma=1.0, eta=1.0)
+    assert store2.stats.misses == 1 and store2.stats.disk_hits == 0
+
+
+def _tamper(tmp_path, key, field, value):
+    path = tmp_path / key / "manifest.json"
+    manifest = json.loads(path.read_text())
+    manifest[field] = value
+    path.write_text(json.dumps(manifest))
+
+
+@pytest.mark.parametrize("field,value,match", [
+    ("dtype", "float32", "dtype"),
+    ("partition", [8, 6, 48], "partition"),
+    ("solver", "cimmino", "solver"),
+])
+def test_manifest_drift_fails_loudly(tmp_path, sys_a, field, value, match):
+    s = solvers.get("apc")
+    store = FactorStore(directory=str(tmp_path))
+    store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    key = store.key(s, sys_a, gamma=1.0, eta=1.0)
+    _tamper(tmp_path, key, field, value)
+    store2 = FactorStore(directory=str(tmp_path))
+    with pytest.raises(ValueError, match=match):
+        store2.factors(s, sys_a, gamma=1.0, eta=1.0)
+
+
+def test_corrupt_leaf_fails_loudly(tmp_path, sys_a):
+    s = solvers.get("apc")
+    store = FactorStore(directory=str(tmp_path))
+    store.factors(s, sys_a, gamma=1.0, eta=1.0)
+    key = store.key(s, sys_a, gamma=1.0, eta=1.0)
+    np.save(tmp_path / key / "leaf_00000.npy", np.zeros((2, 2)))
+    store2 = FactorStore(directory=str(tmp_path))
+    with pytest.raises(ValueError, match="corrupt"):
+        store2.factors(s, sys_a, gamma=1.0, eta=1.0)

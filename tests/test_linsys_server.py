@@ -1,0 +1,235 @@
+"""LinsysServer: coalescing, padding accounting, compile-once executors,
+warm-start gating, and cross-backend parity."""
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.data import linsys
+from repro.solvers.serve import LinsysServer
+from repro.solvers.store import FactorStore
+
+PRM = {"gamma": 1.0, "eta": 1.0}     # shared explicit params (consensus
+                                     # point of APC) so executors can be
+                                     # shared across systems in tests
+
+
+@pytest.fixture(scope="module")
+def sys_a():
+    return linsys.conditioned_gaussian(n=48, m=4, cond=10.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def sys_b():
+    return linsys.conditioned_gaussian(n=48, m=4, cond=10.0, seed=1)
+
+
+def _submit_rhs(srv, fp, n, seed):
+    rng = np.random.default_rng(seed)
+    rhs = rng.standard_normal(n)
+    return srv.submit(fp, rhs), rhs
+
+
+# ---------------------------------------------------------------------------
+# queue semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_coalescing_and_padding(sys_a, sys_b):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5, batch=2, **PRM)
+    fa, fb = srv.register(sys_a), srv.register(sys_b)
+    rng = np.random.default_rng(0)
+    # arrival order: a0 a1 b2 a3 — coalescing groups [a0,a1], then the
+    # OLDEST pending (b2, padded), then [a3, pad]; a3 must NOT jump b2
+    for fp in (fa, fa, fb, fa):
+        srv.submit(fp, rng.standard_normal(48))
+    batches = []
+    while True:
+        served = srv.step()
+        if not served:
+            break
+        batches.append([r.rid for r in served])
+    assert batches == [[0, 1], [2], [3]]
+    assert srv.stats.served == 4                 # padding is NOT traffic
+    assert srv.stats.padded == 2
+    assert srv.stats.batches == 3
+
+
+def test_same_system_requests_coalesce_past_arrival_gaps(sys_a, sys_b):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5, batch=3, **PRM)
+    fa, fb = srv.register(sys_a), srv.register(sys_b)
+    rng = np.random.default_rng(0)
+    # a0 b1 a2 a3: batch 1 serves a0 AND coalesces a2, a3 into the group
+    # even though b1 arrived earlier than both
+    for fp in (fa, fb, fa, fa):
+        srv.submit(fp, rng.standard_normal(48))
+    assert [r.rid for r in srv.step()] == [0, 2, 3]
+    assert [r.rid for r in srv.step()] == [1]
+
+
+def test_submit_validation(sys_a):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5, batch=2, **PRM)
+    fp = srv.register(sys_a)
+    with pytest.raises(KeyError, match="register"):
+        srv.submit("deadbeef", np.zeros(48))
+    with pytest.raises(ValueError, match="shape"):
+        srv.submit(fp, np.zeros(7))
+    with pytest.raises(ValueError, match="backend"):
+        LinsysServer(FactorStore(), backend="pod")
+    with pytest.raises(ValueError, match="batch"):
+        LinsysServer(FactorStore(), batch=0)
+
+
+# ---------------------------------------------------------------------------
+# correctness: served results match the unified drivers
+# ---------------------------------------------------------------------------
+
+
+def test_served_results_match_solve_many(sys_a):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=60, batch=2, **PRM)
+    fp = srv.register(sys_a)
+    rng = np.random.default_rng(3)
+    B = rng.standard_normal((2, sys_a.N))
+    for b in B:
+        srv.submit(fp, b)
+    served = srv.drain()
+    ref = solvers.get("apc").solve_many(sys_a, B, iters=60, **PRM)
+    for i, r in enumerate(served):
+        assert np.array_equal(r.x, np.asarray(ref.x[i]))
+        assert r.residual == pytest.approx(float(ref.residuals[i, -1]))
+
+
+def test_residuals_converge_and_store_amortizes(sys_a, sys_b):
+    store = FactorStore()
+    # auto-tuned APC params (resolved per system at register time)
+    srv = LinsysServer(store, solver="apc", iters=300, tol=1e-6, batch=1)
+    fps = [srv.register(sys_a), srv.register(sys_b)]
+    rng = np.random.default_rng(0)
+    n_req = 6
+    for i in range(n_req):
+        srv.submit(fps[i % 2], rng.standard_normal(48))
+    out = srv.drain()
+    assert all(r.residual < 1e-6 for r in out)
+    assert all(r.iters_to_tol != -1 for r in out)
+    assert store.stats.misses == 2                       # one per system
+    assert store.stats.hits == n_req - 2
+
+
+# ---------------------------------------------------------------------------
+# compile-once executors
+# ---------------------------------------------------------------------------
+
+
+def test_executor_shared_across_same_shape_systems(sys_a, sys_b):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=10, batch=2, **PRM)
+    fps = [srv.register(sys_a), srv.register(sys_b)]
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        srv.submit(fps[i % 2], rng.standard_normal(48))
+    srv.drain()
+    assert srv.stats.executor_builds == 1        # same (shapes, params) key
+
+
+def test_steady_state_never_retraces(sys_a, sys_b):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=10, batch=2, **PRM)
+    fps = [srv.register(sys_a), srv.register(sys_b)]
+    rng = np.random.default_rng(0)
+    sizes = []
+    for i in range(6):
+        srv.submit(fps[i % 2], rng.standard_normal(48))
+        srv.submit(fps[i % 2], rng.standard_normal(48))
+        srv.step()
+        sizes.append(srv.jit_cache_size())
+    if -1 in sizes:
+        pytest.skip("this jax cannot report jit cache sizes")
+    assert len(set(sizes[1:])) == 1, f"jit cache grew: {sizes}"
+
+
+def test_distinct_params_get_distinct_executors(sys_a, sys_b):
+    # auto-tuned params differ per system -> separate compile-once entries
+    srv = LinsysServer(FactorStore(), solver="apc", iters=10, batch=2)
+    fps = [srv.register(sys_a), srv.register(sys_b)]
+    rng = np.random.default_rng(0)
+    for fp in fps:
+        srv.submit(fp, rng.standard_normal(48))
+    srv.drain()
+    assert srv.stats.executor_builds == 2
+
+
+# ---------------------------------------------------------------------------
+# warm starts
+# ---------------------------------------------------------------------------
+
+
+def test_warm_start_repeated_rhs_resumes(sys_a):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=40, batch=1,
+                       warm_start=True, **PRM)
+    fp = srv.register(sys_a)
+    b = np.random.default_rng(5).standard_normal(48)
+    srv.submit(fp, b)
+    cold = srv.drain()[0]
+    srv.submit(fp, b)                            # identical RHS: resume
+    warm = srv.drain()[0]
+    assert not cold.warm and warm.warm
+    assert warm.residual < cold.residual         # kept iterating
+    assert srv.stats.warm_batches == 1
+
+
+def test_warm_start_perturbed_rhs_gated_by_solver(sys_a):
+    rng = np.random.default_rng(6)
+    b = rng.standard_normal(48)
+    db = 1e-3 * rng.standard_normal(48)
+    # APC iterates stay feasible for the OLD b -> must fall back to cold
+    srv = LinsysServer(FactorStore(), solver="apc", iters=40, batch=1,
+                       warm_start=True, **PRM)
+    fp = srv.register(sys_a)
+    srv.submit(fp, b)
+    srv.drain()
+    srv.submit(fp, b + db)
+    assert not srv.drain()[0].warm
+    # D-HBM re-reads b every step -> perturbed warm start allowed AND
+    # converges to the NEW system's solution
+    srvg = LinsysServer(FactorStore(), solver="dhbm", iters=250, batch=1,
+                        warm_start=True)
+    fpg = srvg.register(sys_a)
+    srvg.submit(fpg, b)
+    srvg.drain()
+    srvg.submit(fpg, b + db)
+    warm = srvg.drain()[0]
+    assert warm.warm and warm.residual < 1e-6
+
+
+def test_register_merges_server_level_params(sys_a):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5, batch=1,
+                       gamma=1.25, eta=1.5)
+    fp = srv.register(sys_a, eta=1.1)        # override eta, KEEP gamma
+    prm = srv._systems[fp].prm
+    assert prm["gamma"] == 1.25 and prm["eta"] == 1.1
+
+
+def test_warm_rhs_ok_flags():
+    expected = {"apc": False, "consensus": False, "cimmino": True,
+                "dgd": True, "dnag": True, "dhbm": True, "pdhbm": False,
+                "madmm": False}
+    for name, flag in expected.items():
+        assert solvers.get(name).warm_rhs_ok is flag, name
+
+
+# ---------------------------------------------------------------------------
+# mesh backend
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_server_matches_local(sys_a):
+    rng = np.random.default_rng(7)
+    B = rng.standard_normal((2, sys_a.N))
+    out = {}
+    for backend in ("local", "mesh"):
+        srv = LinsysServer(FactorStore(), solver="apc", iters=80, batch=2,
+                           backend=backend, **PRM)
+        fp = srv.register(sys_a)
+        for b in B:
+            srv.submit(fp, b)
+        out[backend] = srv.drain()
+    for rl, rm in zip(out["local"], out["mesh"]):
+        assert np.allclose(rl.x, rm.x, rtol=1e-8, atol=1e-10)
+        assert rm.residual == pytest.approx(rl.residual, rel=1e-6)
