@@ -3,7 +3,10 @@
 ``solve_many`` shares one Gram/Cholesky factorization across a batch of
 right-hand sides; this measures its end-to-end wall time against a loop of
 independent single-RHS ``solve`` calls (each paying ``prepare`` again) and
-reports the amortization speedup.
+reports the amortization speedup.  Projection-family methods get an extra
+``use_kernel=True`` row — the fused multi-RHS Pallas path, where the k
+batch rows stream through one VMEM residency of every A/B tile (interpret
+mode off-TPU; per-iteration trend lives in periter/BENCH_PR5.json).
 """
 from __future__ import annotations
 
@@ -56,6 +59,25 @@ def run(verbose: bool = True, n: int = 384, m: int = 4):
             print(f"{name:10s} solve_many {t_batch*1e3:8.1f} ms   "
                   f"loop {t_loop*1e3:8.1f} ms   "
                   f"speedup {t_loop/t_batch:5.2f}x")
+
+        if s.supports_kernel:
+            # kernel-vs-unfused must isolate FUSION from store
+            # amortization: re-time the unfused path store-WARM (factors
+            # now cached) so both sides of the ratio hit the cache
+            t0 = time.perf_counter()
+            rw = s.solve_many(sys_, B, iters=ITERS, store=store, **prm)
+            jax.block_until_ready(rw.x)
+            t_warm = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            rk = s.solve_many(sys_, B, iters=ITERS, store=store,
+                              use_kernel=True, **prm)
+            jax.block_until_ready(rk.x)
+            t_kernel = time.perf_counter() - t0
+            rows.append((f"batch_rhs/{name}_kernel", t_kernel * 1e6,
+                         f"k={K};vs_unfused={t_warm / t_kernel:.2f}x"))
+            if verbose:
+                print(f"{name:10s} solve_many(kernel) {t_kernel*1e3:8.1f} "
+                      f"ms   vs unfused(warm) {t_warm/t_kernel:5.2f}x")
     return rows
 
 

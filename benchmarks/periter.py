@@ -3,8 +3,14 @@
 All methods have O(pn) per-iteration complexity per worker; this measures
 actual per-iteration wall time of every registered solver's jitted ``step``
 on the same system — through the unified prepare/init/step lifecycle — so
-the convergence-time comparisons (Table 2) are wall-clock fair.  Also times
-the Pallas kernel path (interpret mode — functional check, not TPU perf).
+the convergence-time comparisons (Table 2) are wall-clock fair.
+
+``kernel_comparison`` is the machine-readable kernel-vs-unfused matrix
+(projection family, batch 1 vs 16) that seeds the benchmark trajectory:
+``scripts/bench_ci.py`` records it in BENCH_PR5.json and gates kernel >=
+unfused at batch 16 so later PRs have a trend to regress against.  On
+CPU lanes the kernels run in interpret mode — a functional trend
+baseline, not TPU perf (the recorded ``interpret`` flag says which).
 """
 from __future__ import annotations
 
@@ -28,6 +34,56 @@ def _time(fn, *args, iters=50, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6   # us
 
 
+def kernel_comparison(n: int = 512, m: int = 2, batches=(1, 16),
+                      iters: int = 30,
+                      methods=("apc", "consensus", "cimmino")) -> dict:
+    """Fused-kernel vs unfused per-iteration times for the projection
+    family at each RHS batch size.
+
+    One jitted ``step_many`` per (method, batch, path); the kernel path
+    runs on pinv-augmented factors from a store (augment-once), exactly
+    the executor the serving layer uses.  Returns
+
+        {"n", "m", "p", "interpret", "methods": {name: {
+            "unfused_b{k}_us", "kernel_b{k}_us", "kernel_speedup_b{k}"}}}
+
+    The default shape (p = n/m = 256 rows per worker, single BN tile) is
+    the store-served worker block the paper's cost split targets — big
+    enough that the per-step Gram solves the kernel path eliminates
+    dominate the unfused step.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import block_projection as bp
+
+    jax.config.update("jax_enable_x64", True)
+    sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=0)
+    store = FactorStore()
+    out = {"n": n, "m": m, "p": sys_.p, "iters_timed": iters,
+           "interpret": bp.default_interpret(), "methods": {}}
+    for name in methods:
+        s = solvers.get(name)
+        prm = s.resolve_params(sys_)
+        factors = store.factors(s, sys_, use_kernel=True, **prm)
+        per = {}
+        for k in batches:
+            Bb = jnp.asarray(np.random.default_rng(0).standard_normal(
+                (k, sys_.m, sys_.p)))
+            states = jax.vmap(lambda b: s.init(factors, b, prm))(Bb)
+            unfused = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
+                              _s.step_many(_f, _B, sts, _p,
+                                           use_kernel=False))
+            fused = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
+                            _s.step_many(_f, _B, sts, _p, use_kernel=True))
+            tu = _time(unfused, states, iters=iters)
+            tk = _time(fused, states, iters=iters)
+            per[f"unfused_b{k}_us"] = round(tu, 2)
+            per[f"kernel_b{k}_us"] = round(tk, 2)
+            per[f"kernel_speedup_b{k}"] = round(tu / tk, 4)
+        out["methods"][name] = per
+    return out
+
+
 def run(verbose: bool = True, n: int = 512, m: int = 4):
     jax.config.update("jax_enable_x64", True)
     sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=50.0, seed=0)
@@ -43,29 +99,17 @@ def run(verbose: bool = True, n: int = 512, m: int = 4):
             _f, sys_.b_blocks, st, _p))
         rows.append((f"periter/{name}", _time(step, state), f"n={n};m={m}"))
 
-    # Pallas kernel path, interpret mode (functional check, not TPU perf);
-    # use_kernel=True hands back pinv-augmented factors so the step takes
-    # the actual kernel fast path
-    s = solvers.get("apc")
-    prm = {"gamma": 1.3, "eta": 1.2}
-    factors = store.factors(s, sys_, use_kernel=True, **prm)
-    state = s.init(factors, sys_.b_blocks, prm)
-    stepk = jax.jit(lambda st: s.step(factors, sys_.b_blocks, st, prm,
-                                      use_kernel=True))
-    rows.append(("periter/apc_pallas_interpret", _time(stepk, state, iters=5),
-                 "interpret-mode"))
-
-    # batched multi-RHS step amortization (the serving hot path)
-    import jax.numpy as jnp
-    import numpy as np
-    k = 8
-    Bb = jnp.asarray(np.random.default_rng(0).standard_normal(
-        (k, sys_.m, sys_.p)))
-    states = jax.vmap(lambda b: s.init(factors, b, prm))(Bb)
-    vstep = jax.jit(jax.vmap(lambda b, st: s.step(factors, b, st, prm),
-                             in_axes=(0, 0)))
-    rows.append((f"periter/apc_batch{k}", _time(vstep, Bb, states),
-                 f"us per {k}-RHS step"))
+    # fused Pallas engine vs the unfused step, batch 1 and 16 (interpret
+    # mode off-TPU — functional trend, not TPU perf); same matrix as the
+    # BENCH_PR5.json trend gate
+    cmp_ = kernel_comparison()
+    mode = "interpret" if cmp_["interpret"] else "compiled"
+    for name, per in cmp_["methods"].items():
+        for k in (1, 16):
+            rows.append((f"periter/{name}_kernel_b{k}",
+                         per[f"kernel_b{k}_us"],
+                         f"{mode};unfused={per[f'unfused_b{k}_us']:.1f}us;"
+                         f"speedup={per[f'kernel_speedup_b{k}']:.2f}x"))
 
     if verbose:
         for r in rows:

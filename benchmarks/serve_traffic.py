@@ -11,10 +11,15 @@ What the factor-store/serving subsystem claims, measured:
     phase, cheap per-RHS iterations) is exactly this amortization; the
     acceptance bar is warm >= 5x below cold.
   * ZERO retraces in steady state — the compile-once executor cache is
-    keyed by (solver, shapes, params, backend), so the jit cache size
-    must be CONSTANT across the last K batches (asserted when the
-    running jax can report it).
+    keyed by (solver, shapes, params, backend, use_kernel), so the jit
+    cache size must be CONSTANT across the last K batches (asserted when
+    the running jax can report it).
   * Steady-state throughput in RHS/s, padding excluded.
+
+``measure()`` is the machine-readable core (also recorded in
+BENCH_PR5.json by ``scripts/bench_ci.py``, which re-asserts the
+zero-retrace invariant as a trend gate); ``use_kernel=True`` serves every
+batch through the fused multi-RHS Pallas kernels.
 """
 from __future__ import annotations
 
@@ -33,66 +38,89 @@ WARM_BATCHES = 8    # per system, after the cold one
 TAIL_K = 5          # jit cache must be constant across the last K batches
 
 
-def _serve_one_batch(srv, fp, N, rng):
-    for _ in range(BATCH):
+def _serve_one_batch(srv, fp, N, rng, batch):
+    for _ in range(batch):
         srv.submit(fp, rng.standard_normal(N))
     t0 = time.perf_counter()
     served = srv.step()
     dt = time.perf_counter() - t0
-    assert len(served) == BATCH
+    assert len(served) == batch
     return dt
 
 
-def run(verbose: bool = True, n: int = 256, m: int = 4):
+def measure(n: int = 256, m: int = 4, iters: int = ITERS,
+            batch: int = BATCH, warm_batches: int = WARM_BATCHES,
+            use_kernel: bool = False) -> dict:
+    """Serve 2 systems cold + ``warm_batches`` warm batches; return the
+    raw numbers (latencies in seconds, jit-cache trajectory, store
+    stats) without asserting — callers gate on what they care about."""
     jax.config.update("jax_enable_x64", True)
     rng = np.random.default_rng(0)
     systems = [linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=s)
                for s in (0, 1)]
     store = FactorStore()
-    srv = LinsysServer(store, solver="apc", iters=ITERS, batch=BATCH,
+    srv = LinsysServer(store, solver="apc", iters=iters, batch=batch,
+                       use_kernel=use_kernel,
                        # shared explicit params -> ONE executor for both
                        # systems, so system 2's cold batch isolates the
                        # prepare cost from the compile cost
                        gamma=1.0, eta=1.0)
     fps = [srv.register(s) for s in systems]
 
-    t_cold = _serve_one_batch(srv, fps[0], systems[0].N, rng)   # miss+compile
-    t_cold2 = _serve_one_batch(srv, fps[1], systems[1].N, rng)  # miss only
+    t_cold = _serve_one_batch(srv, fps[0], systems[0].N, rng,
+                              batch)                       # miss+compile
+    t_cold2 = _serve_one_batch(srv, fps[1], systems[1].N, rng,
+                               batch)                      # miss only
 
     warm, cache_sizes = [], []
-    for i in range(WARM_BATCHES):
+    for i in range(warm_batches):
         fp, sys_ = fps[i % 2], systems[i % 2]
-        warm.append(_serve_one_batch(srv, fp, sys_.N, rng))
+        warm.append(_serve_one_batch(srv, fp, sys_.N, rng, batch))
         cache_sizes.append(srv.jit_cache_size())
     t_warm = float(np.median(warm))
-
-    speedup = t_cold / t_warm
     tail = cache_sizes[-TAIL_K:]
-    steady = (-1 in tail) or len(set(tail)) == 1
-    assert steady, f"jit cache grew across steady-state batches: {tail}"
-    assert speedup >= 5.0, (
-        f"warm-cache batch only {speedup:.1f}x faster than cold "
-        f"({t_cold * 1e3:.1f} ms vs {t_warm * 1e3:.1f} ms)")
-    assert store.stats.misses == 2 and store.stats.hits >= WARM_BATCHES
+    return {
+        "n": n, "m": m, "iters": iters, "batch": batch,
+        "use_kernel": use_kernel,
+        "cold_s": t_cold, "cold2_s": t_cold2, "warm_s": t_warm,
+        "speedup": t_cold / t_warm,
+        "rhs_per_s": batch / t_warm,            # full batches: no padding
+        "jit_cache_tail": tail,
+        "zero_retrace": (-1 in tail) or len(set(tail)) == 1,
+        "store_misses": store.stats.misses,
+        "store_hits": store.stats.hits,
+    }
 
-    rhs_per_s = BATCH / t_warm              # full batches: no padding
-    retraces = "unknown" if -1 in tail else 0
+
+def run(verbose: bool = True, n: int = 256, m: int = 4,
+        use_kernel: bool = False):
+    mm = measure(n=n, m=m, use_kernel=use_kernel)
+    assert mm["zero_retrace"], \
+        f"jit cache grew across steady-state batches: {mm['jit_cache_tail']}"
+    assert mm["speedup"] >= 5.0, (
+        f"warm-cache batch only {mm['speedup']:.1f}x faster than cold "
+        f"({mm['cold_s'] * 1e3:.1f} ms vs {mm['warm_s'] * 1e3:.1f} ms)")
+    assert mm["store_misses"] == 2 and mm["store_hits"] >= WARM_BATCHES
+
+    retraces = "unknown" if -1 in mm["jit_cache_tail"] else 0
+    tag = "kernel" if use_kernel else "unfused"
     rows = [
-        ("serve_traffic/cold_batch", t_cold * 1e6,
+        (f"serve_traffic/cold_batch_{tag}", mm["cold_s"] * 1e6,
          f"n={n};m={m};prepare+compile;batch={BATCH}"),
-        ("serve_traffic/cold_batch_prepare_only", t_cold2 * 1e6,
+        (f"serve_traffic/cold_batch_prepare_only_{tag}", mm["cold2_s"] * 1e6,
          "2nd system reuses the compiled executor"),
-        ("serve_traffic/warm_batch", t_warm * 1e6,
-         f"speedup={speedup:.1f}x;retraces={retraces};"
-         f"rhs_per_s={rhs_per_s:.1f}"),
+        (f"serve_traffic/warm_batch_{tag}", mm["warm_s"] * 1e6,
+         f"speedup={mm['speedup']:.1f}x;retraces={retraces};"
+         f"rhs_per_s={mm['rhs_per_s']:.1f}"),
     ]
     if verbose:
-        print(f"cold  {t_cold * 1e3:8.1f} ms   (prepare + compile)")
-        print(f"cold2 {t_cold2 * 1e3:8.1f} ms   (prepare only, executor "
-              f"shared)")
-        print(f"warm  {t_warm * 1e3:8.1f} ms   ({speedup:.1f}x, "
-              f"{rhs_per_s:.1f} RHS/s, jit cache {tail})")
-        print(f"store {store.stats}")
+        print(f"[{tag}] cold  {mm['cold_s'] * 1e3:8.1f} ms   "
+              f"(prepare + compile)")
+        print(f"[{tag}] cold2 {mm['cold2_s'] * 1e3:8.1f} ms   (prepare "
+              f"only, executor shared)")
+        print(f"[{tag}] warm  {mm['warm_s'] * 1e3:8.1f} ms   "
+              f"({mm['speedup']:.1f}x, {mm['rhs_per_s']:.1f} RHS/s, "
+              f"jit cache {mm['jit_cache_tail']})")
     return rows
 
 
@@ -102,3 +130,4 @@ def csv_rows():
 
 if __name__ == "__main__":
     run()
+    run(use_kernel=True)

@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Benchmark trend seed + regression gate for the hosted CI.
+
+Runs the quick-mode benchmark pair —
+
+  * ``benchmarks.periter.kernel_comparison``: per-iteration times of the
+    fused Pallas engine vs the unfused step for the projection family,
+    batch 1 vs batch 16;
+  * ``benchmarks.serve_traffic.measure``: cold/warm serve latency and
+    the jit-cache trajectory through ``LinsysServer``;
+
+— and writes them machine-readable to BENCH_PR5.json so future PRs have
+a trajectory to diff against.  Two invariants are GATED (non-zero exit):
+
+  * zero steady-state retraces — the serve jit cache is constant across
+    the tail batches;
+  * kernel >= unfused at batch 16 for APC — the fused multi-RHS path
+    must not regress below the path it replaces at serving batch sizes
+    (on CPU lanes both run interpret/XLA side by side: the kernel wins
+    because the pinv-augmented step eliminates the per-iteration Gram
+    solves; on TPU the same gate covers the compiled kernels).
+
+    PYTHONPATH=src python scripts/bench_ci.py --out BENCH_PR5.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for d in (REPO, os.path.join(REPO, "src")):
+    if d not in sys.path:
+        sys.path.insert(0, d)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+# Benchmark shapes (quick mode: the tier-1 lane runs this every push).
+# p = n/m = 256 rows per worker on a single BN tile is the store-served
+# worker block where the kernel's fused traffic + no-Gram-solve step is
+# decisively ahead even in interpret mode; batch 16 is the serving batch.
+PERITER = dict(n=512, m=2, batches=(1, 16), iters=30)
+SERVE = dict(n=256, m=4, iters=100, warm_batches=6)
+GATE_METHOD = "apc"
+GATE_BATCH = 16
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_PR5.json",
+                    help="where to write the benchmark trajectory record")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="record only; do not fail on gate violations "
+                         "(bootstrap / exotic hardware)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import periter, serve_traffic
+    from repro.kernels import block_projection as bp
+
+    print(f"== bench_ci: periter kernel comparison {PERITER} ==")
+    per = periter.kernel_comparison(**PERITER)
+    for name, row in per["methods"].items():
+        print(f"  {name:10s} b1  unfused {row['unfused_b1_us']:9.1f}us  "
+              f"kernel {row['kernel_b1_us']:9.1f}us  "
+              f"({row['kernel_speedup_b1']:.2f}x)")
+        print(f"  {name:10s} b16 unfused {row['unfused_b16_us']:9.1f}us  "
+              f"kernel {row['kernel_b16_us']:9.1f}us  "
+              f"({row['kernel_speedup_b16']:.2f}x)")
+
+    print(f"== bench_ci: serve_traffic {SERVE} ==")
+    srv = serve_traffic.measure(**SERVE)
+    print(f"  cold {srv['cold_s']*1e3:.1f} ms   warm {srv['warm_s']*1e3:.1f}"
+          f" ms   ({srv['speedup']:.1f}x, {srv['rhs_per_s']:.1f} RHS/s, "
+          f"jit cache {srv['jit_cache_tail']})")
+
+    gate_speedup = per["methods"][GATE_METHOD][
+        f"kernel_speedup_b{GATE_BATCH}"]
+    gates = {
+        # the fused path must not regress below the path it replaces
+        "kernel_ge_unfused_b16": gate_speedup >= 1.0,
+        # steady-state serving must never retrace
+        "zero_retrace": bool(srv["zero_retrace"]),
+    }
+    record = {
+        "schema": 1,
+        "pr": 5,
+        "backend": jax.default_backend(),
+        "pallas_interpret": bp.default_interpret(),
+        "gate": {"method": GATE_METHOD, "batch": GATE_BATCH,
+                 "kernel_speedup": gate_speedup},
+        "periter_kernel": per,
+        "serve_traffic": srv,
+        "gates": gates,
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {args.out}")
+
+    failed = [k for k, ok in gates.items() if not ok]
+    if failed:
+        msg = (f"bench gate FAILED: {failed} "
+               f"(kernel speedup b{GATE_BATCH}={gate_speedup:.2f}x, "
+               f"jit cache tail {srv['jit_cache_tail']})")
+        if args.no_gate:
+            print(f"WARNING (--no-gate): {msg}")
+            return 0
+        print(msg, file=sys.stderr)
+        return 1
+    print(f"bench gates OK: kernel {gate_speedup:.2f}x >= 1.0 at "
+          f"batch {GATE_BATCH}, zero retraces")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 CI: fast test suite + solver-registry smoke.
+# Tier-1 CI: fast test suite + the smoke scripts under scripts/smokes/.
 #
 #     bash scripts/ci.sh
 #
-# The "not slow" selection skips the subprocess/system tests (run the full
-# suite with `PYTHONPATH=src python -m pytest -q` before a release).
+# The same smokes are invoked by .github/workflows/ci.yml (no heredoc
+# drift: this file and the workflow share the scripts/smokes/*.py files).
+# The "not slow" selection skips the subprocess/system tests — the full
+# suite is `PYTHONPATH=src python -m pytest -q` (the workflow's nightly /
+# `ci:full`-label lane runs it).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,112 +17,31 @@ echo "== pytest (tier 1, -m 'not slow') =="
 python -m pytest -q -m "not slow"
 
 echo "== solver registry smoke =="
-python - <<'EOF'
-import time
-import jax
-jax.config.update("jax_enable_x64", True)
-from repro import solvers
-from repro.data import linsys
+python scripts/smokes/registry.py
 
-t0 = time.time()
-sys_ = linsys.conditioned_gaussian(n=128, m=4, cond=20.0, seed=0)
-names = solvers.available()
-required = {"apc", "cimmino", "consensus", "dgd", "dhbm", "dnag", "madmm",
-            "pdhbm"}
-missing = required - set(names)
-assert not missing, f"missing solvers: {missing}"
-for n in names:
-    s = solvers.get(n)                       # registry lookup
-    r = s.solve(sys_, iters=30)              # lifecycle round-trip
-    assert r.name == n and r.x.shape == (sys_.n,), n
-print(f"registry smoke OK: {names} in {time.time()-t0:.1f}s")
-EOF
+# the device-forcing smokes get XLA_FLAGS set EXPLICITLY (not just the
+# scripts' setdefault fallback) so an ambient XLA_FLAGS — e.g. a debug
+# --xla_dump_to — cannot silently drop the forced 4-device topology
+FORCE4="--xla_force_host_platform_device_count=4"
 
 echo "== mesh-backend smoke (4 forced host devices, 2x2 data x model) =="
-XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
-import time
-import jax
-jax.config.update("jax_enable_x64", True)
-import numpy as np
-from repro import solvers
-from repro.data import linsys
-from repro.launch.mesh import make_compat_mesh
-
-t0 = time.time()
-assert len(jax.devices()) == 4, jax.devices()
-sys_ = linsys.conditioned_gaussian(n=64, m=4, cond=10.0, seed=3)
-mesh = make_compat_mesh((2, 2), ("data", "model"))
-for name in solvers.available():
-    s = solvers.get(name)
-    prm = s.resolve_params(sys_)
-    rl = s.solve(sys_, iters=120, **prm)
-    rm = s.solve(sys_, iters=120, backend="mesh", mesh=mesh, **prm)
-    assert np.allclose(np.asarray(rm.residuals), np.asarray(rl.residuals),
-                       rtol=1e-6, atol=1e-12), name
-    assert rm.errors is not None and rm.residuals.shape == (120,), name
-print(f"mesh smoke OK: {solvers.available()} sharded on {mesh} "
-      f"in {time.time()-t0:.1f}s")
-EOF
+XLA_FLAGS="$FORCE4" python scripts/smokes/mesh.py
 
 echo "== serve smoke (LinsysServer: 2 systems, factor-store amortization) =="
-python - <<'EOF'
-import time
-import numpy as np
-import jax
-jax.config.update("jax_enable_x64", True)
-from repro.data import linsys
-from repro.solvers import FactorStore, LinsysServer
-
-t0 = time.time()
-N_REQ = 8
-s1 = linsys.conditioned_gaussian(n=64, m=4, cond=10.0, seed=0)
-s2 = linsys.conditioned_gaussian(n=64, m=4, cond=10.0, seed=1)
-store = FactorStore()
-# batch=1: every request is its own store lookup, so exactly the first
-# request per system may miss
-srv = LinsysServer(store, solver="apc", iters=600, tol=1e-6, batch=1)
-fps = [srv.register(s1), srv.register(s2)]
-rng = np.random.default_rng(0)
-for i in range(N_REQ):
-    srv.submit(fps[i % 2], rng.standard_normal(64))
-out = srv.drain()
-assert len(out) == N_REQ and [r.rid for r in out] == list(range(N_REQ))
-bad = [r.residual for r in out if not r.residual < 1e-6]
-assert not bad, f"residuals above tol: {bad}"
-assert store.stats.total_hits >= N_REQ - 2, store.stats
-assert srv.stats.served == N_REQ and srv.stats.padded == 0
-print(f"serve smoke OK: {N_REQ} requests over 2 systems, "
-      f"store {store.stats}, {srv.stats.executor_builds} executor "
-      f"build(s) in {time.time()-t0:.1f}s")
-EOF
+python scripts/smokes/serve.py
 
 echo "== straggler smoke (r=2, rotating straggler, 4 forced host devices) =="
-XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'EOF'
-import time
-import jax
-jax.config.update("jax_enable_x64", True)
-import numpy as np
-from repro import solvers
-from repro.data import linsys
-from repro.launch.mesh import make_compat_mesh
+XLA_FLAGS="$FORCE4" python scripts/smokes/straggler.py
 
-t0 = time.time()
-assert len(jax.devices()) == 4, jax.devices()
-sys_ = linsys.conditioned_gaussian(n=64, m=4, cond=10.0, seed=3)
-mesh = make_compat_mesh((2, 2), ("data", "model"))
-sched = lambda t: np.array([i != (t % 4) for i in range(4)])
-s = solvers.get("apc")
-prm = s.resolve_params(sys_)
-r0 = s.solve(sys_, iters=120, **prm)                       # no failures
-rl = s.solve(sys_, iters=120, redundancy=2, alive_schedule=sched, **prm)
-rm = s.solve(sys_, iters=120, redundancy=2, alive_schedule=sched,
-             backend="mesh", mesh=mesh, **prm)
-for r, tag in ((rl, "local"), (rm, "mesh")):
-    assert np.allclose(np.asarray(r.residuals), np.asarray(r0.residuals),
-                       rtol=1e-6, atol=1e-12), tag
-    assert np.allclose(np.asarray(r.x), np.asarray(r0.x),
-                       rtol=1e-8, atol=1e-10), tag
-print(f"straggler smoke OK: apc r=2 exact under a rotating straggler on "
-      f"local and {mesh} in {time.time()-t0:.1f}s")
-EOF
+echo "== kernel smoke (every Pallas path, interpret mode) =="
+XLA_FLAGS="$FORCE4" REPRO_PALLAS_INTERPRET=1 python scripts/smokes/kernel.py
+
+# Lanes where Pallas lowering is available (real TPU runners) re-run the
+# identical smoke force-compiled, so lowering regressions surface in CI —
+# exactly the use kernels.block_projection.default_interpret documents.
+if [[ "${REPRO_CI_COMPILE_LANE:-0}" == "1" ]]; then
+  echo "== kernel smoke (force-compile pass, REPRO_PALLAS_INTERPRET=0) =="
+  XLA_FLAGS="$FORCE4" REPRO_PALLAS_INTERPRET=0 python scripts/smokes/kernel.py
+fi
+
 echo "CI OK"

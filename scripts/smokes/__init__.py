@@ -1,0 +1,2 @@
+# Standalone CI smoke scripts — invoked as files (python scripts/smokes/x.py)
+# by scripts/ci.sh and .github/workflows/ci.yml, never imported.

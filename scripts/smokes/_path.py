@@ -1,0 +1,10 @@
+"""Make the smokes runnable with or without PYTHONPATH=src: importing
+this module prepends the repo's src/ to sys.path (idempotent)."""
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+_SRC = os.path.join(REPO, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

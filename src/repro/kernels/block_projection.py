@@ -1,26 +1,38 @@
-"""Pallas TPU kernels for the APC worker iteration (DESIGN.md §2).
+"""Pallas TPU kernels for the projection family's per-iteration hot spot.
 
-The worker update  y = x + γ·(d − B(A d)),  d = x̄ − x  is two dependent
-GEMVs over the worker's (p × n) block — *memory-bound* (arithmetic intensity
-≈ 1 FLOP/byte over A and B).  The kernels therefore optimize HBM traffic,
-not FLOPs:
+The projection solvers' worker updates are two dependent GEMMs over the
+worker's (p × n) block — *memory-bound* (arithmetic intensity ≈ 1 FLOP/byte
+over A and B).  The kernels therefore optimize HBM traffic, not FLOPs:
 
-  * ``apc_gather``:  u = A·d with d formed on the fly from (x, x̄) tiles —
-    d is never materialized in HBM (saves 2n reads + n writes per iter).
-  * ``apc_scatter``: y = x + γ(d − B·u) fusing the rank-p correction with
-    the AXPY — again no d round-trip and no intermediate (n,) vector.
+  * ``apc_gather``:  U = (X̄ − X)·Aᵀ with the difference formed on the fly
+    from (X, X̄) tiles — D is never materialized in HBM (saves 2kn reads +
+    kn writes per iter).
+  * ``apc_scatter``: Y = X + γ(D − U·Bᵀ) fusing the rank-p correction with
+    the AXPY — again no D round-trip and no intermediate (k, n) buffer.
+  * ``cimmino_gather`` / ``cimmino_scatter``: the block-Cimmino row
+    projection r = B(b − A x̄) split the same way (gather U = X̄·Aᵀ,
+    scatter R = V·Bᵀ) so the third projection solver shares the engine
+    instead of rewriting its update onto the APC shape.
+
+All four kernels are **multi-RHS**: the row-vector operands carry a leading
+batch axis k (k = 1 for a plain solve), and the k right-hand sides stream
+through the SAME VMEM residency of the A/B tile — one HBM read of A serves
+the whole batch, which is what makes the ``solve_many`` / ``LinsysServer``
+hot path fused rather than k replayed single-RHS kernels.
 
 Tiling: the n axis is cut into lane-aligned BN-tiles (multiple of 128); the
-p axis lives entirely in VMEM (p is small by construction — each worker's
-system is highly under-determined, p ≪ n).  A tile of A (p × BN) occupies
-p·BN·4 bytes ≤ ~2 MB for p ≤ 512, well inside the ~16 MB VMEM budget, and
-its (BN, p)·(p,) MXU work is aligned when p, BN are multiples of (8, 128).
+p axis and the k batch live entirely in VMEM (p ≪ n by construction — each
+worker's system is highly under-determined — and k is a serving batch).  A
+tile of A (p × BN) occupies p·BN·4 bytes ≤ ~2 MB for p ≤ 512, well inside
+the ~16 MB VMEM budget, and its (k, BN)·(BN, p) MXU work is aligned when
+k, p, BN are multiples of (8, 8, 128).  The BN choice is autotuned by
+``ops.pick_bn`` (measured, cached per (p, n, dtype), env-overridable).
 
-The u accumulator uses the sequential-grid property of TPU Pallas: every
-grid step writes the same (1, p) output block, zero-initialized at j == 0.
+The U accumulators use the sequential-grid property of TPU Pallas: every
+grid step writes the same (k, p) output block, zero-initialized at j == 0.
 
-Both kernels are exposed through ``ops.py`` (padding + jit + vmap over
-workers) and validated in interpret mode against ``ref.py``.
+All kernels are exposed through ``ops.py`` (padding + autotune + jit + vmap
+over workers) and validated in interpret mode against ``ref.py``.
 """
 from __future__ import annotations
 
@@ -53,17 +65,21 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _acc_dtype(dtype):
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
 def _gather_kernel(x_ref, xbar_ref, a_ref, u_ref, *, acc_dtype):
-    """Grid step j: u += A[:, j·BN:(j+1)·BN] @ (x̄ − x)[j·BN:(j+1)·BN]."""
+    """Grid step j: U += (X̄ − X)[:, j·BN:(j+1)·BN] @ A[:, j·BN:(j+1)·BN]ᵀ."""
     j = pl.program_id(0)
 
     @pl.when(j == 0)
     def _init():
         u_ref[...] = jnp.zeros_like(u_ref)
 
-    d = (xbar_ref[...] - x_ref[...]).astype(acc_dtype)      # (1, BN)
+    d = (xbar_ref[...] - x_ref[...]).astype(acc_dtype)      # (k, BN)
     a = a_ref[...].astype(acc_dtype)                        # (p, BN)
-    # (1, BN) @ (BN, p) on the MXU; accumulate in acc_dtype.
+    # (k, BN) @ (BN, p) on the MXU; accumulate in acc_dtype.
     u_ref[...] += jax.lax.dot_general(
         d, a, (((1,), (1,)), ((), ())),
         preferred_element_type=acc_dtype).astype(u_ref.dtype)
@@ -71,38 +87,68 @@ def _gather_kernel(x_ref, xbar_ref, a_ref, u_ref, *, acc_dtype):
 
 def _scatter_kernel(x_ref, xbar_ref, b_ref, u_ref, g_ref, y_ref, *,
                     acc_dtype):
-    """Grid step j: y_j = x_j + γ·(d_j − (B_j u))."""
-    d = xbar_ref[...] - x_ref[...]                          # (1, BN)
-    u = u_ref[...].astype(acc_dtype)                        # (1, p)
+    """Grid step j: Y_j = X_j + γ·(D_j − U·B_jᵀ)."""
+    d = xbar_ref[...] - x_ref[...]                          # (k, BN)
+    u = u_ref[...].astype(acc_dtype)                        # (k, p)
     b = b_ref[...].astype(acc_dtype)                        # (BN, p)
     bu = jax.lax.dot_general(
         u, b, (((1,), (1,)), ((), ())),
-        preferred_element_type=acc_dtype)                   # (1, BN)
+        preferred_element_type=acc_dtype)                   # (k, BN)
     gamma = g_ref[0, 0].astype(acc_dtype)
     y = x_ref[...].astype(acc_dtype) + gamma * (d.astype(acc_dtype) - bu)
     y_ref[...] = y.astype(y_ref.dtype)
 
 
+def _cim_gather_kernel(xbar_ref, a_ref, u_ref, *, acc_dtype):
+    """Grid step j: U += X̄[:, j·BN:(j+1)·BN] @ A[:, j·BN:(j+1)·BN]ᵀ."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    xb = xbar_ref[...].astype(acc_dtype)                    # (k, BN)
+    a = a_ref[...].astype(acc_dtype)                        # (p, BN)
+    u_ref[...] += jax.lax.dot_general(
+        xb, a, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype).astype(u_ref.dtype)
+
+
+def _cim_scatter_kernel(v_ref, b_ref, r_ref, *, acc_dtype):
+    """Grid step j: R_j = V·B_jᵀ  (the rank-p row projection write-out)."""
+    v = v_ref[...].astype(acc_dtype)                        # (k, p)
+    b = b_ref[...].astype(acc_dtype)                        # (BN, p)
+    r = jax.lax.dot_general(
+        v, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype)                   # (k, BN)
+    r_ref[...] = r.astype(r_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def apc_gather(A, x, xbar, *, bn: int = DEFAULT_BN,
                interpret: Optional[bool] = None):
-    """u = A (x̄ − x).   A (p, n); x, x̄ (1, n) lane-layout.  n % bn == 0."""
+    """U = (X̄ − X) Aᵀ.   A (p, n); X, X̄ (k, n) lane-layout.  n % bn == 0.
+
+    k is the RHS batch (k = 1 for a plain solve): every batch row reuses
+    the A tile already resident in VMEM, so one A read serves all k.
+    """
     if interpret is None:
         interpret = default_interpret()
     p, n = A.shape
+    k = x.shape[0]
     assert n % bn == 0, (n, bn)
-    acc = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+    acc = _acc_dtype(A.dtype)
     kernel = functools.partial(_gather_kernel, acc_dtype=acc)
     return pl.pallas_call(
         kernel,
         grid=(n // bn,),
         in_specs=[
-            pl.BlockSpec((1, bn), lambda j: (0, j)),      # x
-            pl.BlockSpec((1, bn), lambda j: (0, j)),      # xbar
+            pl.BlockSpec((k, bn), lambda j: (0, j)),      # x
+            pl.BlockSpec((k, bn), lambda j: (0, j)),      # xbar
             pl.BlockSpec((p, bn), lambda j: (0, j)),      # A
         ],
-        out_specs=pl.BlockSpec((1, p), lambda j: (0, 0)),  # u (accumulated)
-        out_shape=jax.ShapeDtypeStruct((1, p), A.dtype),
+        out_specs=pl.BlockSpec((k, p), lambda j: (0, 0)),  # U (accumulated)
+        out_shape=jax.ShapeDtypeStruct((k, p), A.dtype),
         interpret=interpret,
     )(x, xbar, A)
 
@@ -110,24 +156,73 @@ def apc_gather(A, x, xbar, *, bn: int = DEFAULT_BN,
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def apc_scatter(B, x, xbar, u, gamma, *, bn: int = DEFAULT_BN,
                 interpret: Optional[bool] = None):
-    """y = x + γ(d − B u).   B (n, p); x, x̄ (1, n); u (1, p); γ (1, 1)."""
+    """Y = X + γ(D − U Bᵀ).   B (n, p); X, X̄ (k, n); U (k, p); γ (1, 1)."""
     if interpret is None:
         interpret = default_interpret()
     n, p = B.shape
+    k = x.shape[0]
     assert n % bn == 0, (n, bn)
-    acc = jnp.float64 if B.dtype == jnp.float64 else jnp.float32
+    acc = _acc_dtype(B.dtype)
     kernel = functools.partial(_scatter_kernel, acc_dtype=acc)
     return pl.pallas_call(
         kernel,
         grid=(n // bn,),
         in_specs=[
-            pl.BlockSpec((1, bn), lambda j: (0, j)),      # x
-            pl.BlockSpec((1, bn), lambda j: (0, j)),      # xbar
+            pl.BlockSpec((k, bn), lambda j: (0, j)),      # x
+            pl.BlockSpec((k, bn), lambda j: (0, j)),      # xbar
             pl.BlockSpec((bn, p), lambda j: (j, 0)),      # B
-            pl.BlockSpec((1, p), lambda j: (0, 0)),       # u (replicated)
+            pl.BlockSpec((k, p), lambda j: (0, 0)),       # U (replicated)
             pl.BlockSpec((1, 1), lambda j: (0, 0)),       # gamma scalar
         ],
-        out_specs=pl.BlockSpec((1, bn), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        out_specs=pl.BlockSpec((k, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), x.dtype),
         interpret=interpret,
     )(x, xbar, B, u, gamma)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def cimmino_gather(A, xbar, *, bn: int = DEFAULT_BN,
+                   interpret: Optional[bool] = None):
+    """U = X̄ Aᵀ.   A (p, n); X̄ (k, n).  The Cimmino gather pass A x̄."""
+    if interpret is None:
+        interpret = default_interpret()
+    p, n = A.shape
+    k = xbar.shape[0]
+    assert n % bn == 0, (n, bn)
+    acc = _acc_dtype(A.dtype)
+    kernel = functools.partial(_cim_gather_kernel, acc_dtype=acc)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((k, bn), lambda j: (0, j)),      # xbar
+            pl.BlockSpec((p, bn), lambda j: (0, j)),      # A
+        ],
+        out_specs=pl.BlockSpec((k, p), lambda j: (0, 0)),  # U (accumulated)
+        out_shape=jax.ShapeDtypeStruct((k, p), A.dtype),
+        interpret=interpret,
+    )(xbar, A)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def cimmino_scatter(B, v, *, bn: int = DEFAULT_BN,
+                    interpret: Optional[bool] = None):
+    """R = V Bᵀ.   B (n, p); V (k, p).  The Cimmino scatter pass B v."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, p = B.shape
+    k = v.shape[0]
+    assert n % bn == 0, (n, bn)
+    acc = _acc_dtype(B.dtype)
+    kernel = functools.partial(_cim_scatter_kernel, acc_dtype=acc)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((k, p), lambda j: (0, 0)),       # v (replicated)
+            pl.BlockSpec((bn, p), lambda j: (j, 0)),      # B
+        ],
+        out_specs=pl.BlockSpec((k, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), v.dtype),
+        interpret=interpret,
+    )(v, B)

@@ -1,22 +1,59 @@
-"""Public jit'd wrappers around the Pallas APC kernels.
+"""Public jit'd wrappers around the Pallas projection-family kernels.
 
 Handles what the raw kernels do not: shape padding to hardware-aligned
-tiles, the (tiny, p × p) Gram solve between the two passes, vector-layout
-bookkeeping, and vmapping over the worker axis.
+tiles, the BN tile-size choice (measured autotune, cached per (p, n,
+dtype)), multi-RHS row-batch layout, and vmapping over the worker axis.
 
-``block_projection(A, B, x, xbar, gamma)`` is the drop-in replacement for
-``x + gamma * P(xbar - x)`` used by ``core/apc.py`` (``use_kernel=True``).
+The ops here are the fused iteration engine for the whole projection
+family (``use_kernel=True`` on apc / consensus / cimmino, both backends):
+
+  * ``block_projection(A, B, x, xbar, gamma)`` — the fused APC/consensus
+    worker update y = x + γ·P(x̄ − x); x/x̄ may carry a leading (k,) RHS
+    batch, which streams through ONE VMEM residency of each A/B tile.
+  * ``proj_gather`` / ``proj_scatter`` — the same two passes split so the
+    mesh backend can psum the (k, p) gather result over column shards
+    between them (B_loc u needs the FULL u = A d).
+  * ``cimmino_update(A, B, b, xbar)`` — the fused block-Cimmino row
+    projection r = B(b − A x̄), split the same way into
+    ``cimmino_gather`` / ``cimmino_scatter``.
+
+Every op accepts 1-D row vectors (plain solve) or (k, n) batches
+(``solve_many`` / ``LinsysServer``) and pads k / p / n to the (8, 8, 128)
+MXU-aligned tile internally — zero rows/cols are exact (zero-padded A rows
+produce zero U entries; zero-padded B columns ignore them).
+
+BN autotune: ``pick_bn`` measures the candidate lane tiles on the actual
+gather+scatter pair and caches the winner per (p, n_pad, dtype).  The
+measurement runs where the kernels actually compile (skipped in interpret
+mode — interpret timings say nothing about HBM traffic); force it with
+``REPRO_KERNEL_AUTOTUNE=1``, disable with ``=0``, or pin the tile outright
+with ``REPRO_KERNEL_BN=256``.
 """
 from __future__ import annotations
 
 import functools
+import logging
+import os
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import block_projection as bp
 from . import ref
+
+log = logging.getLogger("repro.kernels")
+
+BN_ENV = "REPRO_KERNEL_BN"
+AUTOTUNE_ENV = "REPRO_KERNEL_AUTOTUNE"
+
+# (p_pad, n_pad, dtype-name) -> measured (or heuristic) BN tile
+_BN_CACHE: dict = {}
+# candidate lane tiles, measured in this order; the heuristic fallback is
+# the FIRST candidate dividing n_pad (preserving the old _pick_bn choice)
+BN_CANDIDATES = (bp.DEFAULT_BN, 1024, 256, 128)
 
 
 def _pad_axis(a, axis: int, mult: int):
@@ -29,20 +66,160 @@ def _pad_axis(a, axis: int, mult: int):
     return jnp.pad(a, pads), size
 
 
-def _pick_bn(n: int) -> int:
-    """Largest lane-aligned tile that divides the padded n."""
-    for bn in (bp.DEFAULT_BN, 256, 128):
-        if n % bn == 0:
-            return bn
-    return 128
+def _rows(x):
+    """Lift (n,) to the (1, n) kernel row layout; remember to squeeze."""
+    x = jnp.asarray(x)
+    if x.ndim == 1:
+        return x[None, :], True
+    return x, False
+
+
+def _pad_rows(x):
+    """Pad the RHS-batch axis to the 8-sublane tile (k == 1 stays 1 — the
+    single-RHS layout the kernels always supported)."""
+    if x.shape[0] == 1:
+        return x
+    return _pad_axis(x, 0, 8)[0]
+
+
+def bn_cache_clear() -> None:
+    """Drop every cached BN choice (tests / re-tuning)."""
+    _BN_CACHE.clear()
+
+
+def bn_cache() -> dict:
+    """The live {(p_pad, n_pad, dtype): bn} autotune cache (read-only use)."""
+    return dict(_BN_CACHE)
+
+
+def _autotune_enabled(interpret: bool) -> bool:
+    env = os.environ.get(AUTOTUNE_ENV)
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    # interpret-mode timings measure the python interpreter, not HBM
+    # traffic — default to the heuristic there
+    return not interpret
+
+
+def _measure_bn(p_pad: int, n_pad: int, dtype, cands, interpret: bool) -> int:
+    """Time the gather+scatter pair per candidate tile; smallest wins.
+
+    Dummy operands, x == x̄ (d = 0 — timing is traffic-bound, not
+    value-dependent); best-of-3 after a compile warmup.
+    """
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((p_pad, n_pad)), dtype)
+    B = jnp.asarray(rng.standard_normal((n_pad, p_pad)), dtype)
+    x = jnp.asarray(rng.standard_normal((8, n_pad)), dtype)
+    u = jnp.asarray(rng.standard_normal((8, p_pad)), dtype)
+    g = jnp.ones((1, 1), dtype)
+    best, best_t = cands[0], float("inf")
+    for bn in cands:
+        def run(bn=bn):
+            uu = bp.apc_gather(A, x, x, bn=bn, interpret=interpret)
+            return bp.apc_scatter(B, x, x, u, g, bn=bn, interpret=interpret)
+        jax.block_until_ready(run())            # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = run()
+        jax.block_until_ready(out)
+        t = time.perf_counter() - t0
+        if t < best_t:
+            best, best_t = bn, t
+    log.debug("autotuned BN=%d for (p=%d, n=%d, %s) in %d candidates",
+              best, p_pad, n_pad, np.dtype(dtype).name, len(cands))
+    return best
+
+
+def pick_bn(n_pad: int, p_pad: int = 8, dtype=jnp.float32, *,
+            interpret: bool = True) -> int:
+    """The lane-axis tile for a (p, n) block: env pin > cache > measure.
+
+    Called at trace time (shapes are static), so the measured choice is
+    resolved once per (p, n, dtype) and the kernel grid is fixed from it.
+    """
+    env = os.environ.get(BN_ENV)
+    if env:
+        bn = int(env)
+        if n_pad % bn:
+            raise ValueError(
+                f"{BN_ENV}={bn} does not divide the padded n={n_pad} "
+                f"(n pads to a multiple of 128; pick a 128-multiple tile "
+                f"that divides it)")
+        return bn
+    key = (int(p_pad), int(n_pad), np.dtype(dtype).name)
+    hit = _BN_CACHE.get(key)
+    if hit is not None:
+        return hit
+    cands = [c for c in BN_CANDIDATES if n_pad % c == 0] or [128]
+    if len(cands) == 1 or not _autotune_enabled(interpret):
+        bn = cands[0]
+    else:
+        bn = _measure_bn(key[0], key[1], np.dtype(dtype), cands, interpret)
+    _BN_CACHE[key] = bn
+    return bn
+
+
+# ---------------------------------------------------------------------------
+# APC / consensus: the two projection passes, split and fused
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def proj_gather(A, x, xbar, *, interpret: Optional[bool] = None):
+    """u = A (x̄ − x) for one worker.   A (p, n); x/x̄ (n,) or (k, n).
+
+    Returns (p,) / (k, p).  The mesh backend psums this over column
+    shards before handing it to ``proj_scatter``.
+    """
+    if interpret is None:
+        interpret = bp.default_interpret()
+    p, n = A.shape
+    A2, _ = _pad_axis(A, 0, 8)
+    A2, _ = _pad_axis(A2, 1, 128)
+    x2, squeeze = _rows(x)
+    xb2, _ = _rows(xbar)
+    k = x2.shape[0]
+    x2 = _pad_rows(_pad_axis(x2, 1, 128)[0])
+    xb2 = _pad_rows(_pad_axis(xb2, 1, 128)[0])
+    n_pad = A2.shape[1]
+    bn = pick_bn(n_pad, A2.shape[0], A.dtype, interpret=interpret)
+    u = bp.apc_gather(A2, x2, xb2, bn=bn, interpret=interpret)
+    u = u[:k, :p]
+    return u[0] if squeeze else u
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def proj_scatter(B, x, xbar, u, gamma, *, interpret: Optional[bool] = None):
+    """y = x + γ(d − B u) for one worker.   B (n, p); u (p,) or (k, p)."""
+    if interpret is None:
+        interpret = bp.default_interpret()
+    n, p = B.shape
+    B2, _ = _pad_axis(B, 1, 8)
+    B2, _ = _pad_axis(B2, 0, 128)
+    x2, squeeze = _rows(x)
+    xb2, _ = _rows(xbar)
+    u2, _ = _rows(u)
+    k = x2.shape[0]
+    x2 = _pad_rows(_pad_axis(x2, 1, 128)[0])
+    xb2 = _pad_rows(_pad_axis(xb2, 1, 128)[0])
+    u2 = _pad_rows(_pad_axis(u2, 1, 8)[0])
+    n_pad = B2.shape[0]
+    bn = pick_bn(n_pad, B2.shape[1], B.dtype, interpret=interpret)
+    g = jnp.asarray(gamma, x2.dtype).reshape(1, 1)
+    y = bp.apc_scatter(B2, x2, xb2, u2, g, bn=bn, interpret=interpret)
+    y = y[:k, :n]
+    return y[0] if squeeze else y
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def block_projection(A, B, x, xbar, gamma, *,
                      interpret: Optional[bool] = None):
-    """y = x + gamma * (d - B (A d)), d = xbar - x, via the two Pallas passes.
+    """y = x + γ (d − B (A d)), d = x̄ − x, via the two fused Pallas passes.
 
-    A (p, n), B (n, p), x/xbar (n,). Pads p to a multiple of 8 and n to a
+    A (p, n), B (n, p); x/x̄ either (n,) — a plain solve — or (k, n), the
+    multi-RHS batch whose k rows share ONE read of every A/B tile.  Pads
+    k to a multiple of 8 (batched), p to a multiple of 8 and n to a
     multiple of 128 (zero rows/cols are exact: zero-padded A rows produce
     zero u entries; zero-padded B columns ignore them).
 
@@ -57,15 +234,19 @@ def block_projection(A, B, x, xbar, gamma, *,
     A2, _ = _pad_axis(A2, 1, 128)
     B2, _ = _pad_axis(B, 1, 8)
     B2, _ = _pad_axis(B2, 0, 128)
-    x2, _ = _pad_axis(x[None, :], 1, 128)
-    xb2, _ = _pad_axis(xbar[None, :], 1, 128)
+    x2, squeeze = _rows(x)
+    xb2, _ = _rows(xbar)
+    k = x2.shape[0]
+    x2 = _pad_rows(_pad_axis(x2, 1, 128)[0])
+    xb2 = _pad_rows(_pad_axis(xb2, 1, 128)[0])
     n_pad = A2.shape[1]
-    bn = _pick_bn(n_pad)
+    bn = pick_bn(n_pad, A2.shape[0], A.dtype, interpret=interpret)
 
-    u = bp.apc_gather(A2, x2, xb2, bn=bn, interpret=interpret)      # (1, p8)
-    g = jnp.asarray(gamma, x.dtype).reshape(1, 1)
+    u = bp.apc_gather(A2, x2, xb2, bn=bn, interpret=interpret)  # (k8, p8)
+    g = jnp.asarray(gamma, x2.dtype).reshape(1, 1)
     y = bp.apc_scatter(B2, x2, xb2, u, g, bn=bn, interpret=interpret)
-    return y[0, :n]
+    y = y[:k, :n]
+    return y[0] if squeeze else y
 
 
 def block_projection_batched(A, B, x, xbar, gamma, *,
@@ -73,6 +254,63 @@ def block_projection_batched(A, B, x, xbar, gamma, *,
     """vmap over the leading worker axis: A (m,p,n), B (m,n,p), x (m,n)."""
     fn = functools.partial(block_projection, interpret=interpret)
     return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(A, B, x, xbar, gamma)
+
+
+# ---------------------------------------------------------------------------
+# Block Cimmino: the row-projection passes
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cimmino_gather(A, xbar, *, interpret: Optional[bool] = None):
+    """u = A x̄ for one worker.   A (p, n); x̄ (n,) or (k, n) -> (p,)/(k, p).
+
+    The mesh backend psums this over column shards before forming
+    v = b − u for ``cimmino_scatter``.
+    """
+    if interpret is None:
+        interpret = bp.default_interpret()
+    p, n = A.shape
+    A2, _ = _pad_axis(A, 0, 8)
+    A2, _ = _pad_axis(A2, 1, 128)
+    xb2, squeeze = _rows(xbar)
+    k = xb2.shape[0]
+    xb2 = _pad_rows(_pad_axis(xb2, 1, 128)[0])
+    n_pad = A2.shape[1]
+    bn = pick_bn(n_pad, A2.shape[0], A.dtype, interpret=interpret)
+    u = bp.cimmino_gather(A2, xb2, bn=bn, interpret=interpret)
+    u = u[:k, :p]
+    return u[0] if squeeze else u
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cimmino_scatter(B, v, *, interpret: Optional[bool] = None):
+    """r = B v for one worker.   B (n, p); v (p,) or (k, p) -> (n,)/(k, n)."""
+    if interpret is None:
+        interpret = bp.default_interpret()
+    n, p = B.shape
+    B2, _ = _pad_axis(B, 1, 8)
+    B2, _ = _pad_axis(B2, 0, 128)
+    v2, squeeze = _rows(v)
+    k = v2.shape[0]
+    v2 = _pad_rows(_pad_axis(v2, 1, 8)[0])
+    n_pad = B2.shape[0]
+    bn = pick_bn(n_pad, B2.shape[1], B.dtype, interpret=interpret)
+    r = bp.cimmino_scatter(B2, v2, bn=bn, interpret=interpret)
+    r = r[:k, :n]
+    return r[0] if squeeze else r
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cimmino_update(A, B, b, xbar, *, interpret: Optional[bool] = None):
+    """Fused block-Cimmino row projection r = B (b − A x̄) for one worker.
+
+    A (p, n), B = Aᵀ G⁻¹ (n, p); b (p,) or (k, p); x̄ (n,) or (k, n).
+    Returns (n,) / (k, n).  The master update x̄ += ν Σᵢ rᵢ stays outside
+    (it is the worker-axis reduction, a psum on the mesh backend).
+    """
+    u = cimmino_gather(A, xbar, interpret=interpret)
+    return cimmino_scatter(B, jnp.asarray(b) - u, interpret=interpret)
 
 
 # Re-exported oracle (tests import both from one place).

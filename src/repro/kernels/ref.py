@@ -1,14 +1,22 @@
 """Pure-jnp oracles for the Pallas kernels (the correctness reference).
 
-The APC worker iteration, given the precomputed pseudoinverse factor
-B_i = A_i^T (A_i A_i^T)^{-1}  (n x p):
+The projection-family worker updates, given the precomputed pseudoinverse
+factor B_i = A_i^T (A_i A_i^T)^{-1}  (n x p):
+
+APC / consensus (gather + scatter):
 
     d = xbar - x
     u = A d                  (p,)    gather pass
     y = x + gamma * (d - B u)        scatter pass
 
-Everything is expressed with 2-D row vectors (1, n) to match the TPU kernel
-layout (lane dimension last).
+Block Cimmino (row projection):
+
+    u = A xbar               (p,)    gather pass
+    r = B (b - u)            (n,)    scatter pass
+
+Every oracle is batch-polymorphic exactly like the kernels: row-vector
+operands may carry a leading (k,) RHS axis (einsum '...' broadcasting), so
+one reference covers the single-RHS and the multi-RHS kernel paths.
 """
 from __future__ import annotations
 
@@ -16,14 +24,14 @@ import jax.numpy as jnp
 
 
 def apc_gather_ref(A, x, xbar):
-    """u = A (xbar - x).   A (p, n); x, xbar (n,). Returns (p,)."""
-    return A @ (xbar - x)
+    """u = A (xbar - x).   A (p, n); x, xbar (n,) or (k, n)."""
+    return jnp.einsum("pn,...n->...p", A, xbar - x)
 
 
 def apc_scatter_ref(B, x, xbar, u, gamma):
-    """y = x + gamma * ((xbar - x) - B u).   B (n, p)."""
+    """y = x + gamma * ((xbar - x) - B u).   B (n, p); u (p,) or (k, p)."""
     d = xbar - x
-    return x + gamma * (d - B @ u)
+    return x + gamma * (d - jnp.einsum("np,...p->...n", B, u))
 
 
 def block_projection_ref(A, B, x, xbar, gamma):
@@ -31,3 +39,18 @@ def block_projection_ref(A, B, x, xbar, gamma):
     P = I - B A (note B A == A^T G^{-1} A)."""
     u = apc_gather_ref(A, x, xbar)
     return apc_scatter_ref(B, x, xbar, u, gamma)
+
+
+def cimmino_gather_ref(A, xbar):
+    """u = A xbar.   A (p, n); xbar (n,) or (k, n)."""
+    return jnp.einsum("pn,...n->...p", A, xbar)
+
+
+def cimmino_scatter_ref(B, v):
+    """r = B v.   B (n, p); v (p,) or (k, p)."""
+    return jnp.einsum("np,...p->...n", B, v)
+
+
+def cimmino_update_ref(A, B, b, xbar):
+    """Full fused row projection: r = B (b - A xbar)."""
+    return cimmino_scatter_ref(B, b - cimmino_gather_ref(A, xbar))

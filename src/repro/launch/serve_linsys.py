@@ -49,6 +49,9 @@ def main(argv=None):
                     help="reuse a system's prior batch state for repeated "
                          "(any solver) or perturbed (gradient family / "
                          "Cimmino) right-hand sides")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="serve batches through the fused multi-RHS Pallas "
+                         "kernels (projection solvers, either backend)")
     ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
                     default=True)
     args = ap.parse_args(argv)
@@ -58,7 +61,8 @@ def main(argv=None):
                         directory=args.store_dir)
     srv = LinsysServer(store, solver=args.solver, iters=args.iters,
                        tol=args.tol, batch=args.batch, backend=args.backend,
-                       warm_start=args.warm_start)
+                       warm_start=args.warm_start,
+                       use_kernel=args.use_kernel)
 
     rng = np.random.default_rng(args.seed)
     fps, systems = [], []

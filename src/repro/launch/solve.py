@@ -58,6 +58,10 @@ def main(argv=None):
                     help="warm-start from the latest checkpoint in --ckpt-dir")
     ap.add_argument("--use-mesh", action="store_true",
                     help="run --method through the shard_map mesh backend")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route the per-worker update through the Pallas "
+                         "block-projection kernels (projection-family "
+                         "methods, local or mesh backend)")
     ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="float64 math (default on; checkpoints record the "
@@ -133,10 +137,12 @@ def main(argv=None):
         res = solver.solve(sys_, iters=args.iters, backend="mesh",
                            mesh=mesh, warm_state=warm, store=store,
                            redundancy=args.redundancy,
+                           use_kernel=args.use_kernel,
                            alive_schedule=alive_schedule, **params)
     else:
         res = solver.solve(sys_, iters=args.iters, warm_state=warm,
                            store=store, redundancy=args.redundancy,
+                           use_kernel=args.use_kernel,
                            alive_schedule=alive_schedule, **params)
     xbar, final_res = res.x, float(res.residuals[-1])
     if res.iters_to_tol != -1:

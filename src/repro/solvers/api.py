@@ -23,8 +23,11 @@ warm_state=state)`` to resume iterating instead of starting from scratch.
 
 Projection-family solvers (``apc``, ``consensus``, ``cimmino``) additionally
 accept ``use_kernel=True`` to route the per-worker projection through the
-Pallas TPU kernel, and auto-tune their parameters from the Theorem-1
-spectral analysis when none are given.
+Pallas TPU kernels — on BOTH backends (each mesh shard runs the kernel on
+its local block; the psum contract is unchanged), and with ``solve_many``
+batches fused through the multi-RHS kernels (one A/B read serves the whole
+batch) — and auto-tune their parameters from the Theorem-1 spectral
+analysis when none are given.
 
 Backends: ``solve(..., backend="mesh", mesh=...)`` runs the same lifecycle
 sharded across a device mesh via shard_map (see ``solvers/mesh.py``) — the
@@ -128,6 +131,21 @@ class Solver:
         """One synchronous iteration (all workers + master)."""
         raise NotImplementedError
 
+    def step_many(self, factors: Any, Bb: jnp.ndarray, states: Any,
+                  params: Dict[str, float], *,
+                  use_kernel: bool = False) -> Any:
+        """One iteration over a (k,)-batched RHS/state bundle.
+
+        The default vmaps ``step`` over the batch axis; projection-family
+        solvers override the ``use_kernel=True`` branch with the true
+        multi-RHS Pallas kernels, where ONE read of every A/B tile serves
+        the whole batch (``solve_many`` / ``LinsysServer`` hot path).
+        """
+        return jax.vmap(
+            lambda b, s: self.step(factors, b, s, params,
+                                   use_kernel=use_kernel),
+            in_axes=(0, 0))(Bb, states)
+
     def extract(self, state: Any) -> jnp.ndarray:
         """The global estimate x (n,) carried by ``state``."""
         raise NotImplementedError
@@ -190,6 +208,20 @@ class Solver:
         """One iteration on local shards (collectives via ``ctx``)."""
         raise NotImplementedError(
             f"solver {self.name!r} does not implement the mesh backend")
+
+    def mesh_step_many(self, factors: Any, Bb: jnp.ndarray, states: Any,
+                       params: Dict[str, float], ctx, *,
+                       use_kernel: bool = False) -> Any:
+        """Batched mesh step (RHS axis leading, replicated across shards).
+
+        Default vmaps ``mesh_step``; projection solvers override the
+        kernel branch with the multi-RHS Pallas kernels on the local
+        (p × n_local) blocks — shard_map composes with Pallas, and the
+        psum contract is identical (``use_kernel`` only reaches solvers
+        with ``supports_kernel``, so the base may ignore it)."""
+        return jax.vmap(
+            lambda bb, st: self.mesh_step(factors, bb, st, params, ctx),
+            in_axes=(0, 0))(Bb, states)
 
     def mesh_factors(self, factors: Any) -> Any:
         """Strip host-only fields before reusing factors on the mesh."""
@@ -281,9 +313,10 @@ class Solver:
         if backend != "mesh":
             raise ValueError(f"unknown backend {backend!r}; "
                              "expected 'local' or 'mesh'")
-        if use_kernel:
-            raise ValueError("use_kernel=True is not supported on the mesh "
-                             "backend (the Pallas path is single-device)")
+        # use_kernel composes with the mesh backend: shard_map hands each
+        # worker shard its local (p, n_local) block and the Pallas kernels
+        # run on it unchanged (the psum contract is outside the kernel).
+        self._check_kernel(use_kernel)
         return True
 
     def _store_factors(self, store, sys, factors, params, *,
@@ -352,7 +385,7 @@ class Solver:
                 self, sys, mesh=mesh, iters=iters, tol=tol,
                 worker_axes=worker_axes, model_axis=model_axis,
                 warm_state=warm_state, factors=factors, store=store,
-                **params)
+                use_kernel=use_kernel, **params)
         self._check_kernel(use_kernel)
         prm = self.resolve_params(sys, **params)
         if factors is None:
@@ -410,7 +443,8 @@ class Solver:
             return mesh_backend.solve_many_mesh(
                 self, sys, B, mesh=mesh, iters=iters, tol=tol,
                 worker_axes=worker_axes, model_axis=model_axis,
-                factors=factors, store=store, **params)
+                factors=factors, store=store, use_kernel=use_kernel,
+                **params)
         self._check_kernel(use_kernel)
         B = jnp.asarray(B)
         if B.ndim == 1:
@@ -429,9 +463,10 @@ class Solver:
         if use_kernel:
             factors = self.kernel_factors(factors)
         states = jax.vmap(lambda b: self.init(factors, b, prm))(Bb)
-        step = lambda f, b, s: self.step(f, b, s, prm, use_kernel=use_kernel)
-        states, res = _history_scan_many(step, self.extract, factors, Bb,
-                                         states, sys.A_blocks, iters)
+        step_many = lambda f, bb, sts: self.step_many(
+            f, bb, sts, prm, use_kernel=use_kernel)
+        states, res = _history_scan_many(step_many, self.extract, factors,
+                                         Bb, states, sys.A_blocks, iters)
         X = jax.vmap(self.extract)(states)
         return SolveResult(
             name=self.name, x=X, state=states, residuals=res, errors=None,
@@ -461,13 +496,18 @@ def _history_scan(step, extract, factors, b, state, A, x_true, iters: int):
     return state, res, err
 
 
-def _history_scan_many(step, extract, factors, Bb, states, A, iters: int):
-    """Batched variant: states/Bb carry a leading (k,) RHS axis."""
+def _history_scan_many(step_many, extract, factors, Bb, states, A,
+                       iters: int):
+    """Batched variant: states/Bb carry a leading (k,) RHS axis.
+
+    ``step_many`` is the solver's batched iteration — a vmap of ``step``
+    by default, the fused multi-RHS kernel path for the projection family
+    under ``use_kernel=True``.
+    """
     b_norms = jnp.sqrt(jnp.sum(Bb * Bb, axis=(1, 2)))
-    vstep = jax.vmap(lambda b, s: step(factors, b, s), in_axes=(0, 0))
 
     def body(states, _):
-        states = vstep(Bb, states)
+        states = step_many(factors, Bb, states)
         X = jax.vmap(extract)(states)                      # (k, n)
         r = jnp.einsum("mpn,kn->kmp", A, X) - Bb
         res = jnp.sqrt(jnp.sum(r * r, axis=(1, 2))) / b_norms

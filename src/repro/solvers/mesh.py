@@ -143,8 +143,25 @@ def _batched_specs(specs: Any) -> Any:
                         is_leaf=lambda s: isinstance(s, P))
 
 
+def _factor_specs(solver, ctx: MeshContext, use_kernel: bool):
+    """Factor specs, with the kernel-path augmentation (pinv factors)
+    included when requested.  ``use_kernel`` only reaches solvers with
+    ``supports_kernel``, whose specs hook takes the kwarg."""
+    if use_kernel:
+        return solver.mesh_factor_specs(ctx, use_kernel=True)
+    return solver.mesh_factor_specs(ctx)
+
+
+def _host_factors(solver, factors, use_kernel: bool):
+    """Host-side factor normalization before placement: strip host-only
+    fields, or (kernel path) idempotently ensure the pinv augmentation."""
+    if use_kernel:
+        return solver.mesh_factors(factors, use_kernel=True)
+    return solver.mesh_factors(factors)
+
+
 def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors,
-           store=None, resume: bool = False):
+           store=None, resume: bool = False, use_kernel: bool = False):
     """Shard A/b, run on-mesh prepare (unless factors are given).
 
     With a ``store``, the ``factors is None`` branch becomes a cache
@@ -153,23 +170,34 @@ def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors,
     later solves — either backend — hit it.  An entry therefore holds
     whichever mathematically-equivalent factorization first populated it
     (host or on-mesh prepare; for most solvers they are bit-identical).
+
+    ``use_kernel=True`` keeps the pinv factors: a store hit is augmented
+    ONCE and written back (``lookup(use_kernel=True)``), an on-mesh miss
+    computes them shard-locally inside ``mesh_prepare`` and the inserted
+    entry carries them, so later kernel solves on either backend never
+    re-run the augmentation.
     """
     mesh = ctx.mesh
     A_spec, b_spec = P(ctx.w, None, ctx.n), P(ctx.w, None)
-    fspecs = solver.mesh_factor_specs(ctx)
+    fspecs = _factor_specs(solver, ctx, use_kernel)
     A = jax.device_put(sys.A_blocks, NamedSharding(mesh, A_spec))
     b = jax.device_put(sys.b_blocks, NamedSharding(mesh, b_spec))
     if factors is None and store is not None:
-        factors = store.lookup(solver, sys, **prm)
+        factors = store.lookup(solver, sys, use_kernel=use_kernel, **prm)
     if factors is None:
+        prep_fn = ((lambda A_: solver.mesh_prepare(A_, prm, ctx,
+                                                   use_kernel=True))
+                   if use_kernel
+                   else (lambda A_: solver.mesh_prepare(A_, prm, ctx)))
         prep = jax.jit(shard_map(
-            lambda A_: solver.mesh_prepare(A_, prm, ctx), mesh=mesh,
-            in_specs=(A_spec,), out_specs=fspecs))
+            prep_fn, mesh=mesh, in_specs=(A_spec,), out_specs=fspecs))
         factors = prep(A)
         if store is not None:
-            store.insert(solver, sys, factors, resume=resume, **prm)
+            store.insert(solver, sys, factors, resume=resume,
+                         use_kernel=use_kernel, **prm)
     else:
-        factors = _put_tree(solver.mesh_factors(factors), fspecs, mesh)
+        factors = _put_tree(_host_factors(solver, factors, use_kernel),
+                            fspecs, mesh)
     return A, b, A_spec, b_spec, fspecs, factors
 
 
@@ -192,7 +220,8 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                   worker_axes: Sequence[str] = ("data",),
                   model_axis: Optional[str] = "model",
                   warm_state: Any = None, factors: Any = None,
-                  store: Any = None, **params) -> CompiledSolve:
+                  store: Any = None, use_kernel: bool = False,
+                  **params) -> CompiledSolve:
     """Placement + on-mesh setup + the jitted scan, without executing it."""
     if mesh is None:
         mesh = _default_mesh(sys.m)
@@ -201,7 +230,7 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
     prm = solver.resolve_params(sys, **params)
     A, b, A_spec, b_spec, fspecs, factors = _place(
         solver, sys, ctx, prm, factors, store=store,
-        resume=warm_state is not None)
+        resume=warm_state is not None, use_kernel=use_kernel)
     sspecs = solver.mesh_state_specs(ctx)
 
     if warm_state is None:
@@ -219,6 +248,12 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
         args += (jax.device_put(xt, NamedSharding(mesh, P(ctx.n))),)
         in_specs += (P(ctx.n),)
 
+    step_fn = ((lambda f, b_, st: solver.mesh_step(f, b_, st, prm, ctx,
+                                                   use_kernel=True))
+               if use_kernel
+               else (lambda f, b_, st: solver.mesh_step(f, b_, st, prm,
+                                                        ctx)))
+
     def run_body(A_, b_, f_, s_, *rest):
         b_norm = jnp.sqrt(ctx.psum_workers(jnp.sum(b_ * b_)))
         xt_ = rest[0] if rest else None
@@ -226,7 +261,7 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                    if xt_ is not None else None)
 
         def body(st, _):
-            st = solver.mesh_step(f_, b_, st, prm, ctx)
+            st = step_fn(f_, b_, st)
             x = solver.extract(st)
             res = residual_shard(A_, b_, x, b_norm, ctx)
             if xt_ is not None:
@@ -239,8 +274,11 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
         s_, (res, err) = jax.lax.scan(body, s_, None, length=iters)
         return s_, res, err
 
+    # pallas_call has no shard_map replication rule — the kernel path
+    # disables the check (the psum contract itself is unchanged)
     run = jax.jit(shard_map(run_body, mesh=mesh, in_specs=in_specs,
-                            out_specs=(sspecs, P(), P())))
+                            out_specs=(sspecs, P(), P()),
+                            check_rep=not use_kernel))
     return CompiledSolve(run=run, args=args, params=prm,
                          has_errors=xt is not None)
 
@@ -250,16 +288,19 @@ def solve_mesh(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                worker_axes: Sequence[str] = ("data",),
                model_axis: Optional[str] = "model",
                warm_state: Any = None, factors: Any = None,
-               store: Any = None, **params) -> SolveResult:
+               store: Any = None, use_kernel: bool = False,
+               **params) -> SolveResult:
     """Sharded ``solve``: the mesh twin of ``Solver.solve``.
 
     Returns the same ``SolveResult`` (full residual/error history,
     warm-startable state with global shapes) as the single-host driver.
+    ``use_kernel=True`` (projection family) runs each worker shard's
+    update through the Pallas kernels on its local (p × n_local) block.
     """
     cs = compile_solve(solver, sys, mesh=mesh, iters=iters,
                        worker_axes=worker_axes, model_axis=model_axis,
                        warm_state=warm_state, factors=factors, store=store,
-                       **params)
+                       use_kernel=use_kernel, **params)
     state, res, err = cs.run(*cs.args)
     return SolveResult(
         name=solver.name, x=solver.extract(state), state=state,
@@ -289,14 +330,17 @@ class BatchedRunner(NamedTuple):
         return -1 if any(s < 0 for s in sizes) else sum(sizes)
 
 
-def batched_runner(solver, ctx: MeshContext, prm, iters: int) -> BatchedRunner:
+def batched_runner(solver, ctx: MeshContext, prm, iters: int,
+                   use_kernel: bool = False) -> BatchedRunner:
     """Build the jitted multi-RHS init/run pair shared by ``solve_many_mesh``
     and the serving layer.  Nothing system-specific is baked in beyond the
     params and the mesh context: A / b / factors / states are arguments, so
-    one runner serves every same-shape system."""
+    one runner serves every same-shape system.  ``use_kernel=True`` routes
+    the batched step through ``mesh_step_many``'s fused multi-RHS Pallas
+    path (projection family)."""
     mesh = ctx.mesh
     A_spec, Bb_spec = P(ctx.w, None, ctx.n), P(None, ctx.w, None)
-    fspecs = solver.mesh_factor_specs(ctx)
+    fspecs = _factor_specs(solver, ctx, use_kernel)
     sspecs = _batched_specs(solver.mesh_state_specs(ctx))
 
     init_fn = jax.jit(shard_map(
@@ -306,7 +350,10 @@ def batched_runner(solver, ctx: MeshContext, prm, iters: int) -> BatchedRunner:
 
     def run_body(A_, Bb_, f_, s_):
         b_norms = jnp.sqrt(ctx.psum_workers(jnp.sum(Bb_ * Bb_, axis=(1, 2))))
-        vstep = jax.vmap(lambda bb, st: solver.mesh_step(f_, bb, st, prm, ctx))
+
+        def vstep(Bb__, sts):
+            return solver.mesh_step_many(f_, Bb__, sts, prm, ctx,
+                                         use_kernel=use_kernel)
 
         def body(sts, _):
             sts = vstep(Bb_, sts)
@@ -321,7 +368,8 @@ def batched_runner(solver, ctx: MeshContext, prm, iters: int) -> BatchedRunner:
 
     run = jax.jit(shard_map(run_body, mesh=mesh,
                             in_specs=(A_spec, Bb_spec, fspecs, sspecs),
-                            out_specs=(sspecs, P(None, ctx.n), P())))
+                            out_specs=(sspecs, P(None, ctx.n), P()),
+                            check_rep=not use_kernel))
     return BatchedRunner(init=init_fn, run=run, A_spec=A_spec,
                          Bb_spec=Bb_spec, factor_specs=fspecs,
                          state_specs=sspecs)
@@ -333,9 +381,10 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
                     worker_axes: Sequence[str] = ("data",),
                     model_axis: Optional[str] = "model",
                     factors: Any = None, store: Any = None,
-                    **params) -> SolveResult:
+                    use_kernel: bool = False, **params) -> SolveResult:
     """Sharded multi-RHS solve: one on-mesh factorization, k right-hand
-    sides vmapped inside the shard_map body (batch axis replicated)."""
+    sides batched inside the shard_map body (batch axis replicated) — the
+    fused multi-RHS kernels under ``use_kernel=True``."""
     if mesh is None:
         mesh = _default_mesh(sys.m)
     ctx = make_context(mesh, sys, worker_axes=worker_axes,
@@ -348,8 +397,8 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
     k = B.shape[0]
     prm = solver.resolve_params(sys, **params)
     A, _, _, _, _, factors = _place(solver, sys, ctx, prm, factors,
-                                    store=store)
-    runner = batched_runner(solver, ctx, prm, iters)
+                                    store=store, use_kernel=use_kernel)
+    runner = batched_runner(solver, ctx, prm, iters, use_kernel=use_kernel)
 
     Bb = jax.device_put(B.reshape(k, sys.m, sys.p),
                         NamedSharding(mesh, runner.Bb_spec))

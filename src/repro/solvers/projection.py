@@ -117,23 +117,51 @@ class APCSolver(Solver):
         return apc_core.apc_step(legacy, state, gamma, eta,
                                  use_kernel=use_kernel)
 
+    def step_many(self, factors, Bb, states, params, *, use_kernel=False):
+        """Fused multi-RHS iteration: the k batch rows stream through ONE
+        VMEM residency of every A/B tile (states.x (k, m, n))."""
+        if not (use_kernel and factors.B is not None):
+            return super().step_many(factors, Bb, states, params,
+                                     use_kernel=use_kernel)
+        from repro.kernels import ops as kops
+        gamma, eta = params["gamma"], params["eta"]
+        X = jnp.swapaxes(states.x, 0, 1)                  # (m, k, n)
+
+        def worker(Ai, Bi, Xi):
+            return kops.block_projection(Ai, Bi, Xi, states.xbar, gamma)
+
+        x_new = jnp.swapaxes(
+            jax.vmap(worker)(factors.A, factors.B, X), 0, 1)   # (k, m, n)
+        xbar_new = (eta * jnp.mean(x_new, axis=1)
+                    + (1.0 - eta) * states.xbar)
+        return APCState(x=x_new, xbar=xbar_new, t=states.t + 1)
+
     def extract(self, state):
         return state.xbar
 
     # ----- mesh backend ---------------------------------------------------
-    def mesh_factor_specs(self, ctx):
+    def mesh_factor_specs(self, ctx, use_kernel=False):
         return ProjFactors(A=P(ctx.w, None, ctx.n),
-                           chol=P(ctx.w, None, None), B=None)
+                           chol=P(ctx.w, None, None),
+                           B=P(ctx.w, ctx.n, None) if use_kernel else None)
 
     def mesh_state_specs(self, ctx):
         return APCState(x=P(ctx.w, ctx.n), xbar=P(ctx.n), t=P())
 
-    def mesh_factors(self, factors):
+    def mesh_factors(self, factors, use_kernel=False):
+        if use_kernel:
+            return _with_pinv(factors)      # idempotent host augmentation
         return factors._replace(B=None)     # pinv factors are kernel-only
 
-    def mesh_prepare(self, A, params, ctx):
-        return ProjFactors(
-            A=A, chol=_mesh_gram_chol(A, params.get("jitter", 0.0), ctx))
+    def mesh_prepare(self, A, params, ctx, use_kernel=False):
+        chol = _mesh_gram_chol(A, params.get("jitter", 0.0), ctx)
+        factors = ProjFactors(A=A, chol=chol)
+        if use_kernel:
+            # B_loc = A_locᵀ G⁻¹ is shard-local given the FULL Gram's
+            # Cholesky (cho_solve acts on the p axis only), so the pinv
+            # augmentation runs on-mesh without materializing A anywhere
+            factors = _with_pinv(factors)
+        return factors
 
     def mesh_init(self, factors, b, params, ctx):
         w = _cho_solve_workers(factors.chol, b)
@@ -142,17 +170,48 @@ class APCSolver(Solver):
         xbar0 = ctx.psum_workers(jnp.sum(x0, axis=0)) / m
         return APCState(x=x0, xbar=xbar0, t=jnp.zeros((), jnp.int32))
 
-    def mesh_step(self, factors, b, state, params, ctx):
+    def mesh_step(self, factors, b, state, params, ctx, *, use_kernel=False):
         gamma, eta = params["gamma"], params["eta"]
-        d = state.xbar[None, :] - state.x                 # (m_loc, n_loc)
-        u = ctx.psum_model(jnp.einsum("mpn,mn->mp", factors.A, d))
-        w = _cho_solve_workers(factors.chol, u)           # G^{-1} A_i d
-        proj = d - jnp.einsum("mpn,mp->mn", factors.A, w)
-        x_new = state.x + gamma * proj                    # Eq. 2a
+        if use_kernel and factors.B is not None:
+            from repro.kernels import ops as kops
+            u_loc = jax.vmap(
+                lambda Ai, xi: kops.proj_gather(Ai, xi, state.xbar))(
+                    factors.A, state.x)               # (m_loc, p)
+            u = ctx.psum_model(u_loc)                 # full u = A_i d
+            x_new = jax.vmap(
+                lambda Bi, xi, ui: kops.proj_scatter(Bi, xi, state.xbar,
+                                                     ui, gamma))(
+                    factors.B, state.x, u)            # Eq. 2a, fused
+        else:
+            d = state.xbar[None, :] - state.x             # (m_loc, n_loc)
+            u = ctx.psum_model(jnp.einsum("mpn,mn->mp", factors.A, d))
+            w = _cho_solve_workers(factors.chol, u)       # G^{-1} A_i d
+            proj = d - jnp.einsum("mpn,mp->mn", factors.A, w)
+            x_new = state.x + gamma * proj                # Eq. 2a
         m = ctx.workers_total(x_new.shape[0])
         s = ctx.psum_workers(jnp.sum(x_new, axis=0))      # Eq. 2b psum
         xbar_new = (eta / m) * s + (1.0 - eta) * state.xbar
         return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
+
+    def mesh_step_many(self, factors, Bb, states, params, ctx, *,
+                       use_kernel=False):
+        if not (use_kernel and factors.B is not None):
+            return super().mesh_step_many(factors, Bb, states, params, ctx)
+        from repro.kernels import ops as kops
+        gamma, eta = params["gamma"], params["eta"]
+        X = jnp.swapaxes(states.x, 0, 1)                  # (m_loc, k, n_loc)
+        u_loc = jax.vmap(
+            lambda Ai, Xi: kops.proj_gather(Ai, Xi, states.xbar))(
+                factors.A, X)                             # (m_loc, k, p)
+        u = ctx.psum_model(u_loc)
+        x_new = jnp.swapaxes(jax.vmap(
+            lambda Bi, Xi, ui: kops.proj_scatter(Bi, Xi, states.xbar,
+                                                 ui, gamma))(
+                factors.B, X, u), 0, 1)                   # (k, m_loc, n_loc)
+        m = ctx.workers_total(x_new.shape[1])
+        s = ctx.psum_workers(jnp.sum(x_new, axis=1))      # (k, n_loc)
+        xbar_new = (eta / m) * s + (1.0 - eta) * states.xbar
+        return APCState(x=x_new, xbar=xbar_new, t=states.t + 1)
 
     # ----- redundant execution (solvers/redundant.py) ---------------------
     # Internal state keeps the APCState structure with x grown to the
@@ -253,13 +312,11 @@ class CimminoSolver(Solver):
         if use_kernel and factors.B is not None:
             from repro.kernels import ops as kops
 
+            # the dedicated Cimmino kernel pair: r_i = B_i (b_i − A_i x̄)
+            # (B = A^T G^{-1} bakes the Gram inverse in, so no per-step
+            # cho_solve and no rewrite onto the APC update shape)
             def worker(Ai, Bi, bi):
-                # r_i = A^T G^{-1}(b - A xbar) rewritten onto the kernel's
-                # y = x + gamma (d - B A d) form with x := x0, gamma := 1,
-                # using B A x0 = x0:  y - xbar = B(b - A xbar) = r_i.
-                x0i = Bi @ bi
-                y = kops.block_projection(Ai, Bi, x0i, state.xbar, 1.0)
-                return y - state.xbar
+                return kops.cimmino_update(Ai, Bi, bi, state.xbar)
 
             r = jax.vmap(worker)(factors.A, factors.B, b)
         else:
@@ -271,31 +328,73 @@ class CimminoSolver(Solver):
         return CimminoState(xbar=state.xbar + nu * jnp.sum(r, axis=0),
                             t=state.t + 1)
 
+    def step_many(self, factors, Bb, states, params, *, use_kernel=False):
+        """Fused multi-RHS row projections (Bb (k, m, p), x̄ (k, n))."""
+        if not (use_kernel and factors.B is not None):
+            return super().step_many(factors, Bb, states, params,
+                                     use_kernel=use_kernel)
+        from repro.kernels import ops as kops
+        bw = jnp.swapaxes(Bb, 0, 1)                       # (m, k, p)
+
+        def worker(Ai, Bi, bi):
+            return kops.cimmino_update(Ai, Bi, bi, states.xbar)   # (k, n)
+
+        r = jax.vmap(worker)(factors.A, factors.B, bw)    # (m, k, n)
+        return CimminoState(xbar=states.xbar + params["nu"] * jnp.sum(r, 0),
+                            t=states.t + 1)
+
     def extract(self, state):
         return state.xbar
 
     # ----- mesh backend ---------------------------------------------------
-    def mesh_factor_specs(self, ctx):
+    def mesh_factor_specs(self, ctx, use_kernel=False):
         return ProjFactors(A=P(ctx.w, None, ctx.n),
-                           chol=P(ctx.w, None, None), B=None)
+                           chol=P(ctx.w, None, None),
+                           B=P(ctx.w, ctx.n, None) if use_kernel else None)
 
     def mesh_state_specs(self, ctx):
         return CimminoState(xbar=P(ctx.n), t=P())
 
-    def mesh_factors(self, factors):
+    def mesh_factors(self, factors, use_kernel=False):
+        if use_kernel:
+            return _with_pinv(factors)
         return factors._replace(B=None)
 
-    def mesh_prepare(self, A, params, ctx):
-        return ProjFactors(
+    def mesh_prepare(self, A, params, ctx, use_kernel=False):
+        factors = ProjFactors(
             A=A, chol=_mesh_gram_chol(A, params.get("jitter", 0.0), ctx))
+        if use_kernel:
+            factors = _with_pinv(factors)     # shard-local, see APCSolver
+        return factors
 
-    def mesh_step(self, factors, b, state, params, ctx):
-        u = ctx.psum_model(jnp.einsum("mpn,n->mp", factors.A, state.xbar))
-        w = _cho_solve_workers(factors.chol, b - u)       # G^{-1}(b - A xbar)
-        r = jnp.einsum("mpn,mp->mn", factors.A, w)        # row projections
+    def mesh_step(self, factors, b, state, params, ctx, *, use_kernel=False):
+        if use_kernel and factors.B is not None:
+            from repro.kernels import ops as kops
+            u = ctx.psum_model(jax.vmap(
+                lambda Ai: kops.cimmino_gather(Ai, state.xbar))(factors.A))
+            r = jax.vmap(kops.cimmino_scatter)(factors.B, b - u)
+        else:
+            u = ctx.psum_model(jnp.einsum("mpn,n->mp", factors.A,
+                                          state.xbar))
+            w = _cho_solve_workers(factors.chol, b - u)   # G^{-1}(b - A xbar)
+            r = jnp.einsum("mpn,mp->mn", factors.A, w)    # row projections
         s = ctx.psum_workers(jnp.sum(r, axis=0))
         return CimminoState(xbar=state.xbar + params["nu"] * s,
                             t=state.t + 1)
+
+    def mesh_step_many(self, factors, Bb, states, params, ctx, *,
+                       use_kernel=False):
+        if not (use_kernel and factors.B is not None):
+            return super().mesh_step_many(factors, Bb, states, params, ctx)
+        from repro.kernels import ops as kops
+        # Bb (k, m_loc, p); x̄ (k, n_loc); gather is RHS-batched per worker
+        u = ctx.psum_model(jax.vmap(
+            lambda Ai: kops.cimmino_gather(Ai, states.xbar))(factors.A))
+        v = jnp.swapaxes(Bb, 0, 1) - u                    # (m_loc, k, p)
+        r = jax.vmap(kops.cimmino_scatter)(factors.B, v)  # (m_loc, k, n_loc)
+        s = ctx.psum_workers(jnp.sum(r, axis=0))          # (k, n_loc)
+        return CimminoState(xbar=states.xbar + params["nu"] * s,
+                            t=states.t + 1)
 
     # ----- redundant execution (solvers/redundant.py) ---------------------
     # State is the master estimate alone (already global-shaped): the

@@ -19,6 +19,11 @@ lives here and ``repro.launch.serve`` imports it): groups are FIFO, a
 short final group is padded by repeating the last request so the compiled
 batch shape stays stable, and padding is NEVER counted in throughput.
 
+Kernel serving (``use_kernel=True``, projection solvers): every coalesced
+batch runs through the fused multi-RHS Pallas kernels — one read of each
+A/B tile serves the whole batch — on either backend; the store entry is
+augmented with the pinv factors exactly once.
+
 Warm starts (``warm_start=True``): a system's previous batch state seeds
 the next one.  Repeated right-hand sides always qualify (that is exactly
 ``solve(warm_state=...)`` resume); PERTURBED right-hand sides only
@@ -104,13 +109,15 @@ class _System:
 class _LocalExecutor:
     """Compile-once single-host executor: jitted init+scan over a padded
     (batch, m, p) RHS block.  One instance serves every system that shares
-    its (shapes, params) key."""
+    its (shapes, params) key.  ``use_kernel=True`` routes the batched step
+    through the fused multi-RHS Pallas kernels (``Solver.step_many``)."""
 
-    def __init__(self, solver, prm, iters: int):
+    def __init__(self, solver, prm, iters: int, use_kernel: bool = False):
         def _run(A, factors, Bb, states):
-            step = lambda f, b, s: solver.step(f, b, s, prm)
-            states, res = _history_scan_many(step, solver.extract, factors,
-                                             Bb, states, A, iters)
+            step_many = lambda f, bb, sts: solver.step_many(
+                f, bb, sts, prm, use_kernel=use_kernel)
+            states, res = _history_scan_many(step_many, solver.extract,
+                                             factors, Bb, states, A, iters)
             return states, jax.vmap(solver.extract)(states), res
 
         def _cold(A, factors, Bb):
@@ -141,22 +148,26 @@ class _MeshExecutor:
     """Mesh twin: wraps ``mesh.batched_runner`` and owns placement."""
 
     def __init__(self, solver, prm, iters: int, sys: BlockSystem,
-                 mesh, worker_axes, model_axis):
+                 mesh, worker_axes, model_axis, use_kernel: bool = False):
         from . import mesh as mesh_backend
         self.solver = solver
+        self.use_kernel = use_kernel
         self.mesh = mesh if mesh is not None \
             else mesh_backend._default_mesh(sys.m)
         self.ctx = mesh_backend.make_context(
             self.mesh, sys, worker_axes=worker_axes, model_axis=model_axis)
         self.runner = mesh_backend.batched_runner(solver, self.ctx, prm,
-                                                  iters)
+                                                  iters,
+                                                  use_kernel=use_kernel)
 
     def place_system(self, sys: BlockSystem, factors):
         from . import mesh as mesh_backend
         A = jax.device_put(sys.A_blocks,
                            NamedSharding(self.mesh, self.runner.A_spec))
-        f = mesh_backend._put_tree(self.solver.mesh_factors(factors),
-                                   self.runner.factor_specs, self.mesh)
+        f = mesh_backend._put_tree(
+            mesh_backend._host_factors(self.solver, factors,
+                                       self.use_kernel),
+            self.runner.factor_specs, self.mesh)
         return A, f
 
     def place_B(self, Bb: np.ndarray):
@@ -187,7 +198,7 @@ class LinsysServer:
     def __init__(self, store: Optional[FactorStore] = None, *,
                  solver="apc", iters: int = 500, tol: float = 1e-6,
                  batch: int = 4, backend: str = "local", mesh=None,
-                 warm_start: bool = False,
+                 warm_start: bool = False, use_kernel: bool = False,
                  worker_axes: Sequence[str] = ("data",),
                  model_axis: Optional[str] = "model", **params):
         if backend not in ("local", "mesh"):
@@ -198,9 +209,11 @@ class LinsysServer:
         from .registry import get
         self.store = store if store is not None else FactorStore()
         self.solver = get(solver) if isinstance(solver, str) else solver
+        self.solver._check_kernel(use_kernel)
         self.iters, self.tol, self.batch = iters, tol, batch
         self.backend, self.mesh = backend, mesh
         self.warm_start = warm_start
+        self.use_kernel = use_kernel
         self.worker_axes, self.model_axis = tuple(worker_axes), model_axis
         self.params = params
         self.stats = ServerStats()
@@ -220,7 +233,7 @@ class LinsysServer:
         dtype = sys.A_blocks.dtype
         executor_key = (self.solver.name, sys.m, sys.p, sys.n, str(dtype),
                         tuple(sorted(prm.items())), self.backend,
-                        self.batch, self.iters)
+                        self.batch, self.iters, self.use_kernel)
         self._systems[fp] = _System(sys=sys, prm=prm, dtype=dtype,
                                     executor_key=executor_key)
         self._queues.setdefault(fp, deque())
@@ -253,9 +266,11 @@ class LinsysServer:
             if self.backend == "mesh":
                 ex = _MeshExecutor(self.solver, ent.prm, self.iters,
                                    ent.sys, self.mesh, self.worker_axes,
-                                   self.model_axis)
+                                   self.model_axis,
+                                   use_kernel=self.use_kernel)
             else:
-                ex = _LocalExecutor(self.solver, ent.prm, self.iters)
+                ex = _LocalExecutor(self.solver, ent.prm, self.iters,
+                                    use_kernel=self.use_kernel)
             self._executors[key] = ex
         return ex
 
@@ -293,9 +308,11 @@ class LinsysServer:
         group, n_real = take_group(self._queues[fp], self.batch)
 
         # every factor acquisition goes through the store (hit after the
-        # first batch; key precomputed at register() so no re-hash of A)
+        # first batch; key precomputed at register() so no re-hash of A;
+        # the kernel path augments the cached entry with the pinv factors
+        # exactly once — ``kernel_factors`` is idempotent)
         factors = self.store.factors(self.solver, ent.sys, key=fp,
-                                     **ent.prm)
+                                     use_kernel=self.use_kernel, **ent.prm)
         ex = self._executor(ent)
         if ent.placed_src is not factors:     # first batch / post-eviction
             ent.A_placed, ent.factors_placed = ex.place_system(ent.sys,

@@ -205,27 +205,35 @@ class FactorStore:
         prm = solver.resolve_params(sys, **params)
         if key is None:
             key = fingerprint(solver.name, sys, prm)
-        factors = self.lookup(solver, sys, key=key, **prm)
+        factors = self.lookup(solver, sys, key=key, use_kernel=use_kernel,
+                              **prm)
         if factors is None:
             factors = self.insert(solver, sys,
                                   solver.prepare(sys.A_blocks, prm),
-                                  resume=resume, key=key, **prm)
-        if use_kernel:
-            augmented = solver.kernel_factors(factors)
-            if augmented is not factors:
-                # augment ONCE per entry; later hits get the augmented
-                # factors back and kernel_factors detects them (idempotent)
-                self._mem[key] = augmented
-            factors = augmented
+                                  resume=resume, key=key,
+                                  use_kernel=use_kernel, **prm)
         return factors
 
+    def _augment(self, solver, key: str, factors):
+        """Kernel-path augmentation, ONCE per cache slot: later hits get
+        the augmented factors back and ``kernel_factors`` detects them
+        (idempotent), so the pinv precomputation never re-runs."""
+        augmented = solver.kernel_factors(factors)
+        if augmented is not factors and key in self._mem:
+            self._mem[key] = augmented
+        return augmented
+
     def lookup(self, solver, sys: BlockSystem, *,
-               key: Optional[str] = None, **params):
+               key: Optional[str] = None, use_kernel: bool = False,
+               **params):
         """Memory/disk lookup that does NOT prepare on a miss (returns
         None instead).  Backends whose factorization should not run on
         the host (the mesh backend prepares on-mesh under shard_map) use
         this + ``insert`` so a miss is repaid THEIR way while hits and
-        persistence still flow through the store."""
+        persistence still flow through the store.  ``use_kernel=True``
+        augments a hit with the pinv factors and writes the augmentation
+        back into the slot — the same once-per-entry contract as
+        ``factors`` — so the mesh-side split gets it too."""
         solver = self._as_solver(solver)
         if key is None:
             prm = solver.resolve_params(sys, **params)
@@ -234,22 +242,30 @@ class FactorStore:
         if factors is not None:
             self._mem.move_to_end(key)
             self.stats.hits += 1
-            return factors
+            return self._augment(solver, key, factors) if use_kernel \
+                else factors
         factors = self._disk_load(key, solver, sys)
         if factors is not None:
             self.stats.disk_hits += 1
             self._insert(key, factors)
-            return factors
+            return self._augment(solver, key, factors) if use_kernel \
+                else factors
         return None
 
     def insert(self, solver, sys: BlockSystem, factors, *,
-               resume: bool = False, key: Optional[str] = None, **params):
+               resume: bool = False, key: Optional[str] = None,
+               use_kernel: bool = False, **params):
         """Record a caller-prepared factorization: counts the miss the
-        caller just repaid, persists to the disk tier, and caches it."""
+        caller just repaid, persists to the disk tier, and caches it.
+        ``use_kernel=True`` ensures the cached entry carries the pinv
+        augmentation (a no-op when the caller's prepare — e.g. the
+        on-mesh kernel ``mesh_prepare`` — already computed it)."""
         solver = self._as_solver(solver)
         prm = solver.resolve_params(sys, **params)
         if key is None:
             key = fingerprint(solver.name, sys, prm)
+        if use_kernel:
+            factors = solver.kernel_factors(factors)
         self.stats.misses += 1
         if resume:
             self.stats.resume_misses += 1

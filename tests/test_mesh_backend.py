@@ -118,9 +118,13 @@ def test_mesh_solve_many_matches_local(sys_, mesh, name):
 
 
 def test_mesh_rejects_kernel_and_unknown_backend(sys_, mesh):
-    s = solvers.get("apc")
+    # use_kernel now COMPOSES with backend="mesh" for the projection
+    # family (see test_kernel_engine.py); it must still be rejected for
+    # solvers without a kernel path, same as on the local backend.
+    s = solvers.get("dgd")
     with pytest.raises(ValueError, match="use_kernel"):
         s.solve(sys_, iters=5, backend="mesh", mesh=mesh, use_kernel=True)
+    s = solvers.get("apc")
     with pytest.raises(ValueError, match="backend"):
         s.solve(sys_, iters=5, backend="bogus")
     with pytest.raises(ValueError, match="backend='mesh'"):
