@@ -7,10 +7,19 @@ the convergence-time comparisons (Table 2) are wall-clock fair.
 
 ``kernel_comparison`` is the machine-readable kernel-vs-unfused matrix
 (projection family, batch 1 vs 16) that seeds the benchmark trajectory:
-``scripts/bench_ci.py`` records it in BENCH_PR5.json and gates kernel >=
+``scripts/bench_ci.py`` records it in BENCH_PR*.json and gates kernel >=
 unfused at batch 16 so later PRs have a trend to regress against.  On
 CPU lanes the kernels run in interpret mode — a functional trend
 baseline, not TPU perf (the recorded ``interpret`` flag says which).
+
+Three paths per (method, batch) cell since the engine autotune landed:
+``unfused`` (use_kernel=False), ``kernel`` (the RAW fused kernels, pinned
+via ``REPRO_KERNEL_ENGINE=fused`` so the PR5 trend keeps its meaning),
+and ``dispatch`` (use_kernel=True through ``kops.use_fused`` — what the
+serving executors actually compile).  ``dispatch_speedup_b{k}`` =
+unfused/dispatch is the satellite regression number: the cimmino batch-1
+cell, 0.88x when always-fused (BENCH_PR5), must sit at ~1.0x now that
+dispatch falls back to the unfused step there.
 """
 from __future__ import annotations
 
@@ -52,9 +61,12 @@ def kernel_comparison(n: int = 512, m: int = 2, batches=(1, 16),
     enough that the per-step Gram solves the kernel path eliminates
     dominate the unfused step.
     """
+    import os
+
     import jax.numpy as jnp
     import numpy as np
     from repro.kernels import block_projection as bp
+    from repro.kernels import ops as kops
 
     jax.config.update("jax_enable_x64", True)
     sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=0)
@@ -65,6 +77,7 @@ def kernel_comparison(n: int = 512, m: int = 2, batches=(1, 16),
         s = solvers.get(name)
         prm = s.resolve_params(sys_)
         factors = store.factors(s, sys_, use_kernel=True, **prm)
+        family = "cimmino" if name == "cimmino" else "apc"
         per = {}
         for k in batches:
             Bb = jnp.asarray(np.random.default_rng(0).standard_normal(
@@ -75,11 +88,29 @@ def kernel_comparison(n: int = 512, m: int = 2, batches=(1, 16),
                                            use_kernel=False))
             fused = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
                             _s.step_many(_f, _B, sts, _p, use_kernel=True))
+            dispatch = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
+                               _s.step_many(_f, _B, sts, _p,
+                                            use_kernel=True))
             tu = _time(unfused, states, iters=iters)
-            tk = _time(fused, states, iters=iters)
+            # RAW kernel timing: pin the engine so the trace can't fall
+            # back to the unfused step (the dispatch row measures that)
+            prev = os.environ.get(kops.ENGINE_ENV)
+            os.environ[kops.ENGINE_ENV] = "fused"
+            try:
+                tk = _time(fused, states, iters=iters)
+            finally:
+                if prev is None:
+                    os.environ.pop(kops.ENGINE_ENV, None)
+                else:
+                    os.environ[kops.ENGINE_ENV] = prev
+            td = _time(dispatch, states, iters=iters)
             per[f"unfused_b{k}_us"] = round(tu, 2)
             per[f"kernel_b{k}_us"] = round(tk, 2)
             per[f"kernel_speedup_b{k}"] = round(tu / tk, 4)
+            per[f"dispatch_b{k}_us"] = round(td, 2)
+            per[f"dispatch_speedup_b{k}"] = round(tu / td, 4)
+            per[f"engine_b{k}"] = ("fused" if kops.use_fused(
+                family, sys_.p, sys_.N, k, Bb.dtype) else "unfused")
         out["methods"][name] = per
     return out
 
@@ -110,6 +141,10 @@ def run(verbose: bool = True, n: int = 512, m: int = 4):
                          per[f"kernel_b{k}_us"],
                          f"{mode};unfused={per[f'unfused_b{k}_us']:.1f}us;"
                          f"speedup={per[f'kernel_speedup_b{k}']:.2f}x"))
+            rows.append((f"periter/{name}_dispatch_b{k}",
+                         per[f"dispatch_b{k}_us"],
+                         f"{mode};engine={per[f'engine_b{k}']};"
+                         f"vs_unfused={per[f'dispatch_speedup_b{k}']:.2f}x"))
 
     if verbose:
         for r in rows:

@@ -17,19 +17,40 @@ What the factor-store/serving subsystem claims, measured:
   * Steady-state throughput in RHS/s, padding excluded.
 
 ``measure()`` is the machine-readable core (also recorded in
-BENCH_PR5.json by ``scripts/bench_ci.py``, which re-asserts the
+BENCH_PR*.json by ``scripts/bench_ci.py``, which re-asserts the
 zero-retrace invariant as a trend gate); ``use_kernel=True`` serves every
 batch through the fused multi-RHS Pallas kernels.
+
+``traffic()`` is the OPEN-LOOP closed-measurement harness the async
+pipeline is gated on: requests arrive on a Poisson (or bursty) schedule
+regardless of how fast the server drains them — the arrival process never
+waits on completions, which is what exposes saturation — while latency is
+measured per request from its SCHEDULED arrival to its completion.  It
+drives either server (``server="sync"`` steps ``LinsysServer`` between
+arrivals; ``server="async"`` submits into the ``AsyncLinsysServer``
+pipeline at arrival time) and reports p50/p95/p99 latency, sustained
+throughput, and the shed rate.  ``scripts/bench_ci.py`` runs the pair at
+a rate where the sync loop saturates and gates async >= sync throughput.
+
+The async win is HOST-PARALLELISM dependent: at saturation the sync loop
+never idles, so on a single-core host it already sits at the makespan
+floor (total CPU work / 1 core) and no overlap can beat it — the
+pipeline's gain comes from filling the cores the sync loop leaves idle
+between device calls.  ``traffic()`` therefore records ``host_cpus`` and
+the bench gate degrades from strict async>=sync to an overhead bound
+(async >= 0.80x sync) when the host has a single core.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.data import linsys
-from repro.solvers.serve import LinsysServer
+from repro.solvers.pipeline import AsyncLinsysServer, Shed
+from repro.solvers.serve import LinsysServer, Served
 from repro.solvers.store import FactorStore
 
 ITERS = 150
@@ -92,6 +113,178 @@ def measure(n: int = 256, m: int = 4, iters: int = ITERS,
     }
 
 
+# ---------------------------------------------------------------------------
+# Open-loop traffic harness (Poisson / bursty arrivals, SLO measurement)
+# ---------------------------------------------------------------------------
+
+
+def host_cpus() -> int:
+    """CPU cores actually available to this process (affinity-aware)."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:                       # non-Linux
+        return os.cpu_count() or 1
+
+
+def arrival_times(arrival: str, rate: float, n_requests: int,
+                  seed: int = 0, burst: int = 8) -> np.ndarray:
+    """Scheduled arrival offsets (seconds from t0) for an open-loop run.
+
+    ``poisson``: exponential inter-arrivals at ``rate`` req/s.  ``bursty``:
+    the same mean rate delivered as back-to-back bursts of ``burst``
+    simultaneous requests (a Poisson burst process at rate/burst).  A
+    non-positive or infinite rate degenerates to one burst at t=0 — the
+    saturation probe.
+    """
+    if not np.isfinite(rate) or rate <= 0:
+        return np.zeros(n_requests)
+    rng = np.random.default_rng(seed)
+    if arrival == "poisson":
+        return np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    if arrival == "bursty":
+        n_bursts = int(np.ceil(n_requests / burst))
+        gaps = rng.exponential(burst / rate, size=n_bursts)
+        return np.repeat(np.cumsum(gaps), burst)[:n_requests]
+    raise ValueError(f"unknown arrival process {arrival!r}; "
+                     "expected 'poisson' or 'bursty'")
+
+
+def _traffic_setup(server, solver, systems, n, m, iters, batch, warm_start,
+                   use_kernel, pipeline_depth, admit_capacity, seed):
+    syss = [linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=s)
+            for s in range(systems)]
+    store = FactorStore()
+    # explicit params where the solver allows it -> ONE shared executor
+    prm = ({"gamma": 1.0, "eta": 1.0} if solver in ("apc", "consensus")
+           else {})
+    kw = dict(solver=solver, iters=iters, batch=batch,
+              warm_start=warm_start, use_kernel=use_kernel, **prm)
+    if server == "async":
+        srv = AsyncLinsysServer(store, pipeline_depth=pipeline_depth,
+                                admit_capacity=admit_capacity or 4096, **kw)
+    elif server == "sync":
+        srv = LinsysServer(store, **kw)
+    else:
+        raise ValueError(f"unknown server {server!r}")
+    fps = [srv.register(s) for s in syss]
+    rng = np.random.default_rng(seed + 1)
+    return srv, store, syss, fps, rng
+
+
+def _prime(srv, syss, fps, rng, batch, server):
+    """One batch per system OFF the clock: prepare + compile are the cold
+    costs ``measure()`` tracks; the traffic harness measures steady state."""
+    for fp, s in zip(fps, syss):
+        for _ in range(batch):
+            srv.submit(fp, rng.standard_normal(s.N))
+    if server == "async":
+        srv.start()
+        srv.drain()
+        srv.reset_metrics()
+    else:
+        srv.drain()
+
+
+def traffic(server: str = "async", arrival: str = "poisson",
+            rate: float = 100.0, n_requests: int = 48, systems: int = 2,
+            n: int = 256, m: int = 4, iters: int = 100, batch: int = BATCH,
+            pipeline_depth: int = 2, admit_capacity: int = None,
+            warm_start: bool = False, use_kernel: bool = False,
+            solver: str = "apc", seed: int = 0, burst: int = 8) -> dict:
+    """Open-loop arrivals, closed measurement: drive ``n_requests`` over
+    ``systems`` distinct systems at ``rate`` req/s through either server
+    and report the SLO numbers.
+
+    Latency is scheduled-arrival -> completion (so a request that arrives
+    while the sync loop is mid-batch is charged its queueing delay);
+    throughput counts SERVED requests (shed excluded) over the span from
+    first arrival to last completion; the jit cache is sampled after the
+    priming batches and at the end — equal sizes == zero steady-state
+    retraces.
+    """
+    jax.config.update("jax_enable_x64", True)
+    srv, store, syss, fps, rng = _traffic_setup(
+        server, solver, systems, n, m, iters, batch, warm_start,
+        use_kernel, pipeline_depth, admit_capacity, seed)
+    _prime(srv, syss, fps, rng, batch, server)
+    cache0 = srv.jit_cache_size()
+
+    arr = arrival_times(arrival, rate, n_requests, seed=seed, burst=burst)
+    order = np.random.default_rng(seed + 2).integers(0, systems,
+                                                     size=n_requests)
+    rhs = [rng.standard_normal(syss[i].N) for i in order]
+
+    lat, served, shed = [], 0, 0
+    max_res = 0.0
+    if server == "async":
+        t0 = time.perf_counter()
+        tickets = []
+        for i in range(n_requests):
+            wait = t0 + arr[i] - time.perf_counter()
+            if wait > 0:
+                time.sleep(wait)
+            tickets.append(srv.submit(fps[order[i]], rhs[i]))
+        results = [t.result() for t in tickets]
+        t_end = time.perf_counter()
+        for r in results:
+            if isinstance(r, Shed):
+                shed += 1
+            else:
+                served += 1
+                max_res = max(max_res, r.residual)
+        lat = list(srv.latencies())
+        srv.close()
+    else:
+        t0 = time.perf_counter()
+        arrived_at = {}
+        i = 0
+        while served < n_requests:
+            now = time.perf_counter() - t0
+            while i < n_requests and arr[i] <= now:
+                rid = srv.submit(fps[order[i]], rhs[i])
+                arrived_at[rid] = arr[i]
+                i += 1
+            if srv.pending() == 0:
+                if i < n_requests:
+                    time.sleep(max(arr[i] - (time.perf_counter() - t0),
+                                   1e-4))
+                continue
+            for r in srv.step():
+                done = time.perf_counter() - t0
+                lat.append(done - arrived_at[r.rid])
+                served += 1
+                max_res = max(max_res, r.residual)
+        t_end = time.perf_counter()
+
+    cache1 = srv.jit_cache_size()
+    span = max(t_end - t0, 1e-9)
+    lat = np.asarray(lat if lat else [0.0])
+    q = np.percentile(lat, [50, 95, 99]) * 1e3
+    return {
+        "server": server, "arrival": arrival, "rate": float(rate),
+        "n_requests": n_requests, "systems": systems, "n": n, "m": m,
+        "iters": iters, "batch": batch, "pipeline_depth": pipeline_depth,
+        "warm_start": warm_start, "use_kernel": use_kernel,
+        "served": served, "shed": shed,
+        "shed_rate": shed / n_requests,
+        "throughput_rhs_s": served / span,
+        "p50_ms": float(q[0]), "p95_ms": float(q[1]), "p99_ms": float(q[2]),
+        "mean_ms": float(lat.mean() * 1e3),
+        "max_residual": max_res, "duration_s": span,
+        "host_cpus": host_cpus(),
+        "jit_cache": (cache0, cache1),
+        "zero_retrace": (-1 in (cache0, cache1)) or cache0 == cache1,
+        "store_misses": store.stats.misses,
+    }
+
+
+def saturation_throughput(**kw) -> float:
+    """Sync ``drain()`` throughput on a t=0 burst: the capacity of the
+    one-batch-at-a-time loop.  Rates above this saturate it."""
+    return traffic(server="sync", rate=float("inf"), **kw)[
+        "throughput_rhs_s"]
+
+
 def run(verbose: bool = True, n: int = 256, m: int = 4,
         use_kernel: bool = False):
     mm = measure(n=n, m=m, use_kernel=use_kernel)
@@ -121,6 +314,24 @@ def run(verbose: bool = True, n: int = 256, m: int = 4,
         print(f"[{tag}] warm  {mm['warm_s'] * 1e3:8.1f} ms   "
               f"({mm['speedup']:.1f}x, {mm['rhs_per_s']:.1f} RHS/s, "
               f"jit cache {mm['jit_cache_tail']})")
+
+    # open-loop Poisson traffic at a rate where the sync loop saturates:
+    # the async pipeline must sustain at least the sync throughput with
+    # its p50/p95/p99 on record (the BENCH gate re-asserts this)
+    cap = saturation_throughput(n_requests=24, iters=100,
+                                use_kernel=use_kernel)
+    for srv_kind in ("sync", "async"):
+        tr = traffic(server=srv_kind, rate=2.0 * cap, n_requests=32,
+                     iters=100, use_kernel=use_kernel)
+        rows.append((
+            f"serve_traffic/{srv_kind}_p99_{tag}", tr["p99_ms"] * 1e3,
+            f"rate={tr['rate']:.0f}rps;tp={tr['throughput_rhs_s']:.1f}rhs/s;"
+            f"p50={tr['p50_ms']:.0f}ms;shed={tr['shed_rate']:.2f}"))
+        if verbose:
+            print(f"[{tag}] {srv_kind:5s} @{tr['rate']:6.0f} req/s: "
+                  f"{tr['throughput_rhs_s']:6.1f} RHS/s   p50/p95/p99 "
+                  f"{tr['p50_ms']:.0f}/{tr['p95_ms']:.0f}/"
+                  f"{tr['p99_ms']:.0f} ms   shed {tr['shed_rate']:.2f}")
     return rows
 
 

@@ -30,6 +30,9 @@ XLA_FLAGS="$FORCE4" python scripts/smokes/mesh.py
 echo "== serve smoke (LinsysServer: 2 systems, factor-store amortization) =="
 python scripts/smokes/serve.py
 
+echo "== serve_async smoke (AsyncLinsysServer: pipelined stream, SLO report) =="
+python scripts/smokes/serve_async.py
+
 echo "== straggler smoke (r=2, rotating straggler, 4 forced host devices) =="
 XLA_FLAGS="$FORCE4" python scripts/smokes/straggler.py
 

@@ -161,6 +161,140 @@ def pick_bn(n_pad: int, p_pad: int = 8, dtype=jnp.float32, *,
 
 
 # ---------------------------------------------------------------------------
+# Engine autotune: "unfused" is a candidate too
+# ---------------------------------------------------------------------------
+#
+# The tile autotune above assumes the fused kernel is the right engine and
+# only picks its lane tile.  That is false in one measured corner: the
+# Cimmino kernel LOSES to the plain XLA step at batch 1 (0.88x in
+# BENCH_PR5.json — the single-RHS row projection has no A/B-tile reuse to
+# amortize, so the kernel's padding + two-pass overhead is pure cost).
+# ``use_fused`` extends the measured autotune with the unfused step as a
+# candidate per (family, p, n, k, dtype): the projection-family dispatch
+# consults it at TRACE time (shapes are static) and falls back to the
+# unfused step when fused loses, so ``use_kernel=True`` always means "the
+# faster engine", never "the fused engine even where it regresses".
+#
+# ``REPRO_KERNEL_ENGINE=fused|unfused`` pins the choice (benchmarks use it
+# to measure the raw fused path); where measurement is off (interpret mode
+# without REPRO_KERNEL_AUTOTUNE=1) the decision comes from the measured
+# BENCH trend itself: fused everywhere EXCEPT cimmino below a full
+# 8-sublane RHS batch.
+
+ENGINE_ENV = "REPRO_KERNEL_ENGINE"
+ENGINE_FAMILIES = ("apc", "cimmino")
+# (family, p_pad, n_pad, k_pad, dtype-name) -> bool (True = fused wins)
+_ENGINE_CACHE: dict = {}
+
+
+def engine_cache_clear() -> None:
+    """Drop every cached engine choice (tests / re-tuning)."""
+    _ENGINE_CACHE.clear()
+
+
+def engine_cache() -> dict:
+    """The live engine-choice cache (read-only use)."""
+    return dict(_ENGINE_CACHE)
+
+
+def _pad_to(size: int, mult: int) -> int:
+    return size + (-size) % mult
+
+
+def _measure_engine(family: str, p_pad: int, n_pad: int, k_pad: int,
+                    dtype, interpret: bool) -> bool:
+    """Time one worker's fused kernel pair against the unfused XLA step
+    for the SAME (p, n, k) shape; faster engine wins.  Dummy operands,
+    best-of-3 after a compile warmup (same protocol as ``_measure_bn``)."""
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((p_pad, n_pad)), dtype)
+    G = A @ A.T + 1e-3 * jnp.eye(p_pad, dtype=dtype)
+    L = jnp.linalg.cholesky(G)
+    Bm = jax.scipy.linalg.cho_solve((L, True), A).T          # (n, p)
+    x = jnp.asarray(rng.standard_normal((k_pad, n_pad)), dtype)
+    xbar = jnp.asarray(rng.standard_normal((k_pad, n_pad)), dtype)
+    b = jnp.asarray(rng.standard_normal((k_pad, p_pad)), dtype)
+
+    if family == "cimmino":
+        def fused():
+            return cimmino_update(A, Bm, b, xbar, interpret=interpret)
+
+        @jax.jit
+        def unfused():
+            w = jax.scipy.linalg.cho_solve((L, True), (b - xbar @ A.T).T).T
+            return w @ A
+    else:
+        def fused():
+            return block_projection(A, Bm, x, xbar, 1.0,
+                                    interpret=interpret)
+
+        @jax.jit
+        def unfused():
+            d = xbar - x
+            w = jax.scipy.linalg.cho_solve((L, True), (d @ A.T).T).T
+            return x + (d - w @ A)
+
+    times = {}
+    for name, run in (("fused", fused), ("unfused", unfused)):
+        jax.block_until_ready(run())             # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = run()
+        jax.block_until_ready(out)
+        times[name] = time.perf_counter() - t0
+    fused_wins = times["fused"] <= times["unfused"]
+    log.debug("engine autotune %s (p=%d, n=%d, k=%d, %s): fused %.1fus "
+              "unfused %.1fus -> %s", family, p_pad, n_pad, k_pad,
+              np.dtype(dtype).name, times["fused"] * 1e6 / 3,
+              times["unfused"] * 1e6 / 3,
+              "fused" if fused_wins else "unfused")
+    return fused_wins
+
+
+def use_fused(family: str, p: int, n: int, k: int = 1,
+              dtype=jnp.float32, *, interpret: Optional[bool] = None) -> bool:
+    """Should this (family, p, n, k, dtype) shape run the fused kernels?
+
+    Resolution order: ``REPRO_KERNEL_ENGINE`` pin > cache > measured
+    fused-vs-unfused comparison (where the autotune measures — see
+    ``_autotune_enabled``) > the BENCH-trend heuristic (fused everywhere
+    except cimmino below a full 8-row RHS batch).  Called at trace time by
+    the projection-family ``step``/``step_many`` dispatch, so the choice
+    is baked into each compiled executor — zero steady-state retraces.
+    """
+    if family not in ENGINE_FAMILIES:
+        raise ValueError(f"unknown kernel family {family!r}; "
+                         f"expected one of {ENGINE_FAMILIES}")
+    env = os.environ.get(ENGINE_ENV)
+    if env:
+        choice = env.strip().lower()
+        if choice not in ("fused", "unfused"):
+            raise ValueError(f"{ENGINE_ENV}={env!r}: expected 'fused' or "
+                             "'unfused'")
+        return choice == "fused"
+    if interpret is None:
+        interpret = bp.default_interpret()
+    p_pad = _pad_to(int(p), 8)
+    n_pad = _pad_to(int(n), 128)
+    k_pad = 1 if int(k) == 1 else _pad_to(int(k), 8)
+    key = (family, p_pad, n_pad, k_pad, np.dtype(dtype).name)
+    hit = _ENGINE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    if _autotune_enabled(interpret):
+        fused = _measure_engine(family, p_pad, n_pad, k_pad,
+                                np.dtype(dtype), interpret)
+    else:
+        # the measured trend (BENCH_PR5/PR6): the fused engine wins
+        # wherever the RHS batch fills the 8-sublane tile or the APC
+        # pinv step removes per-iteration Gram solves; the lone loser is
+        # the sub-batch cimmino row projection
+        fused = not (family == "cimmino" and k_pad < 8)
+    _ENGINE_CACHE[key] = fused
+    return fused
+
+
+# ---------------------------------------------------------------------------
 # APC / consensus: the two projection passes, split and fused
 # ---------------------------------------------------------------------------
 

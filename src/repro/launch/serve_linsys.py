@@ -12,6 +12,17 @@ retraces.  Throughput excludes padding.
         --systems 2 --batch 4 --solver apc --iters 400
     PYTHONPATH=src python -m repro.launch.serve_linsys --backend mesh \
         --store-dir /tmp/factors --warm-start
+
+``--async`` swaps in the pipelined ``AsyncLinsysServer``: requests are
+submitted on an open-loop Poisson schedule (``--arrival-rate`` req/s; 0 =
+all at t=0) and served by the overlapped admission/assembly/execution
+stages (``--pipeline-depth`` in-flight batches, ``--admit-capacity``
+bounds queued+in-flight requests — overflow is shed with an explicit
+result, not queued).  The run ends with the SLO latency report
+(p50/p95/p99) and the shed rate.
+
+    PYTHONPATH=src python -m repro.launch.serve_linsys --async \
+        --requests 24 --arrival-rate 50 --pipeline-depth 2
 """
 from __future__ import annotations
 
@@ -23,6 +34,7 @@ import numpy as np
 
 from repro import solvers
 from repro.data import linsys
+from repro.solvers.pipeline import AsyncLinsysServer, Shed
 from repro.solvers.serve import LinsysServer
 from repro.solvers.store import FactorStore
 
@@ -54,15 +66,30 @@ def main(argv=None):
                          "kernels (projection solvers, either backend)")
     ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
                     default=True)
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="serve through the pipelined AsyncLinsysServer "
+                         "(overlapped admission/assembly/execution)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s for "
+                         "--async (0 = submit everything at t=0)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="concurrently-executing batches in --async mode")
+    ap.add_argument("--admit-capacity", type=int, default=None,
+                    help="admission bound (queued + in flight) in --async "
+                         "mode; overflow requests are shed explicitly")
     args = ap.parse_args(argv)
 
     jax.config.update("jax_enable_x64", args.x64)
     store = FactorStore(capacity=args.store_capacity,
                         directory=args.store_dir)
-    srv = LinsysServer(store, solver=args.solver, iters=args.iters,
-                       tol=args.tol, batch=args.batch, backend=args.backend,
-                       warm_start=args.warm_start,
-                       use_kernel=args.use_kernel)
+    kw = dict(solver=args.solver, iters=args.iters, tol=args.tol,
+              batch=args.batch, backend=args.backend,
+              warm_start=args.warm_start, use_kernel=args.use_kernel)
+    if args.async_:
+        srv = AsyncLinsysServer(store, pipeline_depth=args.pipeline_depth,
+                                admit_capacity=args.admit_capacity, **kw)
+    else:
+        srv = LinsysServer(store, **kw)
 
     rng = np.random.default_rng(args.seed)
     fps, systems = [], []
@@ -75,25 +102,58 @@ def main(argv=None):
         print(f"registered system {i}: N={sys_.N} n={sys_.n} m={sys_.m} "
               f"fingerprint {fp[:16]}...")
 
-    for _ in range(args.requests):
-        i = int(rng.integers(0, args.systems))
-        srv.submit(fps[i], rng.standard_normal(systems[i].N))
+    picks = [int(rng.integers(0, args.systems))
+             for _ in range(args.requests)]
+    rhss = [rng.standard_normal(systems[i].N) for i in picks]
 
-    t0 = time.time()
     n_bad = 0
-    while True:
-        tb = time.time()
-        batch = srv.step()
-        if not batch:
-            break
-        dt = time.time() - tb
-        worst = max(r.residual for r in batch)
-        n_bad += sum(r.residual >= args.tol for r in batch)
-        print(f"batch {srv.stats.batches}: {len(batch)} request(s) "
-              f"[{batch[0].fp[:8]}...] in {dt * 1e3:7.1f} ms  "
-              f"worst residual {worst:.2e}"
-              + ("  (warm)" if batch[0].warm else ""))
-    dt = time.time() - t0
+    if args.async_:
+        # open-loop Poisson arrivals: submission times never wait on
+        # completions, so saturation shows up as queueing/shedding
+        if args.arrival_rate > 0:
+            arr = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                            size=args.requests))
+        else:
+            arr = np.zeros(args.requests)
+        t0 = time.time()
+        with srv:
+            tickets = []
+            for i in range(args.requests):
+                wait = t0 + arr[i] - time.time()
+                if wait > 0:
+                    time.sleep(wait)
+                tickets.append(srv.submit(fps[picks[i]], rhss[i]))
+            results = [t.result() for t in tickets]
+        dt = time.time() - t0
+        n_shed = 0
+        for r in results:
+            if isinstance(r, Shed):
+                n_shed += 1
+                continue
+            n_bad += r.residual >= args.tol
+        rep = srv.latency_report()
+        print(f"async pipeline (depth {srv.pipeline_depth}, capacity "
+              f"{srv.admit_capacity}): {srv.stats.served} served / "
+              f"{n_shed} shed over {srv.stats.batches} batches")
+        print(f"latency p50/p95/p99 {rep['p50_ms']:.0f}/{rep['p95_ms']:.0f}"
+              f"/{rep['p99_ms']:.0f} ms  mean {rep['mean_ms']:.0f} ms")
+    else:
+        for i in range(args.requests):
+            srv.submit(fps[picks[i]], rhss[i])
+        t0 = time.time()
+        while True:
+            tb = time.time()
+            batch = srv.step()
+            if not batch:
+                break
+            bt = time.time() - tb
+            worst = max(r.residual for r in batch)
+            n_bad += sum(r.residual >= args.tol for r in batch)
+            print(f"batch {srv.stats.batches}: {len(batch)} request(s) "
+                  f"[{batch[0].fp[:8]}...] in {bt * 1e3:7.1f} ms  "
+                  f"worst residual {worst:.2e}"
+                  + ("  (warm)" if batch[0].warm else ""))
+        dt = time.time() - t0
 
     st = srv.stats
     print(f"served {st.served} requests in {dt:.2f}s "

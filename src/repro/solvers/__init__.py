@@ -32,10 +32,19 @@ Cached factorizations + request serving (the serve-traffic hot path):
     res = solvers.get("apc").solve(sys, store=store)     # hit after 1st
     srv = solvers.LinsysServer(store, solver="apc", batch=4)
 
+Async pipelined serving (overlapped admission/assembly/execution, per-
+request futures, SLO latency report):
+
+    asrv = solvers.AsyncLinsysServer(store, solver="apc", batch=4,
+                                     pipeline_depth=2)
+    with asrv:
+        tickets = [asrv.submit(fp, b) for b in stream]
+
 See ``api.Solver`` for the protocol, ``registry.register`` for adding a
 new method, ``mesh`` for the sharded backend, ``redundant`` for the
 r-redundant straggler-tolerant layer, ``store`` for the content-addressed
-factor cache, and ``serve`` for the linear-system request server.
+factor cache, ``serve`` for the linear-system request server, and
+``pipeline`` for its async pipelined twin.
 """
 from .api import Solver, SolveResult, iters_to_tolerance  # noqa: F401
 from .registry import available, get, register  # noqa: F401
@@ -46,3 +55,4 @@ from . import mesh  # noqa: F401, E402  (the shard_map execution backend)
 from . import redundant  # noqa: F401, E402  (straggler-tolerant layer)
 from .store import FactorStore, fingerprint  # noqa: F401, E402
 from .serve import LinsysServer  # noqa: F401, E402
+from .pipeline import AsyncLinsysServer, Shed, Ticket  # noqa: F401, E402

@@ -105,13 +105,21 @@ class APCSolver(Solver):
         gamma, eta = params["gamma"], params["eta"]
         if use_kernel and factors.B is not None:
             from repro.kernels import ops as kops
+            # the engine autotune includes "unfused" as a candidate: when
+            # the fused pair loses at this (p, n, k=1, dtype) the step
+            # falls through to the plain XLA path below (trace-time
+            # choice — baked into the compiled executor, never retraced)
+            if kops.use_fused("apc", factors.A.shape[1], factors.A.shape[2],
+                              1, factors.A.dtype):
+                def worker(Ai, Bi, xi):
+                    return kops.block_projection(Ai, Bi, xi, state.xbar,
+                                                 gamma)
 
-            def worker(Ai, Bi, xi):
-                return kops.block_projection(Ai, Bi, xi, state.xbar, gamma)
-
-            x_new = jax.vmap(worker)(factors.A, factors.B, state.x)
-            xbar_new = eta * jnp.mean(x_new, axis=0) + (1.0 - eta) * state.xbar
-            return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
+                x_new = jax.vmap(worker)(factors.A, factors.B, state.x)
+                xbar_new = (eta * jnp.mean(x_new, axis=0)
+                            + (1.0 - eta) * state.xbar)
+                return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
+            use_kernel = False                   # measured fallback
         legacy = apc_core.APCFactors(A=factors.A, chol=factors.chol,
                                      x0=None, b=None)
         return apc_core.apc_step(legacy, state, gamma, eta,
@@ -124,6 +132,10 @@ class APCSolver(Solver):
             return super().step_many(factors, Bb, states, params,
                                      use_kernel=use_kernel)
         from repro.kernels import ops as kops
+        if not kops.use_fused("apc", factors.A.shape[1], factors.A.shape[2],
+                              Bb.shape[0], factors.A.dtype):
+            return super().step_many(factors, Bb, states, params,
+                                     use_kernel=False)   # measured fallback
         gamma, eta = params["gamma"], params["eta"]
         X = jnp.swapaxes(states.x, 0, 1)                  # (m, k, n)
 
@@ -309,7 +321,16 @@ class CimminoSolver(Solver):
 
     def step(self, factors, b, state, params, *, use_kernel=False):
         nu = params["nu"]
-        if use_kernel and factors.B is not None:
+        kern = use_kernel and factors.B is not None
+        if kern:
+            # single-RHS cimmino is the measured corner where the fused
+            # pair LOSES (no batch to amortize the A/B tile reads) — the
+            # engine autotune includes "unfused" as a candidate and this
+            # dispatch honors it at trace time
+            from repro.kernels import ops as kops
+            kern = kops.use_fused("cimmino", factors.A.shape[1],
+                                  factors.A.shape[2], 1, factors.A.dtype)
+        if kern:
             from repro.kernels import ops as kops
 
             # the dedicated Cimmino kernel pair: r_i = B_i (b_i − A_i x̄)
@@ -334,6 +355,11 @@ class CimminoSolver(Solver):
             return super().step_many(factors, Bb, states, params,
                                      use_kernel=use_kernel)
         from repro.kernels import ops as kops
+        if not kops.use_fused("cimmino", factors.A.shape[1],
+                              factors.A.shape[2], Bb.shape[0],
+                              factors.A.dtype):
+            return super().step_many(factors, Bb, states, params,
+                                     use_kernel=False)   # measured fallback
         bw = jnp.swapaxes(Bb, 0, 1)                       # (m, k, p)
 
         def worker(Ai, Bi, bi):

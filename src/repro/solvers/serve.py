@@ -90,6 +90,9 @@ class ServerStats:
     batches: int = 0
     warm_batches: int = 0
     executor_builds: int = 0    # compile-once cache misses
+    admitted: int = 0           # accepted into the pipeline (async server)
+    shed: int = 0               # rejected at admission (async server
+                                # backpressure; the sync server never sheds)
 
 
 @dataclasses.dataclass
@@ -131,7 +134,10 @@ class _LocalExecutor:
         return sys.A_blocks, factors
 
     def place_B(self, Bb: np.ndarray):
-        return jnp.asarray(Bb)
+        # an explicit device_put so the host->device transfer happens on
+        # the CALLING thread — the async pipeline runs this on its
+        # assembly thread, double-buffering the copy behind execution
+        return jax.device_put(jnp.asarray(Bb))
 
     def run(self, A, factors, Bb, states=None):
         if states is None:
@@ -239,16 +245,24 @@ class LinsysServer:
         self._queues.setdefault(fp, deque())
         return fp
 
-    def submit(self, fp: str, rhs) -> int:
-        """Enqueue one right-hand side for a registered system."""
+    def _validated(self, fp: str, rhs) -> Tuple[_System, np.ndarray]:
+        """Shared admission validation: the fingerprint must have been
+        ``register()``-ed and the RHS must match the system's shape.  The
+        KeyError names the FULL fingerprint so operators can grep it
+        against their registry."""
         ent = self._systems.get(fp)
         if ent is None:
-            raise KeyError(f"unknown system fingerprint {fp[:16]}...; "
+            raise KeyError(f"unknown system fingerprint {fp!r}; "
                            "register() the system first")
         rhs = np.asarray(rhs, dtype=ent.dtype)
         if rhs.shape != (ent.sys.N,):
             raise ValueError(f"rhs has shape {rhs.shape}, need "
                              f"({ent.sys.N},) for this system")
+        return ent, rhs
+
+    def submit(self, fp: str, rhs) -> int:
+        """Enqueue one right-hand side for a registered system."""
+        _, rhs = self._validated(fp, rhs)
         rid = self._rid
         self._rid += 1
         self._queues[fp].append(Request(rid=rid, fp=fp, rhs=rhs))
@@ -276,8 +290,10 @@ class LinsysServer:
 
     def jit_cache_size(self) -> int:
         """Total jit-cache entries across executors (-1 if the running
-        jax cannot report it).  Constant across batches == zero retraces."""
-        sizes = [ex.cache_size() for ex in self._executors.values()]
+        jax cannot report it).  Constant across batches == zero retraces.
+        (Snapshots the executor dict so the async pipeline's assembly
+        thread can add executors while another thread reads this.)"""
+        sizes = [ex.cache_size() for ex in list(self._executors.values())]
         if not sizes:
             return 0
         return -1 if any(s < 0 for s in sizes) else sum(sizes)
@@ -295,7 +311,9 @@ class LinsysServer:
         """Serve ONE coalesced batch (the oldest pending request's system).
 
         Returns the list of ``Served`` results for the REAL requests in
-        the batch ([] when nothing is pending).
+        the batch.  With ZERO pending requests this is a true no-op:
+        it returns [] before any executor, store, or device work — no
+        empty-batch compile, no jit-cache growth, no stats movement.
         """
         # oldest pending request picks the system; coalescing then fills
         # the batch with that system's next requests (which may have

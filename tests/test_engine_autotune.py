@@ -1,0 +1,128 @@
+"""Engine autotune: ``kops.use_fused`` picks fused vs unfused per
+(family, p, n, k, dtype) — env pin > cache > measurement > heuristic —
+and the projection-family dispatch honors it bit-exactly at trace time
+(the BENCH_PR5 cimmino batch-1 regression, fixed by falling back)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.data import linsys
+from repro.kernels import ops as kops
+from repro.solvers.store import FactorStore
+
+PRM_APC = {"gamma": 1.0, "eta": 1.0}
+
+
+@pytest.fixture(autouse=True)
+def _clean_engine_cache(monkeypatch):
+    # heuristic-only resolution by default: deterministic on any host
+    monkeypatch.setenv(kops.AUTOTUNE_ENV, "0")
+    monkeypatch.delenv(kops.ENGINE_ENV, raising=False)
+    kops.engine_cache_clear()
+    yield
+    kops.engine_cache_clear()
+
+
+@pytest.fixture(scope="module")
+def sys_():
+    return linsys.conditioned_gaussian(n=64, m=2, cond=10.0, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# resolution order
+# ---------------------------------------------------------------------------
+
+
+def test_env_pin_wins_and_skips_the_cache(monkeypatch):
+    monkeypatch.setenv(kops.ENGINE_ENV, "fused")
+    assert kops.use_fused("cimmino", 32, 128, 1) is True
+    monkeypatch.setenv(kops.ENGINE_ENV, "unfused")
+    assert kops.use_fused("apc", 32, 128, 16) is False
+    assert kops.engine_cache() == {}             # pins are never cached
+    monkeypatch.setenv(kops.ENGINE_ENV, "both")
+    with pytest.raises(ValueError, match="fused"):
+        kops.use_fused("apc", 32, 128, 1)
+
+
+def test_heuristic_cimmino_subbatch_falls_back():
+    # the measured BENCH trend: fused loses ONLY at the single-RHS
+    # cimmino corner (k=1 stays unpadded); any real batch pads onto the
+    # 8-sublane tile and keeps the fused engine
+    assert kops.use_fused("cimmino", 32, 128, 1) is False
+    assert kops.use_fused("cimmino", 32, 128, 4) is True
+    assert kops.use_fused("cimmino", 32, 128, 16) is True
+    assert kops.use_fused("apc", 32, 128, 1) is True
+    assert kops.use_fused("apc", 32, 128, 16) is True
+
+
+def test_choice_is_cached_per_padded_shape():
+    kops.use_fused("cimmino", 30, 100, 1, jnp.float32)
+    key = ("cimmino", 32, 128, 1, "float32")     # (8, 128)-padded, k=1
+    assert kops.engine_cache() == {key: False}
+    # k pads to the 8-sublane tile: 9 and 16 share one cache entry
+    kops.use_fused("apc", 32, 128, 9, jnp.float32)
+    kops.use_fused("apc", 32, 128, 16, jnp.float32)
+    assert ("apc", 32, 128, 16, "float32") in kops.engine_cache()
+    assert len(kops.engine_cache()) == 2
+
+
+def test_measured_autotune_runs_and_caches(monkeypatch):
+    monkeypatch.setenv(kops.AUTOTUNE_ENV, "1")
+    got = kops.use_fused("cimmino", 16, 128, 1, jnp.float32,
+                         interpret=True)
+    assert isinstance(got, bool)                 # whichever engine WON
+    assert ("cimmino", 16, 128, 1, "float32") in kops.engine_cache()
+    # second call is a cache hit (same answer, no re-measurement)
+    assert kops.use_fused("cimmino", 16, 128, 1, jnp.float32,
+                          interpret=True) is got
+
+
+def test_unknown_family_rejected():
+    with pytest.raises(ValueError, match="family"):
+        kops.use_fused("dgd", 32, 128, 1)
+
+
+# ---------------------------------------------------------------------------
+# dispatch regression: the serving path must not lose to unfused
+# ---------------------------------------------------------------------------
+
+
+def test_cimmino_batch1_dispatch_bit_equals_unfused(sys_):
+    """The BENCH_PR5 regression corner (0.88x): with the autotune saying
+    'unfused', use_kernel=True at k=1 must trace the IDENTICAL unfused
+    step — bit-equal results, not just close."""
+    s = solvers.get("cimmino")
+    b = np.random.default_rng(0).standard_normal(sys_.N)
+    kern = s.solve_many(sys_, b[None], iters=25, use_kernel=True,
+                        store=FactorStore())
+    ref = s.solve_many(sys_, b[None], iters=25, use_kernel=False,
+                       store=FactorStore())
+    assert np.array_equal(np.asarray(kern.x), np.asarray(ref.x))
+
+
+def test_cimmino_batch1_pin_forces_the_fused_kernels(monkeypatch, sys_):
+    s = solvers.get("cimmino")
+    b = np.random.default_rng(0).standard_normal(sys_.N)
+    monkeypatch.setenv(kops.ENGINE_ENV, "fused")
+    kern = s.solve_many(sys_, b[None], iters=25, use_kernel=True,
+                        store=FactorStore())
+    ref = s.solve_many(sys_, b[None], iters=25, use_kernel=False,
+                       store=FactorStore())
+    # genuinely a different engine (different rounding), same solve
+    assert not np.array_equal(np.asarray(kern.x), np.asarray(ref.x))
+    assert np.allclose(np.asarray(kern.x), np.asarray(ref.x),
+                       rtol=1e-10, atol=1e-12)
+
+
+def test_apc_dispatch_keeps_fused_at_batch_16(sys_):
+    """APC stays on the fused engine (heuristic) — and the fused batch-16
+    path agrees with unfused to fp tolerance."""
+    s = solvers.get("apc")
+    B = np.random.default_rng(1).standard_normal((16, sys_.N))
+    kern = s.solve_many(sys_, B, iters=25, use_kernel=True,
+                        store=FactorStore(), **PRM_APC)
+    ref = s.solve_many(sys_, B, iters=25, use_kernel=False,
+                       store=FactorStore(), **PRM_APC)
+    assert np.allclose(np.asarray(kern.x), np.asarray(ref.x),
+                       rtol=1e-8, atol=1e-10)

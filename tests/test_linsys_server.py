@@ -66,6 +66,34 @@ def test_same_system_requests_coalesce_past_arrival_gaps(sys_a, sys_b):
     assert [r.rid for r in srv.step()] == [1]
 
 
+def test_step_and_drain_with_zero_pending_are_true_noops(sys_a):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5, batch=2, **PRM)
+    srv.register(sys_a)
+    cache0 = srv.jit_cache_size()
+    # nothing pending: no empty-batch compile, no executor build, no
+    # store traffic — a TRUE no-op, not a zero-sized solve
+    assert srv.step() == []
+    assert srv.drain() == []
+    assert srv.stats.executor_builds == 0
+    assert srv.stats.batches == 0
+    assert srv.jit_cache_size() == cache0
+    # and again AFTER real traffic: drained server stays quiescent
+    srv.submit(srv.register(sys_a), np.zeros(48))
+    srv.drain()
+    builds, cache1 = srv.stats.executor_builds, srv.jit_cache_size()
+    assert srv.step() == [] and srv.drain() == []
+    assert srv.stats.executor_builds == builds
+    assert srv.jit_cache_size() == cache1
+
+
+def test_submit_unknown_fingerprint_names_it(sys_a):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5, batch=2, **PRM)
+    srv.register(sys_a)
+    bogus = "cafe" * 16
+    with pytest.raises(KeyError, match=bogus):
+        srv.submit(bogus, np.zeros(48))
+
+
 def test_submit_validation(sys_a):
     srv = LinsysServer(FactorStore(), solver="apc", iters=5, batch=2, **PRM)
     fp = srv.register(sys_a)
@@ -196,6 +224,54 @@ def test_warm_start_perturbed_rhs_gated_by_solver(sys_a):
     srvg.submit(fpg, b + db)
     warm = srvg.drain()[0]
     assert warm.warm and warm.residual < 1e-6
+
+
+def test_warm_mixed_traffic_apc_cold_solves_bit_equal(sys_a):
+    """Interleaved repeated/perturbed RHS for ONE system across steps:
+    APC (warm_rhs_ok=False) must serve every perturbed request through
+    the cold path, bit-equal to a fresh cold solve."""
+    rng = np.random.default_rng(8)
+    b0 = rng.standard_normal(48)
+    b1 = b0 + 1e-3 * rng.standard_normal(48)
+    srv = LinsysServer(FactorStore(), solver="apc", iters=30, batch=1,
+                       warm_start=True, **PRM)
+    fp = srv.register(sys_a)
+    out = []
+    for b in [b0, b0, b1, b1, b0]:
+        srv.submit(fp, b)
+        out.append(srv.drain()[0])
+    assert [r.warm for r in out] == [False, True, False, True, False]
+    # the cold-gated results must be BIT-equal to a server that never
+    # warm-starts (same executor computation, cold state every batch)
+    cold = LinsysServer(FactorStore(), solver="apc", iters=30, batch=1,
+                        warm_start=False, **PRM)
+    fpc = cold.register(sys_a)
+    for b, r in [(b0, out[0]), (b1, out[2]), (b0, out[4])]:
+        cold.submit(fpc, b)
+        c = cold.drain()[0]
+        assert np.array_equal(r.x, c.x)
+        assert r.residual == c.residual
+
+
+def test_warm_mixed_traffic_cimmino_perturbed_stays_warm(sys_a):
+    """Cimmino re-reads b every step (warm_rhs_ok=True): the perturbed
+    request is served WARM and still converges to the new RHS's
+    solution; the repeated request resumes bit-equal state."""
+    rng = np.random.default_rng(9)
+    b0 = rng.standard_normal(48)
+    b1 = b0 + 1e-3 * rng.standard_normal(48)
+    srv = LinsysServer(FactorStore(), solver="cimmino", iters=400, batch=1,
+                       warm_start=True, tol=1e-8)
+    fp = srv.register(sys_a)
+    out = []
+    for b in [b0, b0, b1]:
+        srv.submit(fp, b)
+        out.append(srv.drain()[0])
+    assert [r.warm for r in out] == [False, True, True]
+    assert out[2].residual < 1e-8                    # converged on NEW b
+    A_dense, _ = sys_a.dense()
+    x_direct = np.linalg.solve(np.asarray(A_dense), b1)
+    assert np.allclose(out[2].x, x_direct, rtol=1e-5, atol=1e-7)
 
 
 def test_register_merges_server_level_params(sys_a):
