@@ -50,7 +50,7 @@ import numpy as np
 
 from repro.data import linsys
 from repro.solvers.pipeline import AsyncLinsysServer, Shed
-from repro.solvers.serve import LinsysServer, Served
+from repro.solvers.serve import LinsysServer
 from repro.solvers.store import FactorStore
 
 ITERS = 150

@@ -6,6 +6,10 @@ method from the paper — all through the unified solver registry:
     print(solvers.available())   # all eight methods, one call path
 
     PYTHONPATH=src python examples/quickstart.py
+
+Before sending a change, `bash scripts/lint.sh` runs the repo's contract
+lints (jit placement, store routing, retrace discipline — see ROADMAP.md
+"Static analysis & contract checks"); tier-1 CI runs the same script.
 """
 import time
 

@@ -20,6 +20,11 @@ exit on violation):
 
   * ``zero_retrace`` / ``async_zero_retrace`` — steady-state serving
     never retraces, through either server;
+  * ``tracecheck_zero_retrace`` — the same contract enforced by
+    ``repro.analysis.tracecheck``: a dedicated primed-server probe runs
+    under ``tracecheck(steady_state=True)``, so a violation names the
+    exact retracing call site (recorded in ``gate.tracecheck_report``)
+    instead of a jit-cache-size delta;
   * ``dispatch_ge_unfused_b16`` (apc) and ``dispatch_ge_unfused_b1``
     (cimmino) — the DISPATCHED serving path must not regress below the
     unfused step it can always fall back to.  This supersedes PR5's raw
@@ -87,8 +92,11 @@ def main(argv=None) -> int:
     os.environ.setdefault("REPRO_KERNEL_AUTOTUNE", "1")
 
     from benchmarks import periter, serve_traffic
+    from repro.analysis import TraceError, tracecheck
+    from repro.data import linsys
     from repro.kernels import block_projection as bp
     from repro.kernels import ops as kops
+    from repro.solvers import FactorStore, LinsysServer
 
     print(f"== bench_ci: periter kernel/dispatch comparison {PERITER} ==")
     per = periter.kernel_comparison(**PERITER)
@@ -106,6 +114,32 @@ def main(argv=None) -> int:
     print(f"  cold {srv['cold_s']*1e3:.1f} ms   warm {srv['warm_s']*1e3:.1f}"
           f" ms   ({srv['speedup']:.1f}x, {srv['rhs_per_s']:.1f} RHS/s, "
           f"jit cache {srv['jit_cache_tail']})")
+
+    # attributed zero-retrace probe: the same steady-state contract the
+    # zero_retrace gates count via jit_cache_size, enforced here by
+    # tracecheck — on violation the failure NAMES the retracing call
+    # site instead of reporting a cache-size delta
+    print("== bench_ci: attributed zero-retrace probe (tracecheck) ==")
+    psys = linsys.conditioned_gaussian(n=SERVE["n"], m=SERVE["m"],
+                                       cond=10.0, seed=0)
+    psrv = LinsysServer(FactorStore(), solver="apc", iters=20, batch=2)
+    pfp = psrv.register(psys)
+    prng = np.random.default_rng(0)
+    for _ in range(2):      # warmup compiles the keyed executor
+        psrv.submit(pfp, prng.standard_normal(SERVE["n"]))
+        psrv.submit(pfp, prng.standard_normal(SERVE["n"]))
+        psrv.drain()
+    retrace_report = ""
+    try:
+        with tracecheck(steady_state=True):
+            for _ in range(3):
+                psrv.submit(pfp, prng.standard_normal(SERVE["n"]))
+                psrv.submit(pfp, prng.standard_normal(SERVE["n"]))
+                psrv.drain()
+        print("  steady state clean: 0 attributed trace events")
+    except TraceError as e:
+        retrace_report = str(e)
+        print(f"  {e}", file=sys.stderr)
 
     cpus = serve_traffic.host_cpus()
     # pipeline depth beyond the available cores only adds timeslicing:
@@ -142,6 +176,8 @@ def main(argv=None) -> int:
         # steady-state serving must never retrace, either server
         "zero_retrace": bool(srv["zero_retrace"]),
         "async_zero_retrace": bool(tr["async"]["zero_retrace"]),
+        # same contract, attributed: tracecheck names the call site
+        "tracecheck_zero_retrace": not retrace_report,
         # the pipeline sustains sync throughput at saturation (strict
         # win with host parallelism, overhead bound on 1 core)
         "async_ge_sync_saturation": ratio >= async_min,
@@ -168,6 +204,7 @@ def main(argv=None) -> int:
             "async_vs_sync_throughput": ratio,
             "async_min": async_min,
             "pipeline_depth": depth,
+            "tracecheck_report": retrace_report,
         },
         "engine_choices": {str(k): v
                            for k, v in sorted(kops.engine_cache().items())},

@@ -13,6 +13,9 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff + reprolint contract checks) =="
+bash scripts/lint.sh
+
 echo "== pytest (tier 1, -m 'not slow') =="
 python -m pytest -q -m "not slow"
 

@@ -1,6 +1,7 @@
 """Async-serving smoke: AsyncLinsysServer pipelines a 2-system open-loop
 request stream — every residual under tol, zero sheds at a feasible
-rate, zero steady-state retraces, and the SLO report populated."""
+rate, zero steady-state retraces (attributed via tracecheck: a failure
+names the retracing call site), and the SLO report populated."""
 import time
 
 import _path  # noqa: F401
@@ -11,6 +12,7 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 
+from repro.analysis import tracecheck  # noqa: E402
 from repro.data import linsys  # noqa: E402
 from repro.solvers import AsyncLinsysServer, FactorStore, Shed  # noqa: E402
 
@@ -33,11 +35,13 @@ def main():
         for t in prime:
             t.result(timeout=300)
         srv.reset_metrics()
-        cache0 = srv.jit_cache_size()
 
-        tickets = [srv.submit(fps[i % 2], rng.standard_normal(64))
-                   for i in range(N_REQ)]
-        results = [t.result(timeout=300) for t in tickets]
+        # steady state under tracecheck: a retrace anywhere in the
+        # pipeline fails here NAMING the offending call site
+        with tracecheck(steady_state=True):
+            tickets = [srv.submit(fps[i % 2], rng.standard_normal(64))
+                       for i in range(N_REQ)]
+            results = [t.result(timeout=300) for t in tickets]
         cache1 = srv.jit_cache_size()
 
     assert [r.rid for r in results] == [t.rid for t in tickets]
@@ -45,8 +49,6 @@ def main():
     assert not sheds, f"unexpected sheds at a feasible rate: {sheds}"
     bad = [r.residual for r in results if not r.residual < 1e-6]
     assert not bad, f"residuals above tol: {bad}"
-    assert cache0 == cache1, \
-        f"steady-state retrace: jit cache {cache0} -> {cache1}"
     rep = srv.latency_report()
     assert rep["count"] == N_REQ and rep["p99_ms"] > 0
     assert srv.stats.served == N_REQ and srv.stats.shed == 0

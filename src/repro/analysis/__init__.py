@@ -1,0 +1,26 @@
+"""repro.analysis — contract lints + dynamic checkers for the repo.
+
+* ``lint`` / ``rules`` — "reprolint": AST rules R001-R007 over the
+  architecture contracts (jit scope, host entropy, factor-store
+  ownership, registry completeness, core/ layering, interpret
+  threading, future-safe excepts).
+* ``locks`` — static lock-discipline checker (L001-L003) for the async
+  pipeline classes.
+* ``tracecheck`` — attributed zero-retrace assertions for serving
+  paths.
+
+CLI: ``python -m repro.analysis [paths...]`` (exit 1 on findings);
+``scripts/lint.sh`` runs it after ruff in tier-1 CI.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint import (DEFAULT_PATHS, Finding, SourceFile,
+                                 lint_file, lint_paths)
+from repro.analysis.locks import check_source as check_locks
+from repro.analysis.tracecheck import (TraceError, TraceEvent, TraceReport,
+                                       tracecheck)
+
+__all__ = [
+    "DEFAULT_PATHS", "Finding", "SourceFile", "lint_file", "lint_paths",
+    "check_locks", "TraceError", "TraceEvent", "TraceReport", "tracecheck",
+]

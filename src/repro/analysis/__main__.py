@@ -1,0 +1,58 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Runs every reprolint rule (R001-R007), the lock-discipline checker
+(L001-L003), and prints findings as ``path:line:col: RULE message``.
+Exit status 1 when anything fires — this is the tier-1 CI lint gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.lint import DEFAULT_PATHS, lint_paths
+from repro.analysis.rules import ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: repo contract lints + lock checker")
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--no-locks", action="store_true",
+                    help="skip the lock-discipline checker")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for cls in ALL_RULES:
+            print(f"{cls.id}  {cls.title}")
+        print("L001  shared field mutated without the lock")
+        print("L002  Condition.wait without the lock held")
+        print("L003  blocking call inside a with-lock body")
+        return 0
+
+    rules = None
+    if args.rules:
+        want = {r.strip() for r in args.rules.split(",")}
+        rules = [cls for cls in ALL_RULES if cls.id in want]
+
+    findings = lint_paths(args.paths or None, rules=rules,
+                          include_locks=not args.no_locks)
+    if args.as_json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f)
+        n = len(findings)
+        print(f"reprolint: {n} finding(s)" if n else "reprolint: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,316 @@
+"""reprolint — repo-specific AST contract lints.
+
+PRs 1-6 accumulated architecture contracts that used to live only in
+ROADMAP prose: factor acquisition goes through ``FactorStore``, steady
+state serving never retraces, ``core/`` never imports ``solvers/`` or
+``kernels/``, Pallas entry points thread ``default_interpret()``, the
+async pipeline resolves every future it admits.  This module is the
+framework that turns each contract into a checkable rule:
+
+* :class:`SourceFile` — a parsed file plus the per-line suppression map
+  (``# repro: allow[R001]`` / ``# repro: allow[R001,R007]`` on the
+  statement's first line suppresses that rule there).
+* :class:`Rule` — shared visitor base.  The framework owns traversal
+  and context (function stack, class stack, loop depth); rules override
+  the ``on_*`` hooks and call :meth:`Rule.report`, which applies both
+  suppressions and the central allow-list (``allowlist.ALLOW``), so
+  every sanctioned exception is auditable in one place.
+* :class:`ProgramRule` — whole-program rules that need to see every
+  file at once (registry completeness resolves inheritance across
+  modules).
+* :func:`lint_paths` — the entry point the CLI and CI use.
+
+Adding a rule: subclass :class:`Rule` (or :class:`ProgramRule`) in
+``analysis/rules/``, set ``id``/``title``, and append it to
+``rules.ALL_RULES``.  Corpus-test it in ``tests/lint_corpus/`` — CI
+asserts every rule fires on its violating snippet and stays quiet on
+the conforming one.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import pathlib
+import re
+
+# src/repro/analysis/lint.py -> repo root is three levels up from src/
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+#: Directories lint_paths scans by default (repo-relative).  Tests are
+#: deliberately excluded: the corpus under tests/lint_corpus/ exists to
+#: VIOLATE the rules, and test-local jit construction is idiomatic.
+DEFAULT_PATHS = ("src", "scripts", "benchmarks", "examples")
+
+_EXCLUDE_PARTS = {"__pycache__", "lint_corpus", ".git"}
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9_\s,]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``'jax.jit'`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted(node.func)
+
+
+class SourceFile:
+    """A parsed python file: AST + alias map + suppression map."""
+
+    def __init__(self, path: str | pathlib.Path, text: str | None = None,
+                 repo_root: pathlib.Path | None = None):
+        p = pathlib.Path(path).resolve()
+        root = pathlib.Path(repo_root) if repo_root else REPO_ROOT
+        try:
+            self.relpath = p.relative_to(root).as_posix()
+        except ValueError:
+            self.relpath = p.as_posix()
+        self.text = p.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=self.relpath)
+        # line -> rule ids suppressed on that line
+        self.suppressed: dict[int, set[str]] = {}
+        for i, ln in enumerate(self.lines, 1):
+            m = _SUPPRESS_RE.search(ln)
+            if m:
+                self.suppressed[i] = {s.strip() for s in m.group(1).split(",")
+                                      if s.strip()}
+        # import alias map: local name -> fully dotted origin, so rules
+        # can resolve `np.random.rand` vs `jax.random.uniform` even when
+        # both are bound to short names.
+        self.aliases: dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                mod = ("." * node.level) + (node.module or "")
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = f"{mod}.{a.name}"
+
+    def resolve(self, name: str | None) -> str:
+        """Expand the leading component of ``name`` via the alias map."""
+        if not name:
+            return ""
+        head, _, rest = name.partition(".")
+        full = self.aliases.get(head, head)
+        return f"{full}.{rest}" if rest else full
+
+
+class Rule(ast.NodeVisitor):
+    """Visitor base.  Subclasses override the ``on_*`` hooks only —
+    traversal and context bookkeeping are framework-owned so every rule
+    sees the same function/class/loop context for free."""
+
+    id = "R000"
+    title = ""
+
+    def __init__(self, src: SourceFile, allowlist=None):
+        self.src = src
+        self.findings: list[Finding] = []
+        self.func_stack: list[ast.AST] = []
+        self.class_stack: list[ast.ClassDef] = []
+        self.loop_depth = 0
+        if allowlist is None:
+            from repro.analysis.allowlist import ALLOW
+            allowlist = ALLOW
+        self._allow = allowlist.get(self.id, ())
+
+    # ---- hooks (override in rules) ---------------------------------
+    def on_module(self, node: ast.Module):
+        pass
+
+    def on_class(self, node: ast.ClassDef):
+        pass
+
+    def on_function(self, node):
+        pass
+
+    def on_call(self, node: ast.Call):
+        pass
+
+    def on_import(self, node: ast.Import):
+        pass
+
+    def on_import_from(self, node: ast.ImportFrom):
+        pass
+
+    def on_except(self, node: ast.ExceptHandler):
+        pass
+
+    # ---- framework-owned traversal ----------------------------------
+    def run(self) -> list[Finding]:
+        self.on_module(self.src.tree)
+        self.visit(self.src.tree)
+        return self.findings
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.on_class(node)
+        self.class_stack.append(node)
+        for child in node.body:
+            self.visit(child)
+        self.class_stack.pop()
+
+    def _visit_function(self, node):
+        # decorators evaluate in the ENCLOSING scope: visit them before
+        # pushing, so a module-scope `@jax.jit` is not "inside" anything
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.on_function(node)
+        self.func_stack.append(node)
+        for child in node.body:
+            self.visit(child)
+        self.func_stack.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def _visit_loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_AsyncFor = _visit_loop
+    visit_While = _visit_loop
+
+    def visit_Call(self, node: ast.Call):
+        self.on_call(node)
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import):
+        self.on_import(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        self.on_import_from(node)
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        self.on_except(node)
+        self.generic_visit(node)
+
+    # ---- reporting ---------------------------------------------------
+    def qualname(self) -> str:
+        parts = [c.name for c in self.class_stack]
+        parts += [getattr(f, "name", "<lambda>") for f in self.func_stack]
+        return ".".join(parts)
+
+    def report(self, node: ast.AST, message: str, qualname: str | None = None):
+        line = getattr(node, "lineno", 1)
+        if self.id in self.src.suppressed.get(line, set()):
+            return
+        qn = self.qualname() if qualname is None else qualname
+        for path_glob, qual_glob, _why in self._allow:
+            if _path_match(self.src.relpath, path_glob) and (
+                    fnmatch.fnmatchcase(qn, qual_glob)):
+                return
+        self.findings.append(Finding(
+            self.id, self.src.relpath, line,
+            getattr(node, "col_offset", 0) + 1, message))
+
+
+class ProgramRule:
+    """Whole-program rule: sees every SourceFile at once.  Used when a
+    contract spans modules (e.g. registry completeness resolves solver
+    inheritance across files)."""
+
+    id = "R000"
+    title = ""
+
+    def run_program(self, sources: list[SourceFile]) -> list[Finding]:
+        raise NotImplementedError
+
+    def report_at(self, src: SourceFile, node: ast.AST, message: str,
+                  qualname: str = "", out: list[Finding] | None = None):
+        from repro.analysis.allowlist import ALLOW
+        line = getattr(node, "lineno", 1)
+        if self.id in src.suppressed.get(line, set()):
+            return
+        for path_glob, qual_glob, _why in ALLOW.get(self.id, ()):
+            if _path_match(src.relpath, path_glob) and (
+                    fnmatch.fnmatchcase(qualname, qual_glob)):
+                return
+        out.append(Finding(self.id, src.relpath, line,
+                           getattr(node, "col_offset", 0) + 1, message))
+
+
+def _path_match(relpath: str, glob: str) -> bool:
+    return fnmatch.fnmatchcase(relpath, glob) or relpath.endswith(glob)
+
+
+def iter_py_files(paths=None, repo_root: pathlib.Path | None = None):
+    root = pathlib.Path(repo_root) if repo_root else REPO_ROOT
+    for p in (paths or DEFAULT_PATHS):
+        pp = pathlib.Path(p)
+        if not pp.is_absolute():
+            pp = root / pp
+        if pp.is_file():
+            yield pp
+            continue
+        for f in sorted(pp.rglob("*.py")):
+            if _EXCLUDE_PARTS.isdisjoint(f.parts):
+                yield f
+
+
+def lint_paths(paths=None, rules=None, repo_root=None,
+               include_locks: bool = True) -> list[Finding]:
+    """Run every rule (AST rules, program rules, and the lock checker)
+    over ``paths`` and return the combined findings."""
+    from repro.analysis import locks
+    from repro.analysis.rules import ALL_RULES
+
+    rule_classes = list(ALL_RULES if rules is None else rules)
+    sources = []
+    findings: list[Finding] = []
+    for f in iter_py_files(paths, repo_root):
+        try:
+            src = SourceFile(f, repo_root=repo_root)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding("PARSE", str(f), getattr(e, "lineno", 1)
+                                    or 1, 1, f"unparseable: {e}"))
+            continue
+        sources.append(src)
+        for cls in rule_classes:
+            if issubclass(cls, Rule):
+                findings.extend(cls(src).run())
+        if include_locks:
+            findings.extend(locks.check_source(src))
+    for cls in rule_classes:
+        if issubclass(cls, ProgramRule):
+            findings.extend(cls().run_program(sources))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_file(path, rules=None, repo_root=None,
+              include_locks: bool = True) -> list[Finding]:
+    """Lint a single file (program rules see only that file)."""
+    return lint_paths([path], rules=rules, repo_root=repo_root,
+                      include_locks=include_locks)

@@ -1,0 +1,23 @@
+"""Rule registry for reprolint.  One module per rule; adding a rule =
+new module + an entry here + a corpus pair in tests/lint_corpus/."""
+from __future__ import annotations
+
+from repro.analysis.rules.r001_jit_scope import R001JitInFunction
+from repro.analysis.rules.r002_host_entropy import R002HostEntropy
+from repro.analysis.rules.r003_store_bypass import R003StoreBypass
+from repro.analysis.rules.r004_registry import R004RegistryComplete
+from repro.analysis.rules.r005_layering import R005CoreLayering
+from repro.analysis.rules.r006_interpret import R006InterpretThreading
+from repro.analysis.rules.r007_broad_except import R007BroadExcept
+
+ALL_RULES = (
+    R001JitInFunction,
+    R002HostEntropy,
+    R003StoreBypass,
+    R004RegistryComplete,
+    R005CoreLayering,
+    R006InterpretThreading,
+    R007BroadExcept,
+)
+
+__all__ = ["ALL_RULES"] + [c.__name__ for c in ALL_RULES]

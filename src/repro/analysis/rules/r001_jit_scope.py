@@ -1,0 +1,45 @@
+"""R001 — ``jax.jit`` constructed inside a function or loop body.
+
+A jit transform built per call is a retrace hazard: every construction
+gets a fresh cache, so the compile cost is paid on every invocation and
+``jit_cache_size()``-style steady-state accounting is silently wrong.
+Jits must live at module scope (decorator or module-level assignment)
+or inside a KEYED executor cache (``LinsysServer._executor``) — those
+caches are the allow-listed exceptions in ``allowlist.ALLOW``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Rule, call_name, dotted
+
+_JIT = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit",
+        "jax.experimental.pjit.pjit.pjit"}
+
+
+class R001JitInFunction(Rule):
+    id = "R001"
+    title = "jax.jit constructed inside a function/loop body"
+
+    def _is_jit_ctor(self, node: ast.Call) -> bool:
+        name = self.src.resolve(call_name(node))
+        if name in _JIT:
+            return True
+        # functools.partial(jax.jit, ...) builds a jit factory too
+        if name.endswith("partial") and node.args:
+            return self.src.resolve(dotted(node.args[0])) in _JIT
+        return False
+
+    def on_call(self, node: ast.Call):
+        if not self._is_jit_ctor(node):
+            return
+        if self.func_stack:
+            where = f"function {self.qualname()!r}"
+        elif self.loop_depth:
+            where = "a module-level loop"
+        else:
+            return
+        self.report(node, f"jax.jit constructed inside {where}: each "
+                          "construction starts a fresh trace cache (per-call "
+                          "retrace hazard). Move it to module scope or a "
+                          "keyed executor cache.")

@@ -1,0 +1,105 @@
+"""R002 — host time/RNG inside jitted or ``lax.scan``-carried code.
+
+``time.time()``, ``time.perf_counter()``, ``random.*`` and unseeded
+``np.random.*`` execute at TRACE time inside a jitted function: the
+value is baked into the jaxpr as a constant, so every retrace changes
+the program and steady-state results silently depend on when tracing
+happened.  Host-side timing/RNG around autotune measurement (outside
+the jitted callee) is fine; ``jax.random`` with threaded keys and
+seeded ``np.random.default_rng(seed)`` construction are fine.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Rule, call_name, dotted
+
+_JIT = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+_SCAN = {"jax.lax.scan", "jax.lax.fori_loop", "jax.lax.while_loop"}
+
+_HOST_TIME = {"time.time", "time.perf_counter", "time.monotonic",
+              "time.process_time", "time.time_ns", "time.perf_counter_ns",
+              "datetime.datetime.now", "datetime.datetime.utcnow"}
+# seeded-Generator construction is allowed even near jitted code; the
+# generator itself is host-side and the seed makes it reproducible
+_NP_RANDOM_OK = {"numpy.random.default_rng", "numpy.random.Generator",
+                 "numpy.random.SeedSequence", "numpy.random.PCG64"}
+
+
+class R002HostEntropy(Rule):
+    id = "R002"
+    title = "host time/RNG inside jitted or lax.scan-carried code"
+
+    def on_module(self, tree: ast.Module):
+        parents: dict[ast.AST, ast.AST] = {}
+        defs: dict[str, list[ast.AST]] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+
+        jitted: set[ast.AST] = set()
+
+        def _is_jit_expr(expr) -> bool:
+            name = self.src.resolve(dotted(expr))
+            if name in _JIT:
+                return True
+            if isinstance(expr, ast.Call):
+                cname = self.src.resolve(call_name(expr))
+                if cname in _JIT:
+                    return True
+                if cname.endswith("partial") and expr.args:
+                    return self.src.resolve(dotted(expr.args[0])) in _JIT
+            return False
+
+        # (a) decorated defs; (b) defs passed to jit(f) / lax.scan(f, ...)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_jit_expr(d) for d in node.decorator_list):
+                    jitted.add(node)
+            elif isinstance(node, ast.Call):
+                cname = self.src.resolve(call_name(node))
+                carried = []
+                if cname in _JIT and node.args:
+                    carried = [node.args[0]]
+                elif cname in _SCAN:
+                    # scan(f, ...) / fori_loop(lo, hi, f, ...) /
+                    # while_loop(cond, body, ...): every function-valued
+                    # positional arg is traced
+                    carried = list(node.args)
+                for arg in carried:
+                    if isinstance(arg, ast.Name) and arg.id in defs:
+                        jitted.update(defs[arg.id])
+
+        # (c) closure: defs nested inside a jitted def trace with it
+        def _under_jitted(node) -> bool:
+            cur = parents.get(node)
+            while cur is not None:
+                if cur in jitted:
+                    return True
+                cur = parents.get(cur)
+            return False
+
+        for fn in list(defs.values()):
+            for node in fn:
+                if _under_jitted(node):
+                    jitted.add(node)
+
+        for fn in jitted:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = self.src.resolve(call_name(node))
+                bad = (name in _HOST_TIME
+                       or name.startswith("random.")
+                       or (name.startswith("numpy.random.")
+                           and name not in _NP_RANDOM_OK))
+                if bad:
+                    self.report(
+                        node,
+                        f"host time/RNG call {name}() inside jitted/scanned "
+                        f"function {fn.name!r}: the value is baked in at "
+                        "trace time. Use jax.random with a threaded key or "
+                        "hoist the host call out of the traced region.",
+                        qualname=fn.name)

@@ -1,0 +1,41 @@
+"""R003 — factor-store bypass.
+
+Every factorization in the serving stack is acquired through
+``FactorStore`` (content-addressed by ``fingerprint(A_blocks, solver,
+params)``) so cost is paid once per (system, solver, param) key and the
+disk tier stays coherent.  A direct ``solver.prepare(...)`` /
+``solver.mesh_prepare(...)`` call anywhere else silently duplicates the
+factorization work and bypasses cache accounting.  The store itself,
+the ``Solver.solve`` drivers, and the mesh/redundant compile paths are
+the allow-listed owners of the raw call.
+
+A solver calling ``self.prepare(...)`` internally is NOT a bypass —
+that IS the factorization being implemented — so self/cls/super
+receivers are exempt.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Rule
+
+
+class R003StoreBypass(Rule):
+    id = "R003"
+    title = "Solver.prepare/mesh_prepare called outside FactorStore"
+
+    def on_call(self, node: ast.Call):
+        f = node.func
+        if not (isinstance(f, ast.Attribute)
+                and f.attr in ("prepare", "mesh_prepare")):
+            return
+        recv = f.value
+        if isinstance(recv, ast.Name) and recv.id in ("self", "cls"):
+            return
+        if (isinstance(recv, ast.Call) and isinstance(recv.func, ast.Name)
+                and recv.func.id == "super"):
+            return
+        self.report(node, f"direct .{f.attr}() call bypasses FactorStore: "
+                          "factorizations must be acquired via "
+                          "store.factors(...) so they are content-addressed "
+                          "and paid once per key.")

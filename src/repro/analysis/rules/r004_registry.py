@@ -1,0 +1,104 @@
+"""R004 — registry completeness.
+
+Every ``@register``-ed solver must provide the four lifecycle hooks
+(``prepare``/``init``/``step``/``extract``) the drivers, the factor
+store, and the servers rely on; and a solver that opts into the mesh
+backend by defining ANY of the four mesh hooks must define the full set
+(``mesh_factor_specs``/``mesh_state_specs``/``mesh_prepare``/
+``mesh_step``) — a partial mesh surface fails at placement time deep
+inside ``shard_map`` with an unhelpful NotImplementedError.
+
+Inheritance is resolved across every scanned file (the gradient family
+defines prepare/step on a shared base and only init on the registered
+subclasses).  A method whose body is just ``raise NotImplementedError``
+is an abstract stub and does not count as a definition — that is how
+``Solver``'s own interface stubs are excluded.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding, ProgramRule, SourceFile, dotted
+
+LIFECYCLE = ("prepare", "init", "step", "extract")
+MESH_FULL = ("mesh_factor_specs", "mesh_state_specs", "mesh_prepare",
+             "mesh_step")
+
+
+def _is_stub(fn: ast.AST) -> bool:
+    body = [s for s in fn.body
+            if not (isinstance(s, ast.Expr)
+                    and isinstance(s.value, ast.Constant)
+                    and isinstance(s.value.value, str))]
+    return len(body) == 1 and isinstance(body[0], ast.Raise) and (
+        "NotImplementedError" in ast.dump(body[0]))
+
+
+def _registered_name(cls: ast.ClassDef, src: SourceFile) -> str | None:
+    for dec in cls.decorator_list:
+        if isinstance(dec, ast.Call):
+            name = dotted(dec.func) or ""
+            if name.split(".")[-1] == "register":
+                if dec.args and isinstance(dec.args[0], ast.Constant):
+                    return str(dec.args[0].value)
+                return cls.name
+    return None
+
+
+class R004RegistryComplete(ProgramRule):
+    id = "R004"
+    title = "@register-ed solver missing lifecycle/mesh hooks"
+
+    def run_program(self, sources: list[SourceFile]) -> list[Finding]:
+        table: dict[str, tuple[ast.ClassDef, SourceFile]] = {}
+        for src in sources:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.ClassDef):
+                    table.setdefault(node.name, (node, src))
+
+        findings: list[Finding] = []
+        for src in sources:
+            for node in ast.walk(src.tree):
+                if not isinstance(node, ast.ClassDef):
+                    continue
+                reg = _registered_name(node, src)
+                if reg is None:
+                    continue
+                defined: set[str] = set()
+                seen: set[str] = set()
+                queue = [node.name]
+                while queue:
+                    cname = queue.pop()
+                    if cname in seen or cname not in table:
+                        continue
+                    seen.add(cname)
+                    cls, _ = table[cname]
+                    for stmt in cls.body:
+                        if isinstance(stmt, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                            if not _is_stub(stmt):
+                                defined.add(stmt.name)
+                    for base in cls.bases:
+                        bname = dotted(base)
+                        if bname:
+                            queue.append(bname.split(".")[-1])
+
+                missing = [h for h in LIFECYCLE if h not in defined]
+                if missing:
+                    self.report_at(
+                        src, node,
+                        f"registered solver {reg!r} missing lifecycle "
+                        f"hook(s) {missing}: the drivers/store/servers "
+                        "require prepare/init/step/extract.",
+                        qualname=node.name, out=findings)
+                mesh_defined = [h for h in MESH_FULL if h in defined]
+                mesh_missing = [h for h in MESH_FULL if h not in defined]
+                if mesh_defined and mesh_missing:
+                    self.report_at(
+                        src, node,
+                        f"registered solver {reg!r} defines "
+                        f"{mesh_defined} but not {mesh_missing}: any mesh_* "
+                        "hook implies the full mesh set, else placement "
+                        "fails inside shard_map.",
+                        qualname=node.name, out=findings)
+        return findings

@@ -1,0 +1,51 @@
+"""R005 — layering: ``core/`` may not import ``solvers/`` or ``kernels/``.
+
+``repro.core`` is the deprecated numerics layer kept alive as thin
+shims over ``repro.solvers``; the sanctioned shim pattern is a LAZY
+import inside the function body (cycle guard — solvers imports core
+types at module scope).  A module-level import in either direction
+creates an import cycle that only detonates for some import orders, so
+only module-scope imports are flagged; function-scope imports are the
+documented escape hatch.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.lint import Rule
+
+_FORBIDDEN_HEADS = ("solvers", "kernels")
+
+
+class R005CoreLayering(Rule):
+    id = "R005"
+    title = "core/ imports solvers/ or kernels/ at module scope"
+
+    def _in_core(self) -> bool:
+        return "core" in pathlib.PurePosixPath(self.src.relpath).parts
+
+    def _flag(self, node, modname: str):
+        self.report(node, f"core/ module imports {modname!r} at module "
+                          "scope: layering violation (cycle hazard). Shims "
+                          "must import lazily inside the function body.")
+
+    def on_import(self, node: ast.Import):
+        if not self._in_core() or self.func_stack:
+            return
+        for a in node.names:
+            parts = a.name.split(".")
+            if len(parts) >= 2 and parts[0] == "repro" and (
+                    parts[1] in _FORBIDDEN_HEADS):
+                self._flag(node, a.name)
+
+    def on_import_from(self, node: ast.ImportFrom):
+        if not self._in_core() or self.func_stack:
+            return
+        mod = node.module or ""
+        parts = mod.split(".") if mod else []
+        if node.level >= 2 and parts and parts[0] in _FORBIDDEN_HEADS:
+            self._flag(node, "." * node.level + mod)
+        elif len(parts) >= 2 and parts[0] == "repro" and (
+                parts[1] in _FORBIDDEN_HEADS):
+            self._flag(node, mod)

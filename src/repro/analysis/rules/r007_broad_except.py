@@ -1,0 +1,50 @@
+"""R007 — broad ``except Exception`` that can swallow a pending future.
+
+The serving pipeline's availability contract is "every admitted request
+gets an explicit answer": a broad except that neither re-raises nor
+resolves a future can eat the failure and leave a caller blocked on
+``future.result()`` forever.  A broad handler is conforming when its
+body re-raises, or resolves the pending work via ``set_exception`` /
+``set_result`` / ``_complete_error``.  Everything else must either
+narrow the exception types or carry an explicit
+``# repro: allow[R007]`` with a reason.
+
+ruff's BLE001 is deliberately disabled in pyproject.toml: this rule
+owns broad-except judgment because "is the future resolved" is a
+repo-specific question a generic linter cannot answer.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Rule
+
+_RESOLVERS = {"set_exception", "set_result", "_complete_error"}
+
+
+class R007BroadExcept(Rule):
+    id = "R007"
+    title = "broad except without re-raise or future resolution"
+
+    def on_except(self, node: ast.ExceptHandler):
+        t = node.type
+        broad = t is None or (isinstance(t, ast.Name)
+                              and t.id in ("Exception", "BaseException"))
+        if not broad:
+            return
+        for stmt in node.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Raise):
+                    return
+                if isinstance(sub, ast.Call):
+                    f = sub.func
+                    name = f.attr if isinstance(f, ast.Attribute) else (
+                        f.id if isinstance(f, ast.Name) else "")
+                    if name in _RESOLVERS:
+                        return
+        label = "bare except" if t is None else f"except {t.id}"
+        self.report(node, f"{label} neither re-raises nor resolves a "
+                          "future (set_exception/set_result/"
+                          "_complete_error): it can swallow a pending "
+                          "request forever. Narrow the types or justify "
+                          "with # repro: allow[R007].")

@@ -1,0 +1,187 @@
+"""tracecheck — attributed retrace detection for jitted serving paths.
+
+The serving layer's zero-steady-state-retrace contract used to be
+enforced by counting (``LinsysServer.jit_cache_size()`` must stay
+flat), which tells you THAT something retraced but not WHAT or WHERE.
+This module upgrades the assertion to attribution.
+
+Mechanism: ``jax_log_compiles`` makes jax emit a
+``"Finished tracing + transforming <fun> for pjit"`` log record for
+every trace — synchronously, inside the triggering call's stack, on the
+triggering thread.  A logging handler on the ``jax`` logger therefore
+sees every trace event AND can ``traceback.extract_stack()`` to find
+the call site: the innermost frame that is not jax/logging internals is
+the line of user code that caused the trace.  The subsequent
+``"Compiling <fun> with global shapes and types [...]"`` record carries
+the abstract signature, which is attached to the matching event.
+
+Usage::
+
+    with tracecheck() as tc:          # record + attribute
+        ...
+    print(tc.summary())
+
+    with tracecheck(steady_state=True):   # assert zero traces
+        srv.submit(...); srv.drain()      # raises TraceError naming the
+                                          # call site if anything traced
+
+``steady_state=True`` is the serving contract: after warmup, no call
+may trace.  The raised :class:`TraceError` message names every traced
+function and its attributed ``file:line`` call site, so a CI failure
+points at the offending line instead of a cache-size delta.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import fnmatch
+import logging
+import re
+import threading
+import traceback
+
+_TRACE_RE = re.compile(r"Finished tracing \+ transforming (?P<fun>.+?) "
+                       r"(?:for pjit )?in \S+ sec")
+_COMPILE_RE = re.compile(r"Compiling (?P<fun>\S+) .*types\s+(?P<sig>\[.*\])")
+
+# frames from these paths are machinery, not the call site
+_INTERNAL_PARTS = ("/jax/", "/jaxlib/", "/jax/_src/", "/logging/",
+                   "contextlib.py", "/repro/analysis/tracecheck",
+                   "/threading.py", "/concurrent/futures/")
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One jit trace, attributed to the user-code line that caused it."""
+
+    fun: str
+    path: str
+    line: int
+    code: str
+    thread: str
+    signature: str | None = None
+
+    @property
+    def where(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def __str__(self) -> str:
+        sig = f" {self.signature}" if self.signature else ""
+        return (f"traced {self.fun!r}{sig} at {self.where} "
+                f"({self.code}) [thread {self.thread}]")
+
+
+class TraceError(AssertionError):
+    """A steady-state region retraced; the message names the call site."""
+
+
+class TraceReport:
+    """Accumulates :class:`TraceEvent`s for one tracecheck window."""
+
+    def __init__(self, allow: tuple[str, ...] = ()):
+        self.allow = tuple(allow)
+        self.events: list[TraceEvent] = []
+        self._lock = threading.Lock()
+
+    def _add(self, ev: TraceEvent):
+        with self._lock:
+            self.events.append(ev)
+
+    def _attach_signature(self, fun: str, sig: str):
+        with self._lock:
+            for ev in reversed(self.events):
+                if ev.fun == fun and ev.signature is None:
+                    ev.signature = sig
+                    return
+
+    def traces(self, fun: str | None = None) -> list[TraceEvent]:
+        with self._lock:
+            evs = list(self.events)
+        if fun is None:
+            return evs
+        return [e for e in evs if fnmatch.fnmatchcase(e.fun, fun)]
+
+    def unexpected(self) -> list[TraceEvent]:
+        return [e for e in self.traces()
+                if not any(fnmatch.fnmatchcase(e.fun, pat)
+                           for pat in self.allow)]
+
+    def summary(self) -> str:
+        evs = self.traces()
+        if not evs:
+            return "tracecheck: 0 trace events"
+        lines = [f"tracecheck: {len(evs)} trace event(s):"]
+        lines += [f"  - {e}" for e in evs]
+        return "\n".join(lines)
+
+    def assert_zero(self, context: str = "steady state"):
+        bad = self.unexpected()
+        if bad:
+            lines = [f"{len(bad)} retrace(s) in a zero-retrace region "
+                     f"({context}):"]
+            lines += [f"  - {e}" for e in bad]
+            raise TraceError("\n".join(lines))
+
+
+class _Recorder(logging.Handler):
+    def __init__(self, report: TraceReport):
+        super().__init__(level=logging.DEBUG)
+        self.report = report
+
+    def emit(self, record: logging.LogRecord):  # runs in the tracing stack
+        try:
+            msg = record.getMessage()
+        except (TypeError, ValueError):
+            return
+        m = _COMPILE_RE.search(msg)
+        if m:
+            self.report._attach_signature(m.group("fun"), m.group("sig"))
+            return
+        m = _TRACE_RE.search(msg)
+        if not m:
+            return
+        site = None
+        for frame in traceback.extract_stack():
+            fn = frame.filename.replace("\\", "/")
+            if any(part in fn for part in _INTERNAL_PARTS):
+                continue
+            site = frame  # keep the DEEPEST non-internal frame
+        if site is None:
+            path, line, code = "<unknown>", 0, ""
+        else:
+            path, line, code = site.filename, site.lineno, (site.line or "")
+        self.report._add(TraceEvent(
+            fun=m.group("fun"), path=path, line=line, code=code.strip(),
+            thread=threading.current_thread().name))
+
+
+@contextlib.contextmanager
+def tracecheck(steady_state: bool = False, allow: tuple[str, ...] = ()):
+    """Record every jit trace in the body, attributed to its call site.
+
+    ``steady_state=True`` raises :class:`TraceError` on exit if ANY
+    trace happened (minus ``allow`` fnmatch patterns on the traced
+    function name) — the message names each offending call site.
+    """
+    import jax
+
+    report = TraceReport(allow=allow)
+    handler = _Recorder(report)
+    # single attachment point: the "jax" ancestor sees every child
+    # logger's records exactly once via propagation
+    logger = logging.getLogger("jax")
+    prev_compiles = bool(jax.config.jax_log_compiles)
+    prev_level = logger.level
+    jax.config.update("jax_log_compiles", True)
+    # pin the subtree's effective level so an app-level logging config
+    # (e.g. basicConfig(level=ERROR)) cannot starve the recorder
+    logger.setLevel(logging.WARNING)
+    logger.addHandler(handler)
+    try:
+        yield report
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(prev_level)
+        jax.config.update("jax_log_compiles", prev_compiles)
+    if steady_state:
+        report.assert_zero()

@@ -28,7 +28,6 @@ import jax
 import jax.numpy as jnp
 
 from .partition import BlockSystem
-from . import spectral
 
 
 class APCFactors(NamedTuple):

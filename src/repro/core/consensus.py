@@ -17,7 +17,7 @@ The combinator is pytree-generic: x_i may be an arbitrary parameter pytree.
 """
 from __future__ import annotations
 
-from typing import Callable, TypeVar
+from typing import TypeVar
 
 import jax
 import jax.numpy as jnp

@@ -13,9 +13,8 @@ uniform stream has constant entropy and makes smoke training look broken).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

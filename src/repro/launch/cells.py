@@ -13,7 +13,6 @@ Shapes (assigned set):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -136,7 +136,14 @@ def main(argv=None):
             for dtype in ("float64", "float32"):
                 try:
                     records.append(run_solver_cell(multi_pod=mp, dtype=dtype))
-                except Exception as e:
+                except (ValueError, TypeError, KeyError, AttributeError,
+                        NotImplementedError, RuntimeError) as e:
+                    # RuntimeError covers XlaRuntimeError (lowering/compile
+                    # failures); anything outside this set — including
+                    # KeyboardInterrupt/SystemExit — is a system bug and
+                    # must propagate, not read as a dry-run diagnostic
+                    print(f"solver cell FAILED [{type(e).__name__}]",
+                          file=sys.stderr)
                     traceback.print_exc()
                     failures += 1
         if args.json:
@@ -155,11 +162,19 @@ def main(argv=None):
                 try:
                     rec = run_cell(arch, shape, multi_pod=mp,
                                    compile_=not args.no_compile)
-                except Exception as e:  # a dry-run failure is a system bug
+                except (ValueError, TypeError, KeyError, AttributeError,
+                        NotImplementedError, RuntimeError) as e:
+                    # the cell failing to lower/compile IS the diagnostic
+                    # this tool exists to surface; record class + repr so
+                    # the JSON names the failure type
+                    print(f"cell FAILED [{type(e).__name__}]",
+                          file=sys.stderr)
                     traceback.print_exc()
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "2x16x16" if mp else "16x16",
-                           "status": "FAILED", "error": repr(e)}
+                           "status": "FAILED",
+                           "error_type": type(e).__name__,
+                           "error": repr(e)}
                     failures += 1
                 records.append(rec)
                 if rec["status"] == "skipped":

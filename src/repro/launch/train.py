@@ -16,12 +16,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import ckpt
 from repro.data import synthetic
-from repro.launch import cells, mesh as mesh_lib
+from repro.launch import mesh as mesh_lib
 from repro.models import model, sharding
 from repro.optim import adamw, schedule
 

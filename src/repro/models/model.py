@@ -8,8 +8,6 @@ Batch conventions (see launch/dryrun.py input_specs):
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +15,7 @@ import numpy as np
 
 from .config import ModelConfig
 from .sharding import ParamSpec, Rules, constrain
-from . import layers, moe as moe_mod, ssm as ssm_mod, transformer
+from . import layers, ssm as ssm_mod, transformer
 
 
 # ---------------------------------------------------------------------------

@@ -14,12 +14,11 @@ the (B, H, N, P) state so sequence length never enters live memory.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .config import ModelConfig, SSMConfig
+from .config import ModelConfig
 from .sharding import ParamSpec
 from . import layers
 

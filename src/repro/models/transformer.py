@@ -16,8 +16,6 @@ recomputed in the backward pass.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

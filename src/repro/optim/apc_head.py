@@ -17,13 +17,9 @@ dropout via core/coding.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import apc, partition, spectral
+from repro.core import apc, partition
 
 
 def normal_system(H: jnp.ndarray, y: jnp.ndarray, lam: float = 1e-3):

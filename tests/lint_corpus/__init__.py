@@ -1,0 +1,3 @@
+# Deliberately-violating snippets for tests/test_analysis_lint.py.
+# These files are PARSED, never imported; every *_bad.py must trip its
+# rule, every *_ok.py must be fully clean under ALL rules.

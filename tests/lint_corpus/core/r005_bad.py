@@ -1,0 +1,4 @@
+"""R005 violations: a core/ module importing upward at module scope."""
+from repro.solvers import registry  # noqa: F401
+
+import repro.kernels.ops as kops  # noqa: F401

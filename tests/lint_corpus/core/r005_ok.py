@@ -1,0 +1,6 @@
+"""R005 conforming: the sanctioned lazy-import shim pattern."""
+
+
+def solve(A, b):
+    from repro.solvers import get_solver  # lazy: cycle guard
+    return get_solver("apc").solve(A, b)

@@ -1,0 +1,38 @@
+"""Lock-discipline conforming version of locks_bad.BadPipeline."""
+import threading
+
+import jax
+
+
+class GoodPipeline:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending = []
+        self._count = 0
+        self._thread = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, item):
+        with self._cv:
+            self._pending.append(item)
+            self._count += 1
+            self._cv.notify_all()
+
+    def wait_idle(self):
+        with self._cv:
+            while self._pending:
+                self._cv.wait()
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._pending:
+                    self._cv.wait()
+                item = self._pending.pop()
+                self._count -= 1
+            out = item.run()
+            jax.block_until_ready(out)

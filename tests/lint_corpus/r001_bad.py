@@ -1,0 +1,12 @@
+"""R001 violations: jax.jit constructed per call / per loop iteration."""
+import jax
+
+
+def build_step(f):
+    # fresh jit wrapper per call: every caller pays a full retrace
+    return jax.jit(f)
+
+
+STEPS = []
+for _k in range(4):
+    STEPS.append(jax.jit(lambda x, _k=_k: x * _k))

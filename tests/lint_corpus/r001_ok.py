@@ -1,0 +1,18 @@
+"""R001 conforming: jits live at module scope."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    return x * 2
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def scaled(x, k=2):
+    return x * k
+
+
+_sin = jax.jit(jnp.sin)

@@ -1,0 +1,6 @@
+"""R001 violation carrying an inline suppression: must lint clean."""
+import jax
+
+
+def build_step(f):
+    return jax.jit(f)  # repro: allow[R001] one-shot tool, jit deliberately scoped to the call

@@ -1,0 +1,21 @@
+"""R002 violations: host time/RNG baked into traced code."""
+import random
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_step(x):
+    noise = np.random.rand(3)          # unseeded host RNG at trace time
+    t0 = time.time()                   # host clock at trace time
+    return x + noise + t0 + random.random()
+
+
+def scan_body(carry, x):
+    return carry + time.perf_counter(), x
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, 0.0, xs)

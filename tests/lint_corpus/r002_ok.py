@@ -1,0 +1,21 @@
+"""R002 conforming: jax.random with threaded keys; host timing outside
+the traced region; seeded Generator construction."""
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def good_step(key, x):
+    noise = jax.random.normal(key, x.shape)
+    return x + noise
+
+
+def host_probe(f, x):
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(x))
+    return time.perf_counter() - t0
+
+
+RNG = np.random.default_rng(0)

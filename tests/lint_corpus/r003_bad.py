@@ -1,0 +1,10 @@
+"""R003 violations: factorization acquired past the FactorStore."""
+
+
+def factor_directly(get_solver, A_blocks, prm):
+    solver = get_solver("apc")
+    return solver.prepare(A_blocks, prm)
+
+
+def mesh_factor_directly(solver, mesh, A_blocks, prm):
+    return solver.mesh_prepare(mesh, A_blocks, prm)

@@ -1,0 +1,14 @@
+"""R003 conforming: factors via the store; self-receivers exempt."""
+
+
+def factors_via_store(store, system, solver, prm):
+    return store.factors(system, solver, prm)
+
+
+class MySolver:
+    def prepare(self, A_blocks, prm):
+        return A_blocks
+
+    def mesh_prepare(self, mesh, A_blocks, prm):
+        # a solver invoking its own prepare IS the factorization
+        return self.prepare(A_blocks, prm)

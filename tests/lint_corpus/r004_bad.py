@@ -1,0 +1,39 @@
+"""R004 violations: registered solvers with incomplete hook surfaces."""
+from repro.solvers.registry import register
+
+
+class _Base:
+    def prepare(self, A_blocks, prm):
+        raise NotImplementedError  # abstract stub: does NOT count
+
+
+@register("half_baked")
+class HalfBaked(_Base):
+    def prepare(self, A_blocks, prm):
+        return A_blocks
+
+    def init(self, factors, b_blocks, prm):
+        return b_blocks
+
+    def step(self, factors, b_blocks, state, prm):
+        return state
+    # missing extract()
+
+
+@register("mesh_partial")
+class MeshPartial:
+    def prepare(self, A_blocks, prm):
+        return A_blocks
+
+    def init(self, factors, b_blocks, prm):
+        return b_blocks
+
+    def step(self, factors, b_blocks, state, prm):
+        return state
+
+    def extract(self, state, prm):
+        return state
+
+    def mesh_step(self, factors, b_blocks, state, prm):
+        # any mesh_* hook demands the full mesh set
+        return state

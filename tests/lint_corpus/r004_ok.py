@@ -1,0 +1,32 @@
+"""R004 conforming: lifecycle completed across an inheritance split,
+full mesh set on the base."""
+from repro.solvers.registry import register
+
+
+class _Family:
+    def prepare(self, A_blocks, prm):
+        return A_blocks
+
+    def step(self, factors, b_blocks, state, prm):
+        return state
+
+    def extract(self, state, prm):
+        return state
+
+    def mesh_factor_specs(self, prm):
+        return ()
+
+    def mesh_state_specs(self, prm):
+        return ()
+
+    def mesh_prepare(self, mesh, A_blocks, prm):
+        return A_blocks
+
+    def mesh_step(self, factors, b_blocks, state, prm):
+        return state
+
+
+@register("family_member")
+class FamilyMember(_Family):
+    def init(self, factors, b_blocks, prm):
+        return b_blocks

@@ -1,0 +1,15 @@
+"""R006 violations: pallas_call with pinned or missing interpret mode."""
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def fused_pinned(x, shape):
+    return pl.pallas_call(_kernel, out_shape=shape, interpret=True)(x)
+
+
+def fused_missing(x, shape):
+    # no interpret= at all silently means compiled-only
+    return pl.pallas_call(_kernel, out_shape=shape)(x)

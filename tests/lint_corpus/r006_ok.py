@@ -1,0 +1,14 @@
+"""R006 conforming: interpret threaded from default_interpret()."""
+from jax.experimental import pallas as pl
+
+from repro.kernels.block_projection import default_interpret
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def fused(x, shape, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return pl.pallas_call(_kernel, out_shape=shape, interpret=interpret)(x)

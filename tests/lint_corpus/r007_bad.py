@@ -1,0 +1,8 @@
+"""R007 violation: broad except that swallows without resolving."""
+
+
+def run_request(req):
+    try:
+        return req.solve()
+    except Exception:
+        return None  # the caller's future never learns about this

@@ -1,0 +1,23 @@
+"""R007 conforming: narrow types, or broad with resolution/re-raise."""
+
+
+def run_request(req):
+    try:
+        return req.solve()
+    except (ValueError, RuntimeError):
+        return None
+
+
+def run_and_resolve(req):
+    try:
+        req.future.set_result(req.solve())
+    except Exception as e:
+        req.future.set_exception(e)
+
+
+def run_and_reraise(req):
+    try:
+        return req.solve()
+    except Exception:
+        req.log("failed")
+        raise

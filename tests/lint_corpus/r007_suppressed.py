@@ -1,0 +1,9 @@
+"""R007 violation carrying an inline suppression: must lint clean."""
+
+
+def sweep(suites):
+    for s in suites:
+        try:
+            s.run()
+        except Exception:  # repro: allow[R007] diagnostic sweep, no futures in flight
+            continue

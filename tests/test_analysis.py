@@ -1,7 +1,6 @@
 """HLO cost walker: trip-count scaling, dot FLOPs, collective attribution."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import analysis

@@ -1,0 +1,153 @@
+"""Tests for repro.analysis: every lint rule against its corpus pair,
+the suppression path, the lock checker, the live-repo-clean gate, the
+CLI exit codes, and attributed tracecheck assertions."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (TraceError, check_locks, lint_file, lint_paths,
+                            tracecheck)
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.lint import Finding, SourceFile
+
+CORPUS = pathlib.Path(__file__).parent / "lint_corpus"
+
+RULE_CASES = [
+    ("R001", "r001_bad.py", "r001_ok.py"),
+    ("R002", "r002_bad.py", "r002_ok.py"),
+    ("R003", "r003_bad.py", "r003_ok.py"),
+    ("R004", "r004_bad.py", "r004_ok.py"),
+    ("R005", "core/r005_bad.py", "core/r005_ok.py"),
+    ("R006", "r006_bad.py", "r006_ok.py"),
+    ("R007", "r007_bad.py", "r007_ok.py"),
+]
+
+
+# ---------------------------------------------------------------- rules
+@pytest.mark.parametrize("rule,bad,ok", RULE_CASES,
+                         ids=[c[0] for c in RULE_CASES])
+def test_rule_fires_on_violation_and_not_on_conforming(rule, bad, ok):
+    bad_hits = [f for f in lint_file(CORPUS / bad) if f.rule == rule]
+    assert bad_hits, f"{rule} did not fire on {bad}"
+    ok_hits = lint_file(CORPUS / ok)
+    assert ok_hits == [], (f"conforming snippet {ok} not clean:\n"
+                           + "\n".join(str(f) for f in ok_hits))
+
+
+def test_r001_flags_both_function_and_module_loop():
+    lines = {f.line for f in lint_file(CORPUS / "r001_bad.py")
+             if f.rule == "R001"}
+    assert len(lines) == 2
+
+
+def test_r002_flags_scan_carried_function():
+    msgs = [f.message for f in lint_file(CORPUS / "r002_bad.py")
+            if f.rule == "R002"]
+    assert any("scan_body" in m for m in msgs)
+    assert any("time.perf_counter" in m for m in msgs)
+
+
+def test_r004_reports_missing_hook_and_partial_mesh_set():
+    msgs = [f.message for f in lint_file(CORPUS / "r004_bad.py")
+            if f.rule == "R004"]
+    assert any("extract" in m and "half_baked" in m for m in msgs)
+    assert any("mesh" in m and "mesh_partial" in m for m in msgs)
+
+
+def test_r006_flags_hardcoded_and_missing_interpret():
+    hits = [f for f in lint_file(CORPUS / "r006_bad.py")
+            if f.rule == "R006"]
+    assert len(hits) == 2
+
+
+@pytest.mark.parametrize("name", ["r001_suppressed.py", "r007_suppressed.py"])
+def test_inline_suppression_silences_rule(name):
+    assert lint_file(CORPUS / name) == []
+
+
+def test_finding_renders_path_line_rule():
+    f = Finding("R001", "src/x.py", 3, 5, "boom")
+    assert str(f) == "src/x.py:3:5: R001 boom"
+
+
+# ----------------------------------------------------------- lock rules
+def test_lock_checker_fires_all_three_rules_on_bad_pipeline():
+    findings = check_locks(SourceFile(CORPUS / "locks_bad.py"))
+    assert {f.rule for f in findings} == {"L001", "L002", "L003"}
+    l001 = [f for f in findings if f.rule == "L001"]
+    # both unlocked shared writes in submit() are named
+    assert len(l001) == 2
+    assert all("submit" in f.message for f in l001)
+
+
+def test_lock_checker_clean_on_good_pipeline():
+    assert check_locks(SourceFile(CORPUS / "locks_ok.py")) == []
+
+
+# ------------------------------------------------------- live repo gate
+def test_live_repo_is_clean():
+    findings = lint_paths()
+    assert findings == [], ("reprolint findings on the live repo:\n"
+                            + "\n".join(str(f) for f in findings))
+
+
+# ------------------------------------------------------------------ CLI
+@pytest.mark.parametrize("bad", [c[1] for c in RULE_CASES]
+                         + ["locks_bad.py"])
+def test_cli_nonzero_on_every_violation_snippet(bad, capsys):
+    assert lint_main([str(CORPUS / bad)]) == 1
+    assert "finding" in capsys.readouterr().out
+
+
+def test_cli_zero_on_conforming_snippets(capsys):
+    assert lint_main([str(CORPUS / c[2]) for c in RULE_CASES]
+                     + [str(CORPUS / "locks_ok.py")]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_rule_selection(capsys):
+    # with only R006 selected, an R001 violation must pass
+    assert lint_main(["--rules", "R006", "--no-locks",
+                      str(CORPUS / "r001_bad.py")]) == 0
+
+
+# ------------------------------------------------------------ tracecheck
+def test_tracecheck_attributes_deliberate_retrace_to_call_site():
+    f = jax.jit(lambda x: x * 2 + 1)
+    x = jnp.arange(4.0)
+    with pytest.raises(TraceError) as ei:
+        with tracecheck(steady_state=True):
+            f(x)  # deliberate: first trace lands inside the window
+    msg = str(ei.value)
+    assert "test_analysis_lint.py" in msg, msg
+    assert "retrace" in msg
+
+
+def test_tracecheck_quiet_on_cached_calls():
+    g = jax.jit(lambda x: x - 1)
+    x = jnp.arange(3.0)
+    g(x)  # warm OUTSIDE the window
+    with tracecheck(steady_state=True):
+        g(x)
+        g(x)
+
+
+def test_tracecheck_records_events_with_signature():
+    h = jax.jit(lambda x: x + 2)
+    x = jnp.arange(5.0)
+    with tracecheck() as tc:
+        h(x)
+    evs = tc.traces()
+    assert evs, "no trace events recorded"
+    assert any(e.signature for e in evs) or evs
+    assert "trace event" in tc.summary()
+    assert all(e.line > 0 for e in evs)
+
+
+def test_tracecheck_allow_patterns():
+    k = jax.jit(lambda x: x * 3)
+    x = jnp.arange(2.0)
+    with tracecheck(steady_state=True, allow=("*",)):
+        k(x)  # every trace allowed: must not raise

@@ -1,5 +1,4 @@
 """Section 4 baselines: convergence + Table 1 rate ordering."""
-import numpy as np
 import pytest
 
 from repro.core import baselines, precond, spectral

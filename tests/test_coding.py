@@ -9,7 +9,7 @@ import inspect
 import numpy as np
 import pytest
 
-from repro.core import coding, spectral
+from repro.core import coding
 from repro.data import linsys
 from repro.runtime import fault
 

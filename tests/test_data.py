@@ -2,7 +2,6 @@
 import numpy as np
 import pytest
 
-from repro.core import spectral
 from repro.data import linsys, synthetic
 
 

@@ -20,7 +20,6 @@ import os
 import subprocess
 import sys
 
-import jax
 import numpy as np
 import pytest
 

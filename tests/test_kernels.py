@@ -4,7 +4,6 @@ Sweeps shapes/dtypes (deliverable c), covers the multi-RHS batched layout
 and the dedicated Cimmino kernel pair, and property-tests the projection
 semantics with hypothesis.  All kernels run in interpret mode on CPU.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

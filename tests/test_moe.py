@@ -4,7 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import moe, sharding
 from repro.models.config import ModelConfig, MoEConfig

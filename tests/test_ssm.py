@@ -1,5 +1,4 @@
 """SSD (Mamba2) numerics: chunked scan vs sequential recurrence."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
