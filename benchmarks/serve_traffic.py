@@ -32,6 +32,12 @@ pipeline at arrival time) and reports p50/p95/p99 latency, sustained
 throughput, and the shed rate.  ``scripts/bench_ci.py`` runs the pair at
 a rate where the sync loop saturates and gates async >= sync throughput.
 
+``streaming()`` is the streaming-mode scenario: one registered system,
+100 perturbed right-hand sides driven through ``solve_stream`` with
+``warm_start=True`` — the warm-hit rate (gated at 1.0 for warm_rhs_ok
+solvers) and steady-state zero-retrace are the system-mode refactor's
+serving claims, recorded per server kind.
+
 The async win is HOST-PARALLELISM dependent: at saturation the sync loop
 never idles, so on a single-core host it already sits at the makespan
 floor (total CPU work / 1 core) and no overlap can beat it — the
@@ -50,7 +56,7 @@ import numpy as np
 
 from repro.data import linsys
 from repro.solvers.pipeline import AsyncLinsysServer, Shed
-from repro.solvers.serve import LinsysServer
+from repro.solvers.serve import LinsysServer, solve_stream
 from repro.solvers.store import FactorStore
 
 ITERS = 150
@@ -283,6 +289,50 @@ def saturation_throughput(**kw) -> float:
     one-batch-at-a-time loop.  Rates above this saturate it."""
     return traffic(server="sync", rate=float("inf"), **kw)[
         "throughput_rhs_s"]
+
+
+def streaming(server: str = "sync", solver: str = "dhbm", n: int = 256,
+              m: int = 4, iters: int = ITERS, n_requests: int = 100,
+              perturb: float = 1e-3, seed: int = 0) -> dict:
+    """Streaming-clients scenario: ONE registered system re-solved under
+    ``n_requests`` perturbed right-hand sides (sensor-update traffic)
+    through ``solve_stream``.
+
+    Measures the warm-start gating end to end: with a ``warm_rhs_ok``
+    solver (default dhbm) every post-priming batch must resume from the
+    previous state, and the steady-state jit cache must stay constant.
+    The first two requests prime the cold AND warm executor paths; only
+    the remaining ``n_requests - 2`` are measured."""
+    jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(seed)
+    sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=0)
+    cls = {"sync": LinsysServer, "async": AsyncLinsysServer}[server]
+    srv = cls(FactorStore(), solver=solver, iters=iters, batch=1,
+              warm_start=True)
+    fp = srv.register(sys_)
+    b0 = rng.standard_normal(sys_.N)
+    stream = [(fp, b0 + perturb * rng.standard_normal(sys_.N))
+              for _ in range(n_requests)]
+    solve_stream(srv, stream[:2])
+    cache0 = srv.jit_cache_size()
+    t0 = time.perf_counter()
+    rep = solve_stream(srv, stream[2:])
+    dt = time.perf_counter() - t0
+    cache1 = srv.jit_cache_size()
+    if hasattr(srv, "close"):
+        srv.close()
+    return {
+        "server": server, "solver": solver, "n": n, "m": m, "iters": iters,
+        "n_requests": n_requests, "perturb": perturb,
+        "served": len(rep.served), "batches": rep.batches,
+        "warm_batches": rep.warm_batches,
+        "warm_hit_rate": rep.warm_hit_rate,
+        "rhs_per_s": len(rep.served) / dt if dt > 0 else float("inf"),
+        "max_residual": max((r.residual for r in rep.served),
+                            default=float("nan")),
+        "jit_cache": [cache0, cache1],
+        "zero_retrace": cache0 < 0 or cache1 == cache0,
+    }
 
 
 def run(verbose: bool = True, n: int = 256, m: int = 4,

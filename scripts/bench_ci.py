@@ -15,7 +15,7 @@ Runs the quick-mode benchmark set —
     overload probe (tiny ``admit_capacity`` at an infinite rate) that
     must shed EXPLICITLY rather than queue unboundedly;
 
-— and writes them machine-readable to BENCH_PR6.json.  Gates (non-zero
+— and writes them machine-readable to BENCH_PR8.json.  Gates (non-zero
 exit on violation):
 
   * ``zero_retrace`` / ``async_zero_retrace`` — steady-state serving
@@ -46,7 +46,18 @@ exit on violation):
   * ``overload_sheds`` — the overload probe sheds (> 0) and every
     request still gets an explicit answer (served + shed == submitted).
 
-    PYTHONPATH=src python scripts/bench_ci.py --out BENCH_PR6.json
+PR8 adds the system-mode rows on top (the PR6 gates carry unchanged):
+
+  * ``benchmarks.periter.sparse_comparison``: sparse-vs-densified
+    per-iteration times on a >= 90%-sparse banded system, gated
+    ``sparse_ge_densified`` — the compressed path must not lose to the
+    densified twin it is numerically identical to;
+  * ``benchmarks.serve_traffic.streaming``: 100 perturbed-b requests
+    through ``solve_stream`` on BOTH servers with a warm_rhs_ok solver,
+    gated ``stream_warm_hits`` (every post-priming batch warm) and
+    ``stream_zero_retrace`` (steady-state jit cache constant).
+
+    PYTHONPATH=src python scripts/bench_ci.py --out BENCH_PR8.json
 """
 from __future__ import annotations
 
@@ -73,14 +84,17 @@ import numpy as np  # noqa: E402
 PERITER = dict(n=512, m=2, batches=(1, 16), iters=30)
 SERVE = dict(n=256, m=4, iters=100, warm_batches=6)
 TRAFFIC = dict(n_requests=32, iters=100)
+SPARSE = dict(n=768, m=4, bandwidth=8, iters=30)
+STREAM = dict(n_requests=100, iters=100, solver="dhbm")
 DISPATCH_MIN = 0.75         # noise floor for dispatch >= unfused gates
+SPARSE_MIN = 1.0            # compressed path never loses to densified
 ASYNC_MIN_MULTICORE = 1.00  # strict: the pipeline must win with cores
 ASYNC_MIN_SINGLECORE = 0.80  # overhead bound at the 1-core makespan floor
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR6.json",
+    ap.add_argument("--out", default="BENCH_PR8.json",
                     help="where to write the benchmark trajectory record")
     ap.add_argument("--no-gate", action="store_true",
                     help="record only; do not fail on gate violations "
@@ -108,6 +122,26 @@ def main(argv=None) -> int:
                   f"dispatch {row[f'dispatch_b{k}_us']:9.1f}us "
                   f"({row[f'dispatch_speedup_b{k}']:.2f}x, "
                   f"{row[f'engine_b{k}']})")
+
+    print(f"== bench_ci: periter sparse-vs-densified {SPARSE} ==")
+    sc = periter.sparse_comparison(**SPARSE)
+    for name, row in sc["methods"].items():
+        print(f"  {name:10s} sparse {row['sparse_us']:9.1f}us  "
+              f"dense {row['dense_us']:9.1f}us "
+              f"({row['sparse_speedup']:.2f}x, {sc['sparsity']:.0%} zero, "
+              f"w={sc['support_width']}/{sc['n']})")
+    assert sc["sparsity"] >= 0.90, (
+        f"sparse gate shape must be >= 90% sparse, got {sc['sparsity']:.0%}")
+
+    print(f"== bench_ci: serve_traffic.streaming {STREAM} ==")
+    stream = {}
+    for kind in ("sync", "async"):
+        stream[kind] = serve_traffic.streaming(server=kind, **STREAM)
+        st = stream[kind]
+        print(f"  {kind:5s} {st['served']} perturbed-b requests: warm rate "
+              f"{st['warm_hit_rate']:.0%}   {st['rhs_per_s']:.1f} RHS/s   "
+              f"max residual {st['max_residual']:.1e}   "
+              f"jit {st['jit_cache']}")
 
     print(f"== bench_ci: serve_traffic.measure {SERVE} ==")
     srv = serve_traffic.measure(**SERVE)
@@ -188,10 +222,21 @@ def main(argv=None) -> int:
         "overload_sheds": (overload["shed"] > 0 and
                            overload["served"] + overload["shed"]
                            == TRAFFIC["n_requests"]),
+        # the compressed sparse path never loses to its densified twin
+        "sparse_ge_densified": all(
+            row["sparse_speedup"] >= SPARSE_MIN
+            for row in sc["methods"].values()),
+        # streaming mode: every post-priming perturbed-b batch resumes
+        # warm (warm_rhs_ok solver), through BOTH servers...
+        "stream_warm_hits": all(
+            stream[k]["warm_hit_rate"] == 1.0 for k in ("sync", "async")),
+        # ...with a constant steady-state jit cache
+        "stream_zero_retrace": all(
+            stream[k]["zero_retrace"] for k in ("sync", "async")),
     }
     record = {
-        "schema": 2,
-        "pr": 6,
+        "schema": 3,
+        "pr": 8,
         "backend": jax.default_backend(),
         "pallas_interpret": bp.default_interpret(),
         "host_cpus": cpus,
@@ -205,11 +250,19 @@ def main(argv=None) -> int:
             "async_min": async_min,
             "pipeline_depth": depth,
             "tracecheck_report": retrace_report,
+            "sparse_speedups": {name: row["sparse_speedup"]
+                                for name, row in sc["methods"].items()},
+            "sparse_min": SPARSE_MIN,
+            "sparse_gate_sparsity": sc["sparsity"],
+            "stream_warm_rates": {k: stream[k]["warm_hit_rate"]
+                                  for k in ("sync", "async")},
         },
         "engine_choices": {str(k): v
                            for k, v in sorted(kops.engine_cache().items())},
         "periter_kernel": per,
+        "periter_sparse": sc,
         "serve_traffic": srv,
+        "streaming": stream,
         "traffic": {"sync": tr["sync"], "async": tr["async"],
                     "overload": overload},
         "gates": gates,
@@ -218,10 +271,15 @@ def main(argv=None) -> int:
         json.dump(record, f, indent=2)
     print(f"wrote {args.out}")
 
+    sparse_min_seen = min(row["sparse_speedup"]
+                          for row in sc["methods"].values())
     failed = [k for k, ok in gates.items() if not ok]
     if failed:
         msg = (f"bench gate FAILED: {failed} "
                f"(dispatch b1={disp_b1:.2f}x b16={disp_b16:.2f}x, "
+               f"sparse>={sparse_min_seen:.2f}x, "
+               f"stream warm {stream['sync']['warm_hit_rate']:.0%}/"
+               f"{stream['async']['warm_hit_rate']:.0%}, "
                f"async/sync={ratio:.2f} vs >={async_min:.2f} "
                f"on {cpus} cpu(s))")
         if args.no_gate:
@@ -230,7 +288,9 @@ def main(argv=None) -> int:
         print(msg, file=sys.stderr)
         return 1
     print(f"bench gates OK: dispatch b1 {disp_b1:.2f}x / b16 {disp_b16:.2f}x "
-          f">= {DISPATCH_MIN}, async/sync {ratio:.2f} >= {async_min:.2f} "
+          f">= {DISPATCH_MIN}, sparse {sparse_min_seen:.2f}x >= "
+          f"{SPARSE_MIN} at {sc['sparsity']:.0%} sparsity, stream warm "
+          f"100% both servers, async/sync {ratio:.2f} >= {async_min:.2f} "
           f"({cpus} cpu(s)), zero retraces, overload sheds explicitly")
     return 0
 

@@ -36,6 +36,9 @@ python scripts/smokes/serve.py
 echo "== serve_async smoke (AsyncLinsysServer: pipelined stream, SLO report) =="
 python scripts/smokes/serve_async.py
 
+echo "== scenarios smoke (sparse/LS/stream modes, local + 2x2 mesh) =="
+XLA_FLAGS="$FORCE4" python scripts/smokes/scenarios.py
+
 echo "== straggler smoke (r=2, rotating straggler, 4 forced host devices) =="
 XLA_FLAGS="$FORCE4" python scripts/smokes/straggler.py
 

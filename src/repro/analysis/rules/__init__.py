@@ -9,6 +9,7 @@ from repro.analysis.rules.r004_registry import R004RegistryComplete
 from repro.analysis.rules.r005_layering import R005CoreLayering
 from repro.analysis.rules.r006_interpret import R006InterpretThreading
 from repro.analysis.rules.r007_broad_except import R007BroadExcept
+from repro.analysis.rules.r008_modes import R008ModeHooks
 
 ALL_RULES = (
     R001JitInFunction,
@@ -18,6 +19,7 @@ ALL_RULES = (
     R005CoreLayering,
     R006InterpretThreading,
     R007BroadExcept,
+    R008ModeHooks,
 )
 
 __all__ = ["ALL_RULES"] + [c.__name__ for c in ALL_RULES]

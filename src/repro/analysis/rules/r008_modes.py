@@ -1,0 +1,143 @@
+"""R008 — declared system modes must be backed by mode hooks.
+
+A solver class that declares a ``supports`` capability set is making a
+dispatch-time promise (``solvers/capability.py`` routes on it).  The
+promise is only honest if the claimed mode's machinery exists:
+
+* ``"least_squares"`` requires non-stub ``ls_moment`` (the normal-map
+  optimality moment the drivers turn into a residual) and
+  ``ls_reference`` (the lstsq ground truth used when ``x_true`` is
+  absent) somewhere in the class's inheritance chain.
+* ``"sparse"`` requires the chain's defining modules to import
+  ``repro.core.blockops`` — the structure-dispatched contraction layer
+  is the only legal way to consume a ``SparseBlocks`` operand, so a
+  sparse claim without the import means the solver would crash (or
+  silently densify) on its first sparse system.
+
+Inheritance is resolved across every scanned file, mirroring R004: the
+gradient family declares ``supports`` and the ls hooks once on a shared
+base.  A hook whose body is just ``raise NotImplementedError`` is the
+``Solver`` interface stub and does not count.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import Finding, ProgramRule, SourceFile, dotted
+
+LS_HOOKS = ("ls_moment", "ls_reference")
+BLOCKOPS = "repro.core.blockops"
+
+
+def _is_stub(fn: ast.AST) -> bool:
+    body = [s for s in fn.body
+            if not (isinstance(s, ast.Expr)
+                    and isinstance(s.value, ast.Constant)
+                    and isinstance(s.value.value, str))]
+    return len(body) == 1 and isinstance(body[0], ast.Raise) and (
+        "NotImplementedError" in ast.dump(body[0]))
+
+
+def _declared_supports(cls: ast.ClassDef) -> set[str] | None:
+    """The string literals of a class-body ``supports = ...`` assignment,
+    or None when the class does not declare one (inheriting is fine —
+    the base that declares carries the obligation)."""
+    for stmt in cls.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        if not any(isinstance(t, ast.Name) and t.id == "supports"
+                   for t in targets):
+            continue
+        if isinstance(value, ast.Call) and value.args:
+            value = value.args[0]          # frozenset({...}) / set([...])
+        if isinstance(value, (ast.Set, ast.Tuple, ast.List)):
+            elts = value.elts
+        else:
+            return set()                   # dynamic: nothing checkable
+        return {e.value for e in elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    return None
+
+
+def _imports_blockops(src: SourceFile) -> bool:
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Import):
+            if any(a.name.startswith(BLOCKOPS) for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod.startswith(BLOCKOPS):
+                return True
+            if mod == "repro.core" and any(a.name == "blockops"
+                                           for a in node.names):
+                return True
+    return False
+
+
+class R008ModeHooks(ProgramRule):
+    id = "R008"
+    title = "declared capability mode without its mode hooks"
+
+    def run_program(self, sources: list[SourceFile]) -> list[Finding]:
+        table: dict[str, tuple[ast.ClassDef, SourceFile]] = {}
+        for src in sources:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.ClassDef):
+                    table.setdefault(node.name, (node, src))
+
+        findings: list[Finding] = []
+        for src in sources:
+            for node in ast.walk(src.tree):
+                if not isinstance(node, ast.ClassDef):
+                    continue
+                supports = _declared_supports(node)
+                if not supports:
+                    continue
+                defined: set[str] = set()
+                chain_srcs: list[SourceFile] = []
+                seen: set[str] = set()
+                queue = [node.name]
+                while queue:
+                    cname = queue.pop()
+                    if cname in seen or cname not in table:
+                        continue
+                    seen.add(cname)
+                    cls, csrc = table[cname]
+                    chain_srcs.append(csrc)
+                    for stmt in cls.body:
+                        if isinstance(stmt, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                            if not _is_stub(stmt):
+                                defined.add(stmt.name)
+                    for base in cls.bases:
+                        bname = dotted(base)
+                        if bname:
+                            queue.append(bname.split(".")[-1])
+
+                if "least_squares" in supports:
+                    missing = [h for h in LS_HOOKS if h not in defined]
+                    if missing:
+                        self.report_at(
+                            src, node,
+                            f"class {node.name!r} declares "
+                            f"supports={{'least_squares', ...}} but its "
+                            f"inheritance chain lacks non-stub {missing}: "
+                            "the LS drivers need ls_moment for the "
+                            "optimality residual and ls_reference for the "
+                            "lstsq ground truth.",
+                            qualname=node.name, out=findings)
+                if "sparse" in supports:
+                    if not any(_imports_blockops(s) for s in chain_srcs):
+                        self.report_at(
+                            src, node,
+                            f"class {node.name!r} declares "
+                            f"supports={{'sparse', ...}} but no module in "
+                            "its inheritance chain imports "
+                            f"{BLOCKOPS}: sparse operands must go through "
+                            "the structure-dispatched contractions, not "
+                            "raw einsums on a SparseBlocks NamedTuple.",
+                            qualname=node.name, out=findings)
+        return findings

@@ -20,17 +20,23 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.partition import BlockSystem, partition
+from repro.core.partition import BlockSystem, as_sparse, partition
 
 
 def _finalize(A: np.ndarray, m: int, rng: np.random.Generator,
               dtype=jnp.float64) -> BlockSystem:
-    """Draw x*, form b = A x*, partition into m row blocks."""
+    """Draw x*, form b = A x*, partition into m row blocks.
+
+    The system is consistent BY CONSTRUCTION (b = A x*), so it is tagged
+    ``mode="square"`` even when tall — an exact solution exists and the
+    plain residual ``‖Ax−b‖/‖b‖`` is the right convergence measure.
+    """
     N, n = A.shape
     x_true = rng.standard_normal(n)
     b = A @ x_true
     return partition(jnp.asarray(A, dtype=dtype), jnp.asarray(b, dtype=dtype),
-                     m, x_true=jnp.asarray(x_true, dtype=dtype))
+                     m, x_true=jnp.asarray(x_true, dtype=dtype),
+                     mode="square")
 
 
 # ---------------------------------------------------------------------------
@@ -60,11 +66,26 @@ def nonzero_mean_gaussian(n: int = 500, m: int = 4, *, mean: float = 1.0,
 
 
 def tall_gaussian(N: int = 1000, n: int = 500, m: int = 4, *, seed: int = 0,
-                  dtype=jnp.float64) -> BlockSystem:
-    """Overdetermined consistent system.  Paper: 'STANDARD TALL GAUSSIAN'."""
+                  noise: float = 0.0, dtype=jnp.float64) -> BlockSystem:
+    """Overdetermined Gaussian system.  Paper: 'STANDARD TALL GAUSSIAN'.
+
+    With ``noise=0`` (default) the system is CONSISTENT by construction
+    (``b = A x*``, mode ``"square"``) — the paper's setting.  ``noise > 0``
+    adds ``noise * e`` (i.i.d. standard normal ``e``) to ``b``: with
+    ``N > n`` the perturbed system is inconsistent almost surely, so it is
+    tagged ``mode="least_squares"`` and ``x_true`` becomes the LS optimum
+    ``argmin ‖Ax−b‖`` (what the LS-capable solvers converge to).
+    """
     rng = np.random.default_rng(seed)
     A = rng.standard_normal((N, n))
-    return _finalize(A, m, rng, dtype)
+    if noise == 0.0:
+        return _finalize(A, m, rng, dtype)
+    x_star = rng.standard_normal(n)          # same draw order as _finalize
+    b = A @ x_star + noise * rng.standard_normal(N)
+    x_ls = np.linalg.lstsq(A, b, rcond=None)[0]
+    return partition(jnp.asarray(A, dtype=dtype), jnp.asarray(b, dtype=dtype),
+                     m, x_true=jnp.asarray(x_ls, dtype=dtype),
+                     mode="least_squares")
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +157,93 @@ def conditioned_gaussian(n: int, m: int, cond: float, *, seed: int = 0,
     return _finalize(A, m, rng, dtype)
 
 
+# ---------------------------------------------------------------------------
+# Block-sparse ensembles (ROADMAP item 3a: the Matrix Market problems the
+# dense proxies stand in for are themselves sparse)
+# ---------------------------------------------------------------------------
+
+
+def banded_system(n: int = 512, m: int = 4, *, bandwidth: int = 8,
+                  seed: int = 0, dtype=jnp.float64) -> BlockSystem:
+    """Diagonally-dominant banded system (half-bandwidth ``bandwidth``).
+
+    Each worker block touches only ~``p + 2*bandwidth`` of the ``n``
+    columns, so the compressed sparse operand does a small fraction of
+    the dense work; dominance keeps the system well conditioned.
+    """
+    rng = np.random.default_rng(seed)
+    A = np.zeros((n, n))
+    for off in range(-bandwidth, bandwidth + 1):
+        d = rng.standard_normal(n - abs(off))
+        A += np.diag(d, k=off)
+    A += np.diag(np.abs(A).sum(axis=1) + 1.0)        # dominance
+    return as_sparse(_finalize(A, m, rng, dtype))
+
+
+def block_sparse_system(n: int = 512, m: int = 4, *, density: float = 0.1,
+                        seed: int = 0, dtype=jnp.float64) -> BlockSystem:
+    """Each worker block supported on its own random ``density * n``-column
+    subset (every column covered by at least one block, so the system stays
+    structurally square); Gaussian values on the support."""
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density={density} not in (0, 1]")
+    rng = np.random.default_rng(seed)
+    if n % m:
+        raise ValueError(f"m={m} must divide n={n}")
+    p = n // m
+    w = max(int(round(density * n)), p)
+    A = np.zeros((n, n))
+    owners = rng.permutation(n).reshape(m, p)        # cover every column
+    for i in range(m):
+        extra = np.setdiff1d(np.arange(n), owners[i], assume_unique=False)
+        pick = np.concatenate(
+            [owners[i], rng.choice(extra, size=w - p, replace=False)])
+        block = np.zeros((p, n))
+        block[:, np.sort(pick)] = rng.standard_normal((p, w))
+        A[i * p:(i + 1) * p] = block
+    return as_sparse(_finalize(A, m, rng, dtype))
+
+
+def sparse_matrix_market_proxy(key: str, m: Optional[int] = None, *,
+                               bandwidth: int = 8, seed: int = 0,
+                               dtype=jnp.float64) -> BlockSystem:
+    """Sparse spectrum-controlled proxy for a Matrix Market problem.
+
+    The prescribed log-spaced spectrum sits on the generalized diagonal
+    and a banded perturbation well below the smallest singular value adds
+    realistic off-diagonal structure, so the condition number stays in
+    the published problem's regime while the matrix is genuinely sparse
+    (the dense proxies in ``MM_PROXIES`` are Haar-rotated and dense).
+    Tall problems (ASH608) duplicate rows to reach ``m | N``, exactly
+    like :func:`matrix_market_proxy`.
+    """
+    spec = MM_PROXIES[key]
+    rng = np.random.default_rng(seed)
+    N, n = spec.N, spec.n
+    m = spec.m if m is None else m
+    k = min(N, n)
+    s = _log_spectrum(k, spec.cond)
+    A = np.zeros((N, n))
+    A[np.arange(k), np.arange(k)] = s
+    if N > k:                                        # tall: duplicate rows
+        A[k:] = A[np.arange(N - k) % k]
+    # keep the banded perturbation's spectral norm well under s_min so the
+    # prescribed condition number survives (~2*eps*sqrt(2*bandwidth+1))
+    eps = 0.02 * s.min()
+    rows = np.arange(N)[:, None]
+    cols = np.arange(-bandwidth, bandwidth + 1)[None, :] + (
+        rows * n) // max(N, 1)
+    valid = (cols >= 0) & (cols < n)
+    pert = eps * rng.standard_normal(cols.shape) * valid
+    np.add.at(A, (np.broadcast_to(rows, cols.shape)[valid],
+                  cols[valid]), pert[valid])
+    rem = (-A.shape[0]) % m
+    if rem:
+        idx = rng.integers(0, A.shape[0], size=rem)
+        A = np.concatenate([A, A[idx] * 1.0], axis=0)
+    return as_sparse(_finalize(A, m, rng, dtype))
+
+
 ALL_PROBLEMS = {
     "qc324": lambda seed=0: matrix_market_proxy("qc324", seed=seed),
     "orsirr1": lambda seed=0: matrix_market_proxy("orsirr1", seed=seed),
@@ -143,4 +251,11 @@ ALL_PROBLEMS = {
     "std_gaussian": lambda seed=0: standard_gaussian(seed=seed),
     "nonzero_mean": lambda seed=0: nonzero_mean_gaussian(seed=seed),
     "tall_gaussian": lambda seed=0: tall_gaussian(seed=seed),
+    "tall_noisy": lambda seed=0: tall_gaussian(seed=seed, noise=0.5),
+    "banded": lambda seed=0: banded_system(seed=seed),
+    "block_sparse": lambda seed=0: block_sparse_system(seed=seed),
+    "qc324_sparse": lambda seed=0: sparse_matrix_market_proxy("qc324",
+                                                              seed=seed),
+    "ash608_sparse": lambda seed=0: sparse_matrix_market_proxy("ash608",
+                                                               seed=seed),
 }

@@ -70,11 +70,15 @@ def main(argv=None):
 
     jax.config.update("jax_enable_x64", args.x64)
     sys_ = linsys.ALL_PROBLEMS[args.problem](seed=args.seed)
-    # re-partition to the requested worker count
+    # re-partition to the requested worker count, preserving the system's
+    # mode (least-squares stays least-squares) and sparse structure
+    was_sparse = sys_.is_sparse
     A, b = sys_.dense()
-    from repro.core.partition import partition, pad_to_blocks
+    from repro.core.partition import as_sparse, partition, pad_to_blocks
     A, b = pad_to_blocks(np.asarray(A), np.asarray(b), args.workers)
-    sys_ = partition(A, b, args.workers, x_true=sys_.x_true)
+    sys_ = partition(A, b, args.workers, x_true=sys_.x_true, mode=sys_.mode)
+    if was_sparse:
+        sys_ = as_sparse(sys_)
 
     solver = solvers.get(args.method)
     params, rho = solver.analyze(sys_)   # one spectral pass for both

@@ -40,6 +40,20 @@ request futures, SLO latency report):
     with asrv:
         tickets = [asrv.submit(fp, b) for b in stream]
 
+System modes (dense square / least-squares / block-sparse) flow through
+every entry point above; each solver declares ``supports`` and a request
+outside it raises ``CapabilityError`` at dispatch:
+
+    ls  = linsys.tall_gaussian(1000, 500, 4, noise=0.01)   # inconsistent LS
+    res = solvers.get("dgd").solve(ls, iters=2000)          # optimality res.
+    sp  = linsys.banded_system(768, 4, bandwidth=9)         # already sparse
+    res = solvers.get("apc").solve(sp, iters=300)           # sparse blockops
+
+Streaming perturbed right-hand sides through a server (warm-start gating):
+
+    rep = solvers.solve_stream(srv, [(fp, b0), (fp, b1), ...])
+    rep.warm_hit_rate   # 1.0 for warm_rhs_ok solvers after the first batch
+
 See ``api.Solver`` for the protocol, ``registry.register`` for adding a
 new method, ``mesh`` for the sharded backend, ``redundant`` for the
 r-redundant straggler-tolerant layer, ``store`` for the content-addressed
@@ -47,6 +61,7 @@ factor cache, ``serve`` for the linear-system request server, and
 ``pipeline`` for its async pipelined twin.
 """
 from .api import Solver, SolveResult, iters_to_tolerance  # noqa: F401
+from .capability import CapabilityError  # noqa: F401
 from .registry import available, get, register  # noqa: F401
 
 # Importing the implementation modules populates the registry.
@@ -54,5 +69,5 @@ from . import admm, gradient, projection  # noqa: F401, E402
 from . import mesh  # noqa: F401, E402  (the shard_map execution backend)
 from . import redundant  # noqa: F401, E402  (straggler-tolerant layer)
 from .store import FactorStore, fingerprint  # noqa: F401, E402
-from .serve import LinsysServer  # noqa: F401, E402
+from .serve import LinsysServer, StreamReport, solve_stream  # noqa: F401, E402
 from .pipeline import AsyncLinsysServer, Shed, Ticket  # noqa: F401, E402

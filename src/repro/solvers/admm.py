@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import blockops
 from repro.core.partition import BlockSystem
 
 from .api import Solver
@@ -22,7 +23,7 @@ from .registry import register
 
 
 class ADMMFactors(NamedTuple):
-    A: jnp.ndarray      # (m, p, n) row blocks
+    A: jnp.ndarray      # (m, p, n) row blocks, or a blockops.SparseBlocks
     chol: jnp.ndarray   # (m, p, p) Cholesky of G + xi I
 
 
@@ -36,23 +37,35 @@ class ADMMState(NamedTuple):
 class MADMMSolver(Solver):
     paper_name = "M-ADMM"
     param_names = ("xi",)
+    # the y_i == 0 simplification is only exact for consistent systems
+    # (paper Sec 4.4), so no least-squares mode; sparse blocks are fine
+    supports = frozenset({"square", "sparse"})
 
     def default_params(self, sys: BlockSystem):
         return {"xi": 1.0}
 
     def prepare(self, A, params):
         xi = params["xi"]
-        G = jnp.einsum("mpn,mqn->mpq", A, A)
-        eye = jnp.eye(A.shape[1], dtype=A.dtype)
+        G = blockops.bgram(A)
+        eye = jnp.eye(G.shape[1], dtype=G.dtype)
         return ADMMFactors(A=A, chol=jnp.linalg.cholesky(G + xi * eye))
 
     def init(self, factors, b, params):
-        return ADMMState(xbar=jnp.zeros(factors.A.shape[2], factors.A.dtype),
+        A = factors.A
+        return ADMMState(xbar=jnp.zeros(blockops.ncols(A),
+                                        blockops.block_dtype(A)),
                          t=jnp.zeros((), jnp.int32),
-                         Atb=jnp.einsum("mpn,mp->mn", factors.A, b))
+                         Atb=blockops.brmatvec(A, b))
 
     def step(self, factors, b, state, params, *, use_kernel=False):
         xi = params["xi"]
+        if blockops.is_sparse(factors.A):
+            v = state.Atb + xi * state.xbar[None, :]
+            Av = blockops.bmatvec_each(factors.A, v)
+            w = _cho_solve_workers(factors.chol, Av)
+            x_new = (v - blockops.brmatvec(factors.A, w)) / xi
+            return ADMMState(xbar=jnp.mean(x_new, axis=0), t=state.t + 1,
+                             Atb=state.Atb)
 
         def worker(Ai, Li, Atbi):
             v = Atbi + xi * state.xbar
@@ -74,17 +87,17 @@ class MADMMSolver(Solver):
         return ADMMState(xbar=P(ctx.n), t=P(), Atb=P(ctx.w, ctx.n))
 
     def mesh_prepare(self, A, params, ctx):
-        G = ctx.psum_model(jnp.einsum("mpn,mqn->mpq", A, A))
-        eye = jnp.eye(A.shape[1], dtype=A.dtype)
+        G = ctx.psum_model(blockops.bgram(A))
+        eye = jnp.eye(G.shape[1], dtype=G.dtype)
         return ADMMFactors(A=A,
                            chol=jnp.linalg.cholesky(G + params["xi"] * eye))
 
     def mesh_step(self, factors, b, state, params, ctx):
         xi = params["xi"]
         v = state.Atb + xi * state.xbar[None, :]          # (m_loc, n_loc)
-        Av = ctx.psum_model(jnp.einsum("mpn,mn->mp", factors.A, v))
+        Av = ctx.psum_model(blockops.bmatvec_each(factors.A, v))
         w = _cho_solve_workers(factors.chol, Av)
-        x_new = (v - jnp.einsum("mpn,mp->mn", factors.A, w)) / xi
+        x_new = (v - blockops.brmatvec(factors.A, w)) / xi
         m = ctx.workers_total(x_new.shape[0])
         xbar = ctx.psum_workers(jnp.sum(x_new, axis=0)) / m
         return ADMMState(xbar=xbar, t=state.t + 1, Atb=state.Atb)

@@ -46,9 +46,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import blockops
 from repro.core.partition import BlockSystem
+from repro.solvers.capability import (CapabilityError, check_capability,
+                                      resolve_use_kernel)
 
 log = logging.getLogger("repro.solvers")
+
+__all__ = ["Solver", "SolveResult", "CapabilityError", "iters_to_tolerance"]
+
+
+class _LocalPsum:
+    """Degenerate psum context for the local backend: a single shard, so
+    both reductions are identities.  Lets the LS-mode hooks be written
+    once against the MeshContext psum contract and run on both backends."""
+
+    @staticmethod
+    def psum_workers(x):
+        return x
+
+    @staticmethod
+    def psum_model(x):
+        return x
+
+
+LOCAL_PSUM = _LocalPsum()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +123,13 @@ class Solver:
     paper_name: str = ""           # display name used in the paper's tables
     supports_kernel: bool = False  # Pallas block-projection path available
     param_names: Tuple[str, ...] = ()
+    # System classes this solver handles; checked at dispatch against the
+    # system's (mode, structure) — see solvers/capability.py.  "square" =
+    # a consistent system with an exact solution; "least_squares" = the
+    # iteration converges to argmin ||Ax-b|| on inconsistent systems (and
+    # the LS hooks below are implemented); "sparse" = the step chain
+    # consumes blockops.SparseBlocks operands.
+    supports: frozenset = frozenset({"square"})
     # A prior state is a valid warm start for a DIFFERENT right-hand side:
     # the iteration re-reads b every step and the state caches nothing
     # RHS-dependent.  True for the gradient family and Cimmino; False for
@@ -175,6 +204,30 @@ class Solver:
         augmentation back into the cache slot exactly once.
         """
         return factors
+
+    # ----- least-squares mode hooks ---------------------------------------
+    # A solver declaring "least_squares" in ``supports`` implements BOTH
+    # hooks (lint rule R008 enforces this).  ``ls_moment`` is the solver's
+    # optimality map: the (weighted) normal-equation residual its fixed
+    # point zeroes — plain A^T(Ax-b) for the gradient family, the
+    # G^{-1}-weighted A^T G^{-1}(Ax-b) for Cimmino.  It is written against
+    # the psum context so the same code runs locally (identity psums) and
+    # inside shard_map; residual histories in LS mode report
+    # ||ls_moment(x)|| / ||ls_moment(0)||, the scale-free LS optimality
+    # measure, and ``iters_to_tol`` keys off it.
+
+    def ls_moment(self, factors: Any, A, b: jnp.ndarray, x: jnp.ndarray,
+                  params: Dict[str, float], ctx) -> jnp.ndarray:
+        """The (n,) optimality vector this solver drives to zero."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not support least-squares mode")
+
+    def ls_reference(self, sys: BlockSystem) -> jnp.ndarray:
+        """The (n,) solution this solver converges to on an inconsistent
+        system — the reference ``errors`` compares against when
+        ``sys.x_true`` is absent."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not support least-squares mode")
 
     # ----- mesh-backend hooks (see solvers/mesh.py) ------------------------
     # The mesh backend runs these INSIDE shard_map: every array argument is
@@ -361,6 +414,8 @@ class Solver:
         ``solvers/redundant.py``.
         """
         resume = warm_state is not None
+        check_capability(self, sys, context="solve")
+        use_kernel = resolve_use_kernel(self, sys, use_kernel)
         if redundancy != 1 or alive_schedule is not None:
             use_mesh = self._dispatch_mesh(backend, use_kernel, mesh)
             if use_kernel:
@@ -402,19 +457,41 @@ class Solver:
                         "re-running the full prepare for %r (pass store= "
                         "to count and amortize this as a cache miss)",
                         self.name)
-                factors = self.prepare(sys.A_blocks, prm)
+                factors = self.prepare(sys.A_op, prm)
         if use_kernel:
             factors = self.kernel_factors(factors)
         state = (self.init(factors, sys.b_blocks, prm)
                  if warm_state is None else warm_state)
         step = lambda f, b, s: self.step(f, b, s, prm, use_kernel=use_kernel)
+        residual_fn = self._ls_residual_fn(sys, factors, prm)
+        xt = sys.x_true
+        if xt is None and sys.mode == "least_squares":
+            xt = jnp.asarray(self.ls_reference(sys))
         state, res, err = _history_scan(step, self.extract, factors,
-                                        sys.b_blocks, state, sys.A_blocks,
-                                        sys.x_true, iters)
+                                        sys.b_blocks, state, sys.A_op,
+                                        xt, iters, residual_fn=residual_fn)
         return SolveResult(
             name=self.name, x=self.extract(state), state=state, residuals=res,
-            errors=err if sys.x_true is not None else None, params=prm,
+            errors=err if xt is not None else None, params=prm,
             iters_to_tol=iters_to_tolerance(res, tol), tol=tol)
+
+    def _ls_residual_fn(self, sys: BlockSystem, factors: Any,
+                        prm: Dict[str, float]):
+        """The LS-mode residual closure for the local scan drivers, or
+        None in square mode (the plain ``||Ax-b||/||b||`` path)."""
+        if sys.mode != "least_squares":
+            return None
+        A_op, ctx = sys.A_op, LOCAL_PSUM
+        zero = jnp.zeros(sys.n, sys.b_blocks.dtype)
+
+        def optim(b, x):
+            mom = self.ls_moment(factors, A_op, b, x, prm, ctx)
+            return jnp.sqrt(jnp.sum(mom * mom))
+
+        def residual_fn(b, x):
+            return optim(b, x) / optim(b, zero)
+
+        return residual_fn
 
     def solve_many(self, sys: BlockSystem, B, *, iters: int = 1000,
                    tol: float = 1e-6, use_kernel: bool = False,
@@ -438,6 +515,8 @@ class Solver:
                 "redundant execution is not supported by solve_many; run "
                 "solve(redundancy=..., alive_schedule=...) per right-hand "
                 "side, or batch without redundancy")
+        check_capability(self, sys, context="solve_many")
+        use_kernel = resolve_use_kernel(self, sys, use_kernel)
         if self._dispatch_mesh(backend, use_kernel, mesh):
             from . import mesh as mesh_backend
             return mesh_backend.solve_many_mesh(
@@ -459,14 +538,15 @@ class Solver:
                 factors = store.factors(self, sys, use_kernel=use_kernel,
                                         **prm)
             else:
-                factors = self.prepare(sys.A_blocks, prm)  # once, shared
+                factors = self.prepare(sys.A_op, prm)  # once, shared
         if use_kernel:
             factors = self.kernel_factors(factors)
         states = jax.vmap(lambda b: self.init(factors, b, prm))(Bb)
         step_many = lambda f, bb, sts: self.step_many(
             f, bb, sts, prm, use_kernel=use_kernel)
-        states, res = _history_scan_many(step_many, self.extract, factors,
-                                         Bb, states, sys.A_blocks, iters)
+        states, res = _history_scan_many(
+            step_many, self.extract, factors, Bb, states, sys.A_op, iters,
+            residual_fn=self._ls_residual_fn(sys, factors, prm))
         X = jax.vmap(self.extract)(states)
         return SolveResult(
             name=self.name, x=X, state=states, residuals=res, errors=None,
@@ -478,8 +558,15 @@ class Solver:
 # ---------------------------------------------------------------------------
 
 
-def _history_scan(step, extract, factors, b, state, A, x_true, iters: int):
-    """Scan ``step`` for ``iters`` iterations recording residual/error."""
+def _history_scan(step, extract, factors, b, state, A, x_true, iters: int,
+                  residual_fn=None):
+    """Scan ``step`` for ``iters`` iterations recording residual/error.
+
+    ``A`` is either the dense (m, p, n) stack or a ``SparseBlocks``
+    operand; the dense matvec is the identical einsum the driver always
+    used, so dense histories are bit-exact.  ``residual_fn(b, x)``
+    (LS mode) replaces the plain ``||Ax-b||/||b||`` history.
+    """
     b_norm = jnp.sqrt(jnp.sum(b * b))
     xt = x_true
     xt_norm = None if xt is None else jnp.linalg.norm(xt)
@@ -487,8 +574,11 @@ def _history_scan(step, extract, factors, b, state, A, x_true, iters: int):
     def body(state, _):
         state = step(factors, b, state)
         x = extract(state)
-        r = jnp.einsum("mpn,n->mp", A, x) - b
-        res = jnp.sqrt(jnp.sum(r * r)) / b_norm
+        if residual_fn is None:
+            r = blockops.bmatvec(A, x) - b
+            res = jnp.sqrt(jnp.sum(r * r)) / b_norm
+        else:
+            res = residual_fn(b, x)
         err = (jnp.linalg.norm(x - xt) / xt_norm) if xt is not None else res
         return state, (res, err)
 
@@ -497,20 +587,24 @@ def _history_scan(step, extract, factors, b, state, A, x_true, iters: int):
 
 
 def _history_scan_many(step_many, extract, factors, Bb, states, A,
-                       iters: int):
+                       iters: int, residual_fn=None):
     """Batched variant: states/Bb carry a leading (k,) RHS axis.
 
     ``step_many`` is the solver's batched iteration — a vmap of ``step``
     by default, the fused multi-RHS kernel path for the projection family
-    under ``use_kernel=True``.
+    under ``use_kernel=True``.  ``residual_fn(b, x)`` is the per-RHS LS
+    residual; it is vmapped over the batch.
     """
     b_norms = jnp.sqrt(jnp.sum(Bb * Bb, axis=(1, 2)))
 
     def body(states, _):
         states = step_many(factors, Bb, states)
         X = jax.vmap(extract)(states)                      # (k, n)
-        r = jnp.einsum("mpn,kn->kmp", A, X) - Bb
-        res = jnp.sqrt(jnp.sum(r * r, axis=(1, 2))) / b_norms
+        if residual_fn is None:
+            r = blockops.bmatvec_many(A, X) - Bb
+            res = jnp.sqrt(jnp.sum(r * r, axis=(1, 2))) / b_norms
+        else:
+            res = jax.vmap(residual_fn)(Bb, X)
         return states, res
 
     states, res = jax.lax.scan(body, states, None, length=iters)

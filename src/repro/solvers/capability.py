@@ -1,0 +1,70 @@
+"""Per-solver capability declarations, checked at dispatch.
+
+Every solver declares the system classes it supports::
+
+    supports = frozenset({"square", "least_squares", "sparse"})
+
+``solve``/``solve_many``/``LinsysServer.register`` call
+:func:`check_capability` before any work happens, so a square-only
+solver handed a least-squares system raises a :class:`CapabilityError`
+naming the solver and the mode instead of silently diverging — the
+failure the paper's consistency assumption would otherwise hide.
+
+``use_kernel=True`` on a sparse system is a *fallback*, not an error:
+the fused Pallas engine has no sparse layout yet (ROADMAP item 2), so
+:func:`resolve_use_kernel` downgrades the flag LOUDLY (a
+``RuntimeWarning`` plus a log line) and the unfused sparse path runs.
+"""
+from __future__ import annotations
+
+import logging
+import warnings
+
+log = logging.getLogger("repro.solvers")
+
+CAPABILITIES = ("square", "least_squares", "sparse")
+
+
+class CapabilityError(ValueError):
+    """A solver was dispatched on a system class it does not support."""
+
+
+def required_capabilities(sys) -> set:
+    """The capability set a system demands of its solver."""
+    need = {sys.mode}
+    if sys.is_sparse:
+        need.add("sparse")
+    return need
+
+
+def check_capability(solver, sys, *, context: str = "solve") -> None:
+    """Raise :class:`CapabilityError` unless ``solver`` declares every
+    capability ``sys`` requires (its mode, plus sparsity)."""
+    missing = required_capabilities(sys) - set(solver.supports)
+    if missing:
+        raise CapabilityError(
+            f"solver {solver.name!r} does not support "
+            f"{sorted(missing)} systems: {context} was called with a "
+            f"mode={sys.mode!r}, structure={sys.structure!r} system but "
+            f"{solver.name!r} declares supports="
+            f"{sorted(solver.supports)}. Pick an LS/sparse-capable solver "
+            f"(e.g. 'cimmino' or the gradient family) or densify/square "
+            f"the system.")
+
+
+def resolve_use_kernel(solver, sys, use_kernel: bool) -> bool:
+    """Downgrade ``use_kernel=True`` on sparse systems — loudly.
+
+    The fused Pallas engine streams dense (p, n) tiles; a sparse layout
+    is recorded future work (ROADMAP item 2).  Returns the flag to
+    actually use.
+    """
+    if use_kernel and sys.is_sparse:
+        msg = (f"use_kernel=True on a sparse system: solver "
+               f"{solver.name!r} has no sparse Pallas kernel yet "
+               f"(ROADMAP item 2); falling back to the unfused sparse "
+               f"path")
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+        log.warning(msg)
+        return False
+    return use_kernel

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import blockops
 from repro.core import spectral
 from repro.core.partition import BlockSystem
 from repro.core.precond import _inv_sqrt_psd
@@ -24,7 +25,7 @@ from .registry import register
 
 
 class GradFactors(NamedTuple):
-    A: jnp.ndarray      # (m, p, n) row blocks
+    A: jnp.ndarray      # (m, p, n) row blocks, or a blockops.SparseBlocks
 
 
 class PrecondFactors(NamedTuple):
@@ -34,7 +35,7 @@ class PrecondFactors(NamedTuple):
 
 def _grad(A, b, x):
     """Full gradient sum_i A_i^T (A_i x - b_i) of (1/2)||Ax-b||^2."""
-    return jnp.einsum("mpn,mp->n", A, jnp.einsum("mpn,n->mp", A, x) - b)
+    return blockops.brmatvec_sum(A, blockops.bmatvec(A, x) - b)
 
 
 class _GradientSolver(Solver):
@@ -49,9 +50,15 @@ class _GradientSolver(Solver):
     The iteration re-reads b every step, so a prior state warm-starts a
     PERTURBED right-hand side too (``warm_rhs_ok``) — except P-DHBM,
     whose state caches the transformed RHS S b (overridden below).
+
+    The family is gradient descent on (1/2)||Ax-b||^2, whose minimizer IS
+    the least-squares solution — inconsistent systems are first-class
+    (``supports`` includes "least_squares"), with the plain normal
+    equations as the optimality moment.
     """
 
     warm_rhs_ok = True
+    supports = frozenset({"square", "least_squares", "sparse"})
 
     def prepare(self, A, params):
         return GradFactors(A=A)
@@ -75,10 +82,22 @@ class _GradientSolver(Solver):
 
     def _zeros(self, factors):
         A = factors.A if isinstance(factors, GradFactors) else factors.C
-        return jnp.zeros(A.shape[2], A.dtype)
+        return jnp.zeros(blockops.ncols(A), blockops.block_dtype(A))
 
     def extract(self, state):
         return state.x
+
+    # ----- least-squares mode ---------------------------------------------
+    def ls_moment(self, factors, A, b, x, params, ctx):
+        """Normal-equations optimality moment A^T(Ax - b) (psum'd)."""
+        r = ctx.psum_model(blockops.bmatvec(A, x)) - b
+        return ctx.psum_workers(blockops.brmatvec_sum(A, r))
+
+    def ls_reference(self, sys: BlockSystem) -> jnp.ndarray:
+        A, b = sys.dense()
+        x, *_ = np.linalg.lstsq(np.asarray(A, np.float64),
+                                np.asarray(b, np.float64), rcond=None)
+        return jnp.asarray(x, sys.b_blocks.dtype)
 
     # ----- mesh backend ---------------------------------------------------
     def mesh_factor_specs(self, ctx):
@@ -90,8 +109,8 @@ class _GradientSolver(Solver):
     def mesh_step(self, factors, b, state, params, ctx):
         A = self._blocks(factors)
         d = self._rhs(factors, b, state)
-        Ax = ctx.psum_model(jnp.einsum("mpn,n->mp", A, state.x))
-        g = ctx.psum_workers(jnp.einsum("mpn,mp->n", A, Ax - d))
+        Ax = ctx.psum_model(blockops.bmatvec(A, state.x))
+        g = ctx.psum_workers(blockops.brmatvec_sum(A, Ax - d))
         return self._update(state, g, params)
 
 
@@ -218,6 +237,9 @@ class PDHBMSolver(DHBMSolver):
     paper_name = "P-DHBM"
     param_names = ("alpha", "beta")
     warm_rhs_ok = False     # state caches S b — stale under a new RHS
+    # the numpy eigensolve in prepare() and the cached S b both assume the
+    # dense square setting of Sec 6 — keep the original contract
+    supports = frozenset({"square"})
 
     def analyze(self, sys: BlockSystem):
         X = spectral.x_matrix(sys)

@@ -43,9 +43,11 @@ try:  # jax.shard_map is the stable spelling on newer releases
 except AttributeError:  # pragma: no cover - depends on installed jax
     from jax.experimental.shard_map import shard_map
 
+from repro.core import blockops
 from repro.core.partition import BlockSystem
 
 from .api import SolveResult, iters_to_tolerance
+from .capability import check_capability, resolve_use_kernel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +108,11 @@ def make_context(mesh: Mesh, sys: BlockSystem, *,
                          f"worker axes")
     if model_axis is not None and model_axis not in mesh.axis_names:
         model_axis = None
+    if sys.is_sparse:
+        # sparse column indices address the GLOBAL n axis, so sparse
+        # systems shard over worker axes only (blocks are already
+        # column-compressed; a model shard would re-split the support)
+        model_axis = None
     ctx = MeshContext(mesh=mesh, worker_axes=worker_axes,
                       model_axis=model_axis)
     wsize = ctx.workers_total(1)
@@ -121,8 +128,25 @@ def make_context(mesh: Mesh, sys: BlockSystem, *,
 
 def residual_shard(A, b, x, b_norm, ctx: MeshContext):
     """Relative residual ||Ax-b||/||b|| from local shards (replicated out)."""
-    r = ctx.psum_model(jnp.einsum("mpn,n->mp", A, x)) - b
+    r = ctx.psum_model(blockops.bmatvec(A, x)) - b
     return jnp.sqrt(ctx.psum_workers(jnp.sum(r * r))) / b_norm
+
+
+def operand_specs(sys: BlockSystem, ctx: MeshContext):
+    """PartitionSpec (pytree) for ``sys.A_op``: a single spec for the dense
+    stack, a matching ``SparseBlocks`` of specs for sparse operands."""
+    if sys.is_sparse:
+        return blockops.SparseBlocks(vals=P(ctx.w, None, None),
+                                     cols=P(ctx.w, None), span=P(None))
+    return P(ctx.w, None, ctx.n)
+
+
+def _patch_factor_specs(fspecs, a_spec):
+    """Swap a sparse operand spec into a factor pytree's ``A`` field."""
+    if blockops.is_sparse(a_spec) and hasattr(fspecs, "_replace") \
+            and "A" in getattr(fspecs, "_fields", ()):
+        return fspecs._replace(A=a_spec)
+    return fspecs
 
 
 def _default_mesh(workers: int) -> Mesh:
@@ -178,9 +202,10 @@ def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors,
     re-run the augmentation.
     """
     mesh = ctx.mesh
-    A_spec, b_spec = P(ctx.w, None, ctx.n), P(ctx.w, None)
-    fspecs = _factor_specs(solver, ctx, use_kernel)
-    A = jax.device_put(sys.A_blocks, NamedSharding(mesh, A_spec))
+    A_spec, b_spec = operand_specs(sys, ctx), P(ctx.w, None)
+    fspecs = _patch_factor_specs(_factor_specs(solver, ctx, use_kernel),
+                                 A_spec)
+    A = _put_tree(sys.A_op, A_spec, mesh)
     b = jax.device_put(sys.b_blocks, NamedSharding(mesh, b_spec))
     if factors is None and store is not None:
         factors = store.lookup(solver, sys, use_kernel=use_kernel, **prm)
@@ -223,6 +248,8 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                   store: Any = None, use_kernel: bool = False,
                   **params) -> CompiledSolve:
     """Placement + on-mesh setup + the jitted scan, without executing it."""
+    check_capability(solver, sys, context="solve(mesh)")
+    use_kernel = resolve_use_kernel(solver, sys, use_kernel)
     if mesh is None:
         mesh = _default_mesh(sys.m)
     ctx = make_context(mesh, sys, worker_axes=worker_axes,
@@ -242,6 +269,8 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
         state = _put_tree(warm_state, sspecs, mesh)
 
     xt = sys.x_true
+    if xt is None and sys.mode == "least_squares":
+        xt = solver.ls_reference(sys)       # error channel vs the LS optimum
     args = (A, b, factors, state)
     in_specs = (A_spec, b_spec, fspecs, sspecs)
     if xt is not None:
@@ -253,6 +282,7 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                if use_kernel
                else (lambda f, b_, st: solver.mesh_step(f, b_, st, prm,
                                                         ctx)))
+    ls_mode = sys.mode == "least_squares"
 
     def run_body(A_, b_, f_, s_, *rest):
         b_norm = jnp.sqrt(ctx.psum_workers(jnp.sum(b_ * b_)))
@@ -260,10 +290,22 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
         xt_norm = (jnp.sqrt(ctx.psum_model(jnp.sum(xt_ * xt_)))
                    if xt_ is not None else None)
 
+        if ls_mode:
+            # LS residual channel: ‖AᵀW(Ax−b)‖ relative to x = 0 — the
+            # optimality moment of the solver's own LS objective
+            def ls_norm(x):
+                mom = solver.ls_moment(f_, A_, b_, x, prm, ctx)
+                return jnp.sqrt(ctx.psum_model(jnp.sum(mom * mom)))
+
+            ls_denom = ls_norm(jnp.zeros_like(solver.extract(s_)))
+
         def body(st, _):
             st = step_fn(f_, b_, st)
             x = solver.extract(st)
-            res = residual_shard(A_, b_, x, b_norm, ctx)
+            if ls_mode:
+                res = ls_norm(x) / ls_denom
+            else:
+                res = residual_shard(A_, b_, x, b_norm, ctx)
             if xt_ is not None:
                 dx = x - xt_
                 err = jnp.sqrt(ctx.psum_model(jnp.sum(dx * dx))) / xt_norm
@@ -331,16 +373,23 @@ class BatchedRunner(NamedTuple):
 
 
 def batched_runner(solver, ctx: MeshContext, prm, iters: int,
-                   use_kernel: bool = False) -> BatchedRunner:
+                   use_kernel: bool = False, *, a_spec: Any = None,
+                   ls_mode: bool = False) -> BatchedRunner:
     """Build the jitted multi-RHS init/run pair shared by ``solve_many_mesh``
     and the serving layer.  Nothing system-specific is baked in beyond the
     params and the mesh context: A / b / factors / states are arguments, so
     one runner serves every same-shape system.  ``use_kernel=True`` routes
     the batched step through ``mesh_step_many``'s fused multi-RHS Pallas
-    path (projection family)."""
+    path (projection family).  ``a_spec`` overrides the operand spec (a
+    ``SparseBlocks`` spec pytree for sparse systems, see ``operand_specs``);
+    ``ls_mode`` switches the residual channel to the per-RHS LS optimality
+    moment."""
     mesh = ctx.mesh
-    A_spec, Bb_spec = P(ctx.w, None, ctx.n), P(None, ctx.w, None)
-    fspecs = _factor_specs(solver, ctx, use_kernel)
+    if a_spec is None:
+        a_spec = P(ctx.w, None, ctx.n)
+    A_spec, Bb_spec = a_spec, P(None, ctx.w, None)
+    fspecs = _patch_factor_specs(_factor_specs(solver, ctx, use_kernel),
+                                 A_spec)
     sspecs = _batched_specs(solver.mesh_state_specs(ctx))
 
     init_fn = jax.jit(shard_map(
@@ -355,12 +404,23 @@ def batched_runner(solver, ctx: MeshContext, prm, iters: int,
             return solver.mesh_step_many(f_, Bb__, sts, prm, ctx,
                                          use_kernel=use_kernel)
 
+        if ls_mode:
+            def ls_norm(bb, x):
+                mom = solver.ls_moment(f_, A_, bb, x, prm, ctx)
+                return jnp.sqrt(ctx.psum_model(jnp.sum(mom * mom)))
+
+            X0 = jax.vmap(solver.extract)(s_)
+            ls_denoms = jax.vmap(ls_norm)(Bb_, jnp.zeros_like(X0))
+
         def body(sts, _):
             sts = vstep(Bb_, sts)
             X = jax.vmap(solver.extract)(sts)                  # (k, n_loc)
-            r = ctx.psum_model(jnp.einsum("mpn,kn->kmp", A_, X)) - Bb_
-            res = jnp.sqrt(
-                ctx.psum_workers(jnp.sum(r * r, axis=(1, 2)))) / b_norms
+            if ls_mode:
+                res = jax.vmap(ls_norm)(Bb_, X) / ls_denoms
+            else:
+                r = ctx.psum_model(blockops.bmatvec_many(A_, X)) - Bb_
+                res = jnp.sqrt(
+                    ctx.psum_workers(jnp.sum(r * r, axis=(1, 2)))) / b_norms
             return sts, res
 
         s_, res = jax.lax.scan(body, s_, None, length=iters)
@@ -385,6 +445,8 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
     """Sharded multi-RHS solve: one on-mesh factorization, k right-hand
     sides batched inside the shard_map body (batch axis replicated) — the
     fused multi-RHS kernels under ``use_kernel=True``."""
+    check_capability(solver, sys, context="solve_many(mesh)")
+    use_kernel = resolve_use_kernel(solver, sys, use_kernel)
     if mesh is None:
         mesh = _default_mesh(sys.m)
     ctx = make_context(mesh, sys, worker_axes=worker_axes,
@@ -398,7 +460,9 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
     prm = solver.resolve_params(sys, **params)
     A, _, _, _, _, factors = _place(solver, sys, ctx, prm, factors,
                                     store=store, use_kernel=use_kernel)
-    runner = batched_runner(solver, ctx, prm, iters, use_kernel=use_kernel)
+    runner = batched_runner(solver, ctx, prm, iters, use_kernel=use_kernel,
+                            a_spec=operand_specs(sys, ctx),
+                            ls_mode=sys.mode == "least_squares")
 
     Bb = jax.device_put(B.reshape(k, sys.m, sys.p),
                         NamedSharding(mesh, runner.Bb_spec))

@@ -275,7 +275,7 @@ class AsyncLinsysServer(LinsysServer):
         placement cache and the executor cache need no extra locking)."""
         ent = self._systems[fp]
         factors = self.store.factors(self.solver, ent.sys, key=fp,
-                                     use_kernel=self.use_kernel, **ent.prm)
+                                     use_kernel=ent.use_kernel, **ent.prm)
         ex = self._executor(ent)
         if ent.placed_src is not factors:        # first batch/post-eviction
             ent.A_placed, ent.factors_placed = ex.place_system(ent.sys,

@@ -11,8 +11,10 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import blockops
 from repro.core import spectral
 from repro.core import apc as apc_core
 from repro.core.apc import APCState, _gram_chol, _gram_solve
@@ -24,20 +26,30 @@ from .registry import register
 
 class ProjFactors(NamedTuple):
     """b-independent per-worker factors (leading axis = worker)."""
-    A: jnp.ndarray      # (m, p, n) row blocks
+    A: jnp.ndarray      # (m, p, n) row blocks, or a blockops.SparseBlocks
     chol: jnp.ndarray   # (m, p, p) Cholesky of Gram A_i A_i^T
     B: Optional[jnp.ndarray] = None  # (m, n, p) pinv factors A^T G^{-1}
                                      # (kernel path only, see kernel_factors)
 
 
-def _proj_prepare(A: jnp.ndarray, jitter: float) -> ProjFactors:
+def _proj_prepare(A, jitter: float) -> ProjFactors:
+    if blockops.is_sparse(A):
+        # support-compressed Gram — exact (padded columns carry zeros)
+        G = blockops.bgram(A)
+        if jitter:
+            p = G.shape[-1]
+            tr = jnp.trace(G, axis1=-2, axis2=-1)[:, None, None]
+            G = G + jitter * tr / p * jnp.eye(p, dtype=G.dtype)
+        return ProjFactors(A=A, chol=jnp.linalg.cholesky(G))
     chol = jax.vmap(lambda Ai: _gram_chol(Ai, jitter))(A)
     return ProjFactors(A=A, chol=chol)
 
 
 def _with_pinv(factors: ProjFactors) -> ProjFactors:
     """Precompute B_i = A_i^T G_i^{-1} once (iteration-invariant)."""
-    if factors.B is not None:
+    if factors.B is not None or blockops.is_sparse(factors.A):
+        # sparse operands never reach the kernel path (capability layer
+        # downgrades use_kernel loudly), so no pinv augmentation either
         return factors
     B = jax.vmap(lambda Ai, Li: jax.scipy.linalg.cho_solve((Li, True), Ai).T)(
         factors.A, factors.chol)
@@ -46,6 +58,9 @@ def _with_pinv(factors: ProjFactors) -> ProjFactors:
 
 def _min_norm_solutions(factors: ProjFactors, b: jnp.ndarray) -> jnp.ndarray:
     """x0_i = A_i^T (A_i A_i^T)^{-1} b_i — the min-norm local solutions."""
+    if blockops.is_sparse(factors.A):
+        return blockops.brmatvec(factors.A,
+                                 _cho_solve_workers(factors.chol, b))
     return jax.vmap(lambda Ai, Li, bi: Ai.T @ _gram_solve(Li, bi))(
         factors.A, factors.chol, b)
 
@@ -63,7 +78,7 @@ def _cho_solve_replicas(chol, u):
 
 def _mesh_gram_chol(A, jitter: float, ctx):
     """Cholesky of the full Gram A_i A_i^T from column-sharded blocks."""
-    G = ctx.psum_model(jnp.einsum("mpn,mqn->mpq", A, A))
+    G = ctx.psum_model(blockops.bgram(A))
     if jitter:
         p = G.shape[-1]
         tr = jnp.trace(G, axis1=-2, axis2=-1)[:, None, None]
@@ -78,6 +93,9 @@ class APCSolver(Solver):
     paper_name = "APC"
     supports_kernel = True
     param_names = ("gamma", "eta")
+    # the paper's convergence theory (Theorem 1) assumes an exact solution
+    # exists, so APC keeps its square-only contract; sparse blocks are fine
+    supports = frozenset({"square", "sparse"})
 
     def default_params(self, sys: BlockSystem):
         return self.analyze(sys)[0]
@@ -103,6 +121,17 @@ class APCSolver(Solver):
 
     def step(self, factors, b, state, params, *, use_kernel=False):
         gamma, eta = params["gamma"], params["eta"]
+        if blockops.is_sparse(factors.A):
+            # mask-aware products on the column support (same update as the
+            # unfused mesh formulation below)
+            d = state.xbar[None, :] - state.x
+            u = blockops.bmatvec_each(factors.A, d)
+            w = _cho_solve_workers(factors.chol, u)
+            proj = d - blockops.brmatvec(factors.A, w)
+            x_new = state.x + gamma * proj
+            xbar_new = (eta * jnp.mean(x_new, axis=0)
+                        + (1.0 - eta) * state.xbar)
+            return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
         if use_kernel and factors.B is not None:
             from repro.kernels import ops as kops
             # the engine autotune includes "unfused" as a candidate: when
@@ -177,7 +206,7 @@ class APCSolver(Solver):
 
     def mesh_init(self, factors, b, params, ctx):
         w = _cho_solve_workers(factors.chol, b)
-        x0 = jnp.einsum("mpn,mp->mn", factors.A, w)   # min-norm local sols
+        x0 = blockops.brmatvec(factors.A, w)          # min-norm local sols
         m = ctx.workers_total(x0.shape[0])
         xbar0 = ctx.psum_workers(jnp.sum(x0, axis=0)) / m
         return APCState(x=x0, xbar=xbar0, t=jnp.zeros((), jnp.int32))
@@ -196,9 +225,9 @@ class APCSolver(Solver):
                     factors.B, state.x, u)            # Eq. 2a, fused
         else:
             d = state.xbar[None, :] - state.x             # (m_loc, n_loc)
-            u = ctx.psum_model(jnp.einsum("mpn,mn->mp", factors.A, d))
+            u = ctx.psum_model(blockops.bmatvec_each(factors.A, d))
             w = _cho_solve_workers(factors.chol, u)       # G^{-1} A_i d
-            proj = d - jnp.einsum("mpn,mp->mn", factors.A, w)
+            proj = d - blockops.brmatvec(factors.A, w)
             x_new = state.x + gamma * proj                # Eq. 2a
         m = ctx.workers_total(x_new.shape[0])
         s = ctx.psum_workers(jnp.sum(x_new, axis=0))      # Eq. 2b psum
@@ -296,6 +325,10 @@ class CimminoSolver(Solver):
     # state is the master estimate alone and b enters every step, so a
     # prior state warm-starts perturbed right-hand sides too
     warm_rhs_ok = True
+    # the fixed point Σ A_iᵀG_i⁻¹(b_i − A_i x̄) = 0 is the G⁻¹-weighted
+    # least-squares optimum, well-defined for inconsistent systems too
+    # (each block must stay row-independent: p ≤ n per block)
+    supports = frozenset({"square", "least_squares", "sparse"})
 
     def default_params(self, sys: BlockSystem):
         return self.analyze(sys)[0]
@@ -315,12 +348,18 @@ class CimminoSolver(Solver):
         return _with_pinv(factors)
 
     def init(self, factors, b, params):
-        n = factors.A.shape[2]
-        return CimminoState(xbar=jnp.zeros(n, factors.A.dtype),
+        n = blockops.ncols(factors.A)
+        return CimminoState(xbar=jnp.zeros(n, blockops.block_dtype(factors.A)),
                             t=jnp.zeros((), jnp.int32))
 
     def step(self, factors, b, state, params, *, use_kernel=False):
         nu = params["nu"]
+        if blockops.is_sparse(factors.A):
+            u = blockops.bmatvec(factors.A, state.xbar)
+            w = _cho_solve_workers(factors.chol, b - u)
+            r = blockops.brmatvec(factors.A, w)       # row projections
+            return CimminoState(xbar=state.xbar + nu * jnp.sum(r, axis=0),
+                                t=state.t + 1)
         kern = use_kernel and factors.B is not None
         if kern:
             # single-RHS cimmino is the measured corner where the fused
@@ -400,13 +439,36 @@ class CimminoSolver(Solver):
                 lambda Ai: kops.cimmino_gather(Ai, state.xbar))(factors.A))
             r = jax.vmap(kops.cimmino_scatter)(factors.B, b - u)
         else:
-            u = ctx.psum_model(jnp.einsum("mpn,n->mp", factors.A,
-                                          state.xbar))
+            u = ctx.psum_model(blockops.bmatvec(factors.A, state.xbar))
             w = _cho_solve_workers(factors.chol, b - u)   # G^{-1}(b - A xbar)
-            r = jnp.einsum("mpn,mp->mn", factors.A, w)    # row projections
+            r = blockops.brmatvec(factors.A, w)           # row projections
         s = ctx.psum_workers(jnp.sum(r, axis=0))
         return CimminoState(xbar=state.xbar + params["nu"] * s,
                             t=state.t + 1)
+
+    # ----- least-squares mode ---------------------------------------------
+    # The Cimmino fixed point minimizes Σᵢ ‖L_i^{-1}(A_i x − b_i)‖² — the
+    # Gram-whitened least-squares problem.  ``ls_moment`` is exactly the
+    # update direction (zero at the optimum); ``ls_reference`` solves the
+    # whitened system directly for error tracking.
+    def ls_moment(self, factors, A, b, x, params, ctx):
+        u = ctx.psum_model(blockops.bmatvec(A, x))
+        w = _cho_solve_workers(factors.chol, b - u)
+        r = blockops.brmatvec(A, w)
+        return ctx.psum_workers(jnp.sum(r, axis=0))
+
+    def ls_reference(self, sys: BlockSystem) -> jnp.ndarray:
+        A = np.asarray(sys.A_blocks, dtype=np.float64)
+        b = np.asarray(sys.b_blocks, dtype=np.float64)
+        rows = []
+        rhs = []
+        for Ai, bi in zip(A, b):
+            L = np.linalg.cholesky(Ai @ Ai.T)
+            rows.append(np.linalg.solve(L, Ai))       # L_i^{-1} A_i
+            rhs.append(np.linalg.solve(L, bi))        # L_i^{-1} b_i
+        x, *_ = np.linalg.lstsq(np.concatenate(rows), np.concatenate(rhs),
+                                rcond=None)
+        return jnp.asarray(x, dtype=sys.b_blocks.dtype)
 
     def mesh_step_many(self, factors, Bb, states, params, ctx, *,
                        use_kernel=False):

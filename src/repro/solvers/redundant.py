@@ -173,6 +173,13 @@ def _check_solver(solver, sys: BlockSystem, r: int):
             f"solver {solver.name!r} does not support redundant execution "
             "(projection family only: the coded masked mean needs the "
             "block-local update structure of apc/consensus/cimmino)")
+    if sys.is_sparse or sys.mode != "square":
+        raise ValueError(
+            f"redundant execution is dense-square only: got a "
+            f"mode={sys.mode!r}, structure={sys.structure!r} system — the "
+            f"replicated (m, r, p, n) factor layout has no sparse variant "
+            f"and the straggler theory assumes a consistent system; "
+            f"densify()/drop redundancy=r to proceed")
     if not (1 <= r <= sys.m):
         raise ValueError(f"redundancy r={r} must be in [1, m={sys.m}]")
 

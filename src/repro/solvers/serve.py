@@ -46,7 +46,8 @@ from jax.sharding import NamedSharding
 
 from repro.core.partition import BlockSystem
 
-from .api import _history_scan_many, iters_to_tolerance
+from .api import LOCAL_PSUM, _history_scan_many, iters_to_tolerance
+from .capability import check_capability, resolve_use_kernel
 from .store import FactorStore
 
 
@@ -102,6 +103,8 @@ class _System:
     prm: Dict[str, float]
     dtype: Any                      # A's dtype, read once at register()
     executor_key: Tuple             # compile-once cache key, built once
+    use_kernel: bool = False        # per-system resolution (sparse systems
+                                    # downgrade the server-level flag)
     A_placed: Any = None            # backend-placed A blocks
     factors_placed: Any = None      # backend-placed factors
     placed_src: Any = None          # host factors the placement came from
@@ -113,14 +116,28 @@ class _LocalExecutor:
     """Compile-once single-host executor: jitted init+scan over a padded
     (batch, m, p) RHS block.  One instance serves every system that shares
     its (shapes, params) key.  ``use_kernel=True`` routes the batched step
-    through the fused multi-RHS Pallas kernels (``Solver.step_many``)."""
+    through the fused multi-RHS Pallas kernels (``Solver.step_many``).
+    ``ls_mode=True`` (least-squares systems) reports the LS optimality
+    moment instead of the raw relative residual."""
 
-    def __init__(self, solver, prm, iters: int, use_kernel: bool = False):
+    def __init__(self, solver, prm, iters: int, use_kernel: bool = False,
+                 ls_mode: bool = False):
+        def _residual_fn(A, factors):
+            if not ls_mode:
+                return None
+
+            def optim(b, x):
+                mom = solver.ls_moment(factors, A, b, x, prm, LOCAL_PSUM)
+                return jnp.sqrt(jnp.sum(mom * mom))
+
+            return lambda b, x: optim(b, x) / optim(b, jnp.zeros_like(x))
+
         def _run(A, factors, Bb, states):
             step_many = lambda f, bb, sts: solver.step_many(
                 f, bb, sts, prm, use_kernel=use_kernel)
-            states, res = _history_scan_many(step_many, solver.extract,
-                                             factors, Bb, states, A, iters)
+            states, res = _history_scan_many(
+                step_many, solver.extract, factors, Bb, states, A, iters,
+                residual_fn=_residual_fn(A, factors))
             return states, jax.vmap(solver.extract)(states), res
 
         def _cold(A, factors, Bb):
@@ -131,7 +148,7 @@ class _LocalExecutor:
         self._warm = jax.jit(_run)
 
     def place_system(self, sys: BlockSystem, factors):
-        return sys.A_blocks, factors
+        return sys.A_op, factors
 
     def place_B(self, Bb: np.ndarray):
         # an explicit device_put so the host->device transfer happens on
@@ -162,14 +179,14 @@ class _MeshExecutor:
             else mesh_backend._default_mesh(sys.m)
         self.ctx = mesh_backend.make_context(
             self.mesh, sys, worker_axes=worker_axes, model_axis=model_axis)
-        self.runner = mesh_backend.batched_runner(solver, self.ctx, prm,
-                                                  iters,
-                                                  use_kernel=use_kernel)
+        self.runner = mesh_backend.batched_runner(
+            solver, self.ctx, prm, iters, use_kernel=use_kernel,
+            a_spec=mesh_backend.operand_specs(sys, self.ctx),
+            ls_mode=sys.mode == "least_squares")
 
     def place_system(self, sys: BlockSystem, factors):
         from . import mesh as mesh_backend
-        A = jax.device_put(sys.A_blocks,
-                           NamedSharding(self.mesh, self.runner.A_spec))
+        A = mesh_backend._put_tree(sys.A_op, self.runner.A_spec, self.mesh)
         f = mesh_backend._put_tree(
             mesh_backend._host_factors(self.solver, factors,
                                        self.use_kernel),
@@ -233,15 +250,24 @@ class LinsysServer:
         """Fingerprint ``sys`` and make it servable.  Factors are NOT
         prefetched — the first request pays the store miss (or disk hit),
         which is what the cold/warm benchmarks measure.  Per-register
-        ``params`` override the server-level ones key by key."""
+        ``params`` override the server-level ones key by key.
+
+        Capability is checked HERE — an unservable (solver, system-mode)
+        pair fails at registration, not on the first request.  The kernel
+        flag resolves per system: sparse systems downgrade it (loudly)
+        while dense ones on the same server keep the fused path."""
+        check_capability(self.solver, sys, context="register")
+        use_kernel = resolve_use_kernel(self.solver, sys, self.use_kernel)
         prm = self.solver.resolve_params(sys, **{**self.params, **params})
         fp = self.store.key(self.solver, sys, **prm)
         dtype = sys.A_blocks.dtype
         executor_key = (self.solver.name, sys.m, sys.p, sys.n, str(dtype),
+                        sys.structure, sys.mode,
                         tuple(sorted(prm.items())), self.backend,
-                        self.batch, self.iters, self.use_kernel)
+                        self.batch, self.iters, use_kernel)
         self._systems[fp] = _System(sys=sys, prm=prm, dtype=dtype,
-                                    executor_key=executor_key)
+                                    executor_key=executor_key,
+                                    use_kernel=use_kernel)
         self._queues.setdefault(fp, deque())
         return fp
 
@@ -281,10 +307,11 @@ class LinsysServer:
                 ex = _MeshExecutor(self.solver, ent.prm, self.iters,
                                    ent.sys, self.mesh, self.worker_axes,
                                    self.model_axis,
-                                   use_kernel=self.use_kernel)
+                                   use_kernel=ent.use_kernel)
             else:
                 ex = _LocalExecutor(self.solver, ent.prm, self.iters,
-                                    use_kernel=self.use_kernel)
+                                    use_kernel=ent.use_kernel,
+                                    ls_mode=ent.sys.mode == "least_squares")
             self._executors[key] = ex
         return ex
 
@@ -330,7 +357,7 @@ class LinsysServer:
         # the kernel path augments the cached entry with the pinv factors
         # exactly once — ``kernel_factors`` is idempotent)
         factors = self.store.factors(self.solver, ent.sys, key=fp,
-                                     use_kernel=self.use_kernel, **ent.prm)
+                                     use_kernel=ent.use_kernel, **ent.prm)
         ex = self._executor(ent)
         if ent.placed_src is not factors:     # first batch / post-eviction
             ent.A_placed, ent.factors_placed = ex.place_system(ent.sys,
@@ -365,3 +392,41 @@ class LinsysServer:
             if not batch:
                 return out
             out.extend(batch)
+
+
+class StreamReport(NamedTuple):
+    """Outcome of a ``solve_stream`` run."""
+    served: list        # Served results, completion order
+    batches: int        # coalesced batches executed for this stream
+    warm_batches: int   # batches that started from a prior state
+    warm_hit_rate: float  # warm_batches / batches (0.0 on an empty stream)
+
+
+def solve_stream(server, stream, *, drain_every: int = 1) -> StreamReport:
+    """Drive a server through an ordered stream of ``(fp, rhs)`` requests.
+
+    The streaming mode of the system layer: clients repeatedly re-solve
+    REGISTERED systems under perturbed right-hand sides (sensor updates,
+    tracking loops — the serve-traffic scenario).  Requests are submitted
+    in order and served every ``drain_every`` submissions, so consecutive
+    same-system requests land in the same coalesced batch only when the
+    cadence allows it; the report separates warm from cold batches, which
+    is the quantity the warm-start gating (``Solver.warm_rhs_ok``) moves.
+
+    Works with both servers: the sync ``LinsysServer`` and the pipelined
+    ``AsyncLinsysServer`` (whose ``submit`` may shed under backpressure —
+    shed requests simply do not appear in ``served``).
+    """
+    if drain_every < 1:
+        raise ValueError(f"drain_every must be >= 1, got {drain_every}")
+    b0, w0 = server.stats.batches, server.stats.warm_batches
+    served = []
+    for i, (fp, rhs) in enumerate(stream):
+        server.submit(fp, rhs)
+        if (i + 1) % drain_every == 0:
+            served.extend(server.drain())
+    served.extend(server.drain())
+    batches = server.stats.batches - b0
+    warm = server.stats.warm_batches - w0
+    return StreamReport(served=served, batches=batches, warm_batches=warm,
+                        warm_hit_rate=warm / batches if batches else 0.0)

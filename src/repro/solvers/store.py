@@ -65,6 +65,12 @@ def fingerprint(solver_name: str, sys: BlockSystem,
     Everything ``prepare`` can depend on is in the digest; b is NOT — the
     factorization is b-independent by the lifecycle contract, so one entry
     serves every right-hand side of the same system.
+
+    Sparse systems additionally hash their structure tag and column
+    support: ``prepare`` consumes the compressed ``sys.A_op`` operand
+    there, so a sparse system and its densified twin hold the SAME values
+    but different factor pytrees — they must never share a slot.  Dense
+    digests are byte-identical to what they always were.
     """
     A = np.asarray(jax.device_get(sys.A_blocks))
     h = hashlib.sha256()
@@ -81,6 +87,11 @@ def fingerprint(solver_name: str, sys: BlockSystem,
             v = repr(params[k])
         h.update(f"param:{k}={v}".encode())
     h.update(np.ascontiguousarray(A).tobytes())
+    if sys.is_sparse:
+        cols = np.asarray(jax.device_get(sys.cols))
+        h.update(b"structure=sparse")
+        h.update(f"support={tuple(cols.shape)}".encode())
+        h.update(np.ascontiguousarray(cols).tobytes())
     return h.hexdigest()
 
 
@@ -192,7 +203,7 @@ class FactorStore:
     # ----- the one way to obtain factors ------------------------------------
     def factors(self, solver, sys: BlockSystem, *, use_kernel: bool = False,
                 resume: bool = False, key: Optional[str] = None, **params):
-        """Cached ``solver.prepare(sys.A_blocks, params)``.
+        """Cached ``solver.prepare(sys.A_op, params)``.
 
         Lookup order: memory LRU -> disk tier -> full ``prepare`` (counted
         as a miss; persisted when a ``directory`` is configured).  Pass a
@@ -209,7 +220,7 @@ class FactorStore:
                               **prm)
         if factors is None:
             factors = self.insert(solver, sys,
-                                  solver.prepare(sys.A_blocks, prm),
+                                  solver.prepare(sys.A_op, prm),
                                   resume=resume, key=key,
                                   use_kernel=use_kernel, **prm)
         return factors
@@ -305,6 +316,7 @@ class FactorStore:
             "key": key,
             "solver": solver.name,
             "partition": [sys.m, sys.p, sys.n],
+            "system_structure": sys.structure,
             "dtype": str(np.asarray(sys.A_blocks).dtype),
             "params": {k: float(v) for k, v in prm.items()},
             "structure": structure,
@@ -338,6 +350,12 @@ class FactorStore:
                 f"factor-store manifest drift at {path}: entry was written "
                 f"by solver {manifest.get('solver')!r}, requested "
                 f"{solver.name!r}")
+        if manifest.get("system_structure", "dense") != sys.structure:
+            raise ValueError(
+                f"factor-store manifest drift at {path}: entry holds "
+                f"{manifest.get('system_structure', 'dense')!r} factors, "
+                f"requested {sys.structure!r} — the fingerprint should "
+                f"have separated these; entry may be corrupt")
         if list(manifest.get("partition", [])) != want_part:
             raise ValueError(
                 f"factor-store manifest drift at {path}: partition "

@@ -1,0 +1,31 @@
+"""R008 violations: capability claims without the mode machinery."""
+
+
+class LSClaimNoHooks:
+    # claims least_squares but the chain has neither ls hook
+    supports = frozenset({"square", "least_squares"})
+
+    def step(self, factors, b_blocks, state, prm):
+        return state
+
+
+class _LsBase:
+    def ls_moment(self, factors, A, b, x, params, ctx):
+        raise NotImplementedError  # interface stub: does NOT count
+
+
+class LSClaimStubbed(_LsBase):
+    # inherits only the abstract stub; ls_reference missing outright
+    supports = frozenset({"least_squares"})
+
+    def step(self, factors, b_blocks, state, prm):
+        return state
+
+
+class SparseClaimNoBlockops:
+    # claims sparse but this module never imports repro.core.blockops,
+    # so a SparseBlocks operand would hit raw einsums and crash
+    supports = ("square", "sparse")
+
+    def step(self, factors, b_blocks, state, prm):
+        return state

@@ -1,0 +1,26 @@
+"""R008 conforming: claims backed by hooks across an inheritance split,
+sparse claim backed by the blockops import."""
+from repro.core import blockops
+
+
+class _LsFamily:
+    def ls_moment(self, factors, A, b, x, params, ctx):
+        return ctx.psum_workers(blockops.brmatvec_sum(A, b))
+
+    def ls_reference(self, sys):
+        return sys.x_true
+
+
+class FullClaims(_LsFamily):
+    supports = frozenset({"square", "least_squares", "sparse"})
+
+    def step(self, factors, b_blocks, state, prm):
+        return state
+
+
+class SquareOnly:
+    # no LS/sparse claim -> no obligations
+    supports = frozenset({"square"})
+
+    def step(self, factors, b_blocks, state, prm):
+        return state

@@ -22,6 +22,7 @@ RULE_CASES = [
     ("R005", "core/r005_bad.py", "core/r005_ok.py"),
     ("R006", "r006_bad.py", "r006_ok.py"),
     ("R007", "r007_bad.py", "r007_ok.py"),
+    ("R008", "r008_bad.py", "r008_ok.py"),
 ]
 
 

@@ -66,6 +66,38 @@ def test_fingerprint_sees_partition_not_just_content(sys_a):
     assert fingerprint("apc", sys_a, prm) != fingerprint("apc", re2, prm)
 
 
+def test_fingerprint_separates_sparse_from_densified():
+    # a sparse system and its parity twin share the SAME A_blocks bytes —
+    # only the structure tag differs — and must never collide, or a
+    # dense-prepared factorization gets served to the sparse path
+    sp = linsys.banded_system(n=96, m=4, bandwidth=6, seed=0)
+    prm = {"gamma": 1.0, "eta": 1.0}
+    assert sp.is_sparse
+    assert fingerprint("apc", sp, prm) != fingerprint("apc",
+                                                      sp.densified(), prm)
+
+
+def test_dense_fingerprint_ignores_sparse_fields():
+    # the sparse tokens are appended ONLY for sparse systems: a dense
+    # system built any way (densified twin vs fresh partition of the same
+    # arrays) digests identically, so pre-refactor disk entries stay hot
+    from repro.core.partition import BlockSystem
+    sp = linsys.banded_system(n=96, m=4, bandwidth=6, seed=0)
+    dn = sp.densified()
+    rebuilt = BlockSystem(sp.A_blocks, sp.b_blocks, x_true=sp.x_true)
+    prm = {"gamma": 1.0, "eta": 1.0}
+    assert fingerprint("apc", dn, prm) == fingerprint("apc", rebuilt, prm)
+
+
+def test_fingerprint_sees_sparse_support_pattern():
+    # same values on the diagonal band, different declared support widths
+    # -> different compressed operands -> different keys
+    sp1 = linsys.banded_system(n=96, m=4, bandwidth=6, seed=0)
+    sp2 = linsys.banded_system(n=96, m=4, bandwidth=8, seed=0)
+    prm = {"gamma": 1.0, "eta": 1.0}
+    assert fingerprint("apc", sp1, prm) != fingerprint("apc", sp2, prm)
+
+
 # ---------------------------------------------------------------------------
 # memory tier
 # ---------------------------------------------------------------------------
@@ -224,6 +256,44 @@ def test_disk_round_trip_bit_exact(tmp_path, sys_a, name, backend):
     assert np.array_equal(np.asarray(r_fresh.residuals),
                           np.asarray(r_rest.residuals))
     assert np.array_equal(np.asarray(r_fresh.x), np.asarray(r_rest.x))
+
+
+@pytest.mark.parametrize("name", ["apc", "cimmino"])
+def test_sparse_disk_round_trip_bit_exact(tmp_path, name):
+    # sparse factors (SparseBlocks leaves included) survive the disk tier
+    # and drive a bit-equal solve after a cold restart
+    sp = linsys.banded_system(n=96, m=4, bandwidth=6, seed=0)
+    s = solvers.get(name)
+    prm = s.resolve_params(sp)
+    store1 = FactorStore(directory=str(tmp_path))
+    f_fresh = store1.factors(s, sp, **prm)
+    assert store1.stats.disk_writes == 1
+
+    store2 = FactorStore(directory=str(tmp_path))
+    f_restored = store2.factors(s, sp, **prm)
+    assert store2.stats.disk_hits == 1 and store2.stats.misses == 0
+    assert _tree_equal(f_fresh, f_restored)
+
+    r_fresh = s.solve(sp, iters=60, factors=f_fresh, **prm)
+    r_rest = s.solve(sp, iters=60, factors=f_restored, **prm)
+    assert np.array_equal(np.asarray(r_fresh.residuals),
+                          np.asarray(r_rest.residuals))
+    assert np.array_equal(np.asarray(r_fresh.x), np.asarray(r_rest.x))
+
+
+def test_sparse_manifest_records_structure_and_rejects_drift(tmp_path):
+    sp = linsys.banded_system(n=96, m=4, bandwidth=6, seed=0)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sp)
+    store = FactorStore(directory=str(tmp_path))
+    store.factors(s, sp, **prm)
+    key = store.key(s, sp, **prm)
+    manifest = json.loads((tmp_path / key / "manifest.json").read_text())
+    assert manifest["system_structure"] == "sparse"
+    _tamper(tmp_path, key, "system_structure", "dense")
+    store2 = FactorStore(directory=str(tmp_path))
+    with pytest.raises(ValueError, match="holds 'dense' factors"):
+        store2.factors(s, sp, **prm)
 
 
 def test_disk_entry_layout_matches_checkpoint_contract(tmp_path, sys_a):

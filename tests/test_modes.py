@@ -1,0 +1,372 @@
+"""System modes as first-class citizens through every layer.
+
+The refactor's contract under test: dense-square, least-squares, and
+block-sparse systems flow through the SAME solve/solve_many/serve entry
+points; a solver that cannot handle a mode says so at dispatch
+(``CapabilityError``) instead of silently diverging; least-squares
+results match the closed-form lstsq reference; the sparse execution path
+is numerically a twin of the densified one; and the streaming mode
+(``solve_stream``) warm-starts exactly where ``Solver.warm_rhs_ok``
+allows.
+"""
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.core.partition import partition
+from repro.data import linsys
+from repro.launch import mesh as mesh_lib
+from repro.solvers import CapabilityError, solve_stream
+from repro.solvers.pipeline import AsyncLinsysServer
+from repro.solvers.serve import LinsysServer
+from repro.solvers.store import FactorStore
+
+SPARSE_OK = ["apc", "consensus", "cimmino", "dgd", "dnag", "dhbm", "madmm"]
+LS_OK = ["cimmino", "dgd", "dnag", "dhbm"]
+SQUARE_ONLY_ON_LS = ["apc", "consensus", "madmm", "pdhbm"]
+
+
+@pytest.fixture(scope="module")
+def sparse_sys():
+    return linsys.banded_system(n=192, m=4, bandwidth=6, seed=0)
+
+
+@pytest.fixture(scope="module")
+def ls_sys():
+    # inconsistent by construction: noise pushes b out of range(A)
+    return linsys.tall_gaussian(N=240, n=120, m=4, seed=0, noise=0.05)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return mesh_lib.solver_mesh(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# capability dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", SQUARE_ONLY_ON_LS)
+def test_square_only_solver_rejects_least_squares(ls_sys, name):
+    s = solvers.get(name)
+    with pytest.raises(CapabilityError, match="least_squares"):
+        s.solve(ls_sys, iters=5)
+
+
+def test_pdhbm_rejects_sparse(sparse_sys):
+    # the preconditioned method eigendecomposes the dense normal matrix
+    with pytest.raises(CapabilityError, match="sparse"):
+        solvers.get("pdhbm").solve(sparse_sys, iters=5)
+
+
+def test_capability_error_names_solver_and_declared_set(ls_sys):
+    with pytest.raises(CapabilityError, match="'apc'") as ei:
+        solvers.get("apc").solve(ls_sys, iters=5)
+    assert "supports=" in str(ei.value)          # actionable: what it CAN do
+
+
+def test_server_register_checks_capability(ls_sys):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5,
+                       gamma=1.0, eta=1.0)
+    with pytest.raises(CapabilityError, match="register"):
+        srv.register(ls_sys)
+
+
+def test_solve_many_checks_capability(ls_sys):
+    B = np.zeros((2, ls_sys.N))
+    with pytest.raises(CapabilityError, match="least_squares"):
+        solvers.get("madmm").solve_many(ls_sys, B, iters=5)
+
+
+def test_redundant_execution_is_dense_square_only(sparse_sys, ls_sys):
+    with pytest.raises(ValueError, match="dense-square only"):
+        solvers.get("apc").solve(sparse_sys, iters=5, redundancy=2)
+    with pytest.raises(ValueError, match="dense-square only"):
+        solvers.get("cimmino").solve(ls_sys, iters=5, redundancy=2)
+
+
+# ---------------------------------------------------------------------------
+# mode resolution on the system itself
+# ---------------------------------------------------------------------------
+
+
+def test_mode_auto_resolution(rng):
+    A = rng.standard_normal((48, 48))
+    sq = partition(A, A @ rng.standard_normal(48), 4)
+    assert sq.mode == "square"
+    At = rng.standard_normal((96, 48))
+    tall = partition(At, rng.standard_normal(96), 4)
+    assert tall.mode == "least_squares"
+    # an explicit tag wins over the shape heuristic
+    tagged = partition(At, rng.standard_normal(96), 4, mode="square")
+    assert tagged.mode == "square"
+    with pytest.raises(ValueError, match="mode"):
+        partition(A, A[:, 0], 4, mode="banana")
+
+
+def test_tall_gaussian_default_is_bit_identical_and_consistent():
+    old = linsys.tall_gaussian(N=240, n=120, m=4, seed=0)
+    new = linsys.tall_gaussian(N=240, n=120, m=4, seed=0, noise=0.0)
+    assert np.array_equal(np.asarray(old.A_blocks), np.asarray(new.A_blocks))
+    assert np.array_equal(np.asarray(old.b_blocks), np.asarray(new.b_blocks))
+    assert old.mode == new.mode == "square"      # consistent: b = A x_true
+    A, b = old.dense()
+    assert np.allclose(np.asarray(A) @ np.asarray(old.x_true), b)
+
+
+def test_tall_gaussian_noise_makes_inconsistent_ls(ls_sys):
+    assert ls_sys.mode == "least_squares"
+    A, b = map(np.asarray, ls_sys.dense())
+    x_ls, residual_ss, *_ = np.linalg.lstsq(A, b, rcond=None)
+    assert residual_ss > 0                       # b truly out of range(A)
+    # x_true is the lstsq solution, not the planted generator vector
+    assert np.allclose(np.asarray(ls_sys.x_true), x_ls)
+
+
+# ---------------------------------------------------------------------------
+# least-squares mode: converge to the lstsq reference, local and mesh
+# ---------------------------------------------------------------------------
+
+
+def _rel_err(x, ref):
+    return float(np.linalg.norm(np.asarray(x) - np.asarray(ref))
+                 / np.linalg.norm(np.asarray(ref)))
+
+
+@pytest.mark.parametrize("name", LS_OK)
+def test_ls_solution_matches_solver_reference(ls_sys, name):
+    s = solvers.get(name)
+    prm = s.resolve_params(ls_sys)
+    r = s.solve(ls_sys, iters=800, **prm)
+    ref = s.ls_reference(ls_sys)
+    assert _rel_err(r.x, ref) < 1e-6
+    assert r.residuals[-1] < 1e-8                # LS optimality moment -> 0
+    assert r.errors is not None                  # tracked even w/o planted x
+
+
+@pytest.mark.parametrize("name", ["dgd", "dnag", "dhbm"])
+def test_gradient_family_ls_matches_plain_lstsq(ls_sys, name):
+    # the gradient fixed point is the UNWEIGHTED normal equations: the
+    # solver must land on numpy's lstsq, not some reweighted variant
+    A, b = map(np.asarray, ls_sys.dense())
+    x_ls, *_ = np.linalg.lstsq(A, b, rcond=None)
+    s = solvers.get(name)
+    r = s.solve(ls_sys, iters=800, **s.resolve_params(ls_sys))
+    assert _rel_err(r.x, x_ls) < 1e-6
+
+
+def test_cimmino_ls_reference_is_gram_weighted(ls_sys):
+    # Cimmino's fixed point solves the G^{-1}-weighted LS problem; on an
+    # INCONSISTENT system that is a different minimizer than plain lstsq
+    A, b = map(np.asarray, ls_sys.dense())
+    x_plain, *_ = np.linalg.lstsq(A, b, rcond=None)
+    ref = np.asarray(solvers.get("cimmino").ls_reference(ls_sys))
+    assert _rel_err(ref, x_plain) > 1e-3
+
+
+def test_consistent_tall_system_reaches_x_true():
+    sys_ = linsys.tall_gaussian(N=240, n=120, m=4, seed=1)  # mode="square"
+    for name in ("cimmino", "dgd"):
+        s = solvers.get(name)
+        r = s.solve(sys_, iters=800, **s.resolve_params(sys_))
+        assert _rel_err(r.x, sys_.x_true) < 1e-8
+
+
+@pytest.mark.parametrize("name", ["cimmino", "dgd"])
+def test_ls_mesh_matches_local(ls_sys, mesh, name):
+    s = solvers.get(name)
+    prm = s.resolve_params(ls_sys)
+    r_loc = s.solve(ls_sys, iters=300, **prm)
+    r_mesh = s.solve(ls_sys, iters=300, backend="mesh", mesh=mesh, **prm)
+    np.testing.assert_allclose(np.asarray(r_mesh.x), np.asarray(r_loc.x),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(r_mesh.residuals),
+                               np.asarray(r_loc.residuals),
+                               rtol=1e-6, atol=1e-12)
+
+
+def test_ls_solve_many_batches_the_optimality_residual(ls_sys):
+    s = solvers.get("dgd")
+    prm = s.resolve_params(ls_sys)
+    rng = np.random.default_rng(2)
+    B = np.stack([rng.standard_normal(ls_sys.N) for _ in range(3)])
+    rm = s.solve_many(ls_sys, B, iters=800, **prm)
+    A, _ = map(np.asarray, ls_sys.dense())
+    for k in range(3):
+        x_k, *_ = np.linalg.lstsq(A, B[k], rcond=None)
+        assert _rel_err(rm.x[k], x_k) < 1e-6
+        assert rm.residuals[k, -1] < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# sparse mode: the compressed path is a numerical twin of the dense one
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", SPARSE_OK)
+def test_sparse_matches_densified(sparse_sys, name):
+    s = solvers.get(name)
+    prm = s.resolve_params(sparse_sys)
+    r_sp = s.solve(sparse_sys, iters=150, **prm)
+    r_dn = s.solve(sparse_sys.densified(), iters=150, **prm)
+    np.testing.assert_allclose(np.asarray(r_sp.x), np.asarray(r_dn.x),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(r_sp.residuals),
+                               np.asarray(r_dn.residuals),
+                               rtol=1e-6, atol=1e-12)
+
+
+@pytest.mark.parametrize("name", ["apc", "dgd"])
+def test_sparse_mesh_matches_local(sparse_sys, mesh, name):
+    s = solvers.get(name)
+    prm = s.resolve_params(sparse_sys)
+    r_loc = s.solve(sparse_sys, iters=150, **prm)
+    r_mesh = s.solve(sparse_sys, iters=150, backend="mesh", mesh=mesh, **prm)
+    np.testing.assert_allclose(np.asarray(r_mesh.x), np.asarray(r_loc.x),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(r_mesh.residuals),
+                               np.asarray(r_loc.residuals),
+                               rtol=1e-6, atol=1e-12)
+
+
+def test_sparse_kernel_request_falls_back_loudly(sparse_sys):
+    s = solvers.get("apc")
+    prm = s.resolve_params(sparse_sys)
+    with pytest.warns(RuntimeWarning, match="no sparse Pallas kernel"):
+        r_k = s.solve(sparse_sys, iters=100, use_kernel=True, **prm)
+    r = s.solve(sparse_sys, iters=100, **prm)
+    assert np.array_equal(np.asarray(r_k.x), np.asarray(r.x))
+    assert np.array_equal(np.asarray(r_k.residuals),
+                          np.asarray(r.residuals))
+
+
+def test_sparse_solve_many_matches_densified(sparse_sys):
+    s = solvers.get("cimmino")
+    prm = s.resolve_params(sparse_sys)
+    rng = np.random.default_rng(3)
+    B = np.stack([rng.standard_normal(sparse_sys.N) for _ in range(2)])
+    r_sp = s.solve_many(sparse_sys, B, iters=150, **prm)
+    r_dn = s.solve_many(sparse_sys.densified(), B, iters=150, **prm)
+    np.testing.assert_allclose(np.asarray(r_sp.x), np.asarray(r_dn.x),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(r_sp.residuals),
+                               np.asarray(r_dn.residuals),
+                               rtol=1e-6, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# streaming mode: solve_stream + warm-start gating through both servers
+# ---------------------------------------------------------------------------
+
+
+def _perturbed_stream(fp, n, k, seed):
+    rng = np.random.default_rng(seed)
+    b0 = rng.standard_normal(n)
+    return [(fp, b0 + 1e-3 * rng.standard_normal(n)) for _ in range(k)]
+
+
+@pytest.fixture(scope="module")
+def small_sys():
+    return linsys.conditioned_gaussian(n=48, m=4, cond=10.0, seed=0)
+
+
+def test_solve_stream_warm_hits_for_warm_rhs_ok_solver(small_sys):
+    srv = LinsysServer(FactorStore(), solver="dhbm", iters=120, batch=1,
+                      warm_start=True)
+    fp = srv.register(small_sys)
+    rep = solve_stream(srv, _perturbed_stream(fp, 48, 8, seed=4))
+    assert len(rep.served) == 8
+    assert rep.batches == 8
+    # only the very first batch has no prior state to resume from
+    assert rep.warm_batches == 7
+    assert rep.warm_hit_rate == pytest.approx(7 / 8)
+    assert [r.warm for r in rep.served] == [False] + [True] * 7
+
+
+def test_solve_stream_cold_for_state_caching_solver(small_sys):
+    # APC iterates stay feasible for the OLD b: perturbed-RHS traffic must
+    # serve cold every time, and the report says so
+    srv = LinsysServer(FactorStore(), solver="apc", iters=40, batch=1,
+                      warm_start=True, gamma=1.0, eta=1.0)
+    fp = srv.register(small_sys)
+    rep = solve_stream(srv, _perturbed_stream(fp, 48, 6, seed=5))
+    assert rep.batches == 6 and rep.warm_batches == 0
+    assert rep.warm_hit_rate == 0.0
+
+
+def test_solve_stream_async_server_parity(small_sys):
+    stream_args = (48, 8, 4)
+    sync = LinsysServer(FactorStore(), solver="dhbm", iters=120, batch=1,
+                        warm_start=True)
+    fp_s = sync.register(small_sys)
+    rep_s = solve_stream(sync, _perturbed_stream(fp_s, *stream_args))
+
+    asrv = AsyncLinsysServer(FactorStore(), solver="dhbm", iters=120,
+                             batch=1, warm_start=True)
+    fp_a = asrv.register(small_sys)
+    with asrv:
+        rep_a = solve_stream(asrv, _perturbed_stream(fp_a, *stream_args))
+    assert rep_a.batches == rep_s.batches
+    assert rep_a.warm_batches == rep_s.warm_batches
+    assert [r.rid for r in rep_a.served] == [r.rid for r in rep_s.served]
+    for ra, rs in zip(rep_a.served, rep_s.served):
+        assert np.array_equal(np.asarray(ra.x), np.asarray(rs.x))
+        assert ra.residual == rs.residual
+
+
+def test_solve_stream_coalesces_with_larger_drain_cadence(small_sys):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=20, batch=4,
+                      gamma=1.0, eta=1.0)
+    fp = srv.register(small_sys)
+    rep = solve_stream(srv, _perturbed_stream(fp, 48, 8, seed=6),
+                       drain_every=4)
+    assert len(rep.served) == 8
+    assert rep.batches == 2                      # 2 full coalesced batches
+    assert srv.stats.padded == 0
+
+
+def test_solve_stream_validates_cadence(small_sys):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5,
+                      gamma=1.0, eta=1.0)
+    with pytest.raises(ValueError, match="drain_every"):
+        solve_stream(srv, [], drain_every=0)
+
+
+def test_solve_stream_empty_stream(small_sys):
+    srv = LinsysServer(FactorStore(), solver="apc", iters=5,
+                      gamma=1.0, eta=1.0)
+    rep = solve_stream(srv, [])
+    assert rep.served == [] and rep.batches == 0
+    assert rep.warm_hit_rate == 0.0
+
+
+def test_serve_least_squares_system(ls_sys):
+    # the server's LS executors report the optimality residual — a served
+    # LS request converges to the lstsq solution of ITS rhs
+    srv = LinsysServer(FactorStore(), solver="dgd", iters=800, batch=1)
+    fp = srv.register(ls_sys)
+    rng = np.random.default_rng(7)
+    b = rng.standard_normal(ls_sys.N)
+    srv.submit(fp, b)
+    out = srv.drain()[0]
+    A, _ = map(np.asarray, ls_sys.dense())
+    x_ref, *_ = np.linalg.lstsq(A, b, rcond=None)
+    assert _rel_err(out.x, x_ref) < 1e-6
+    assert out.residual < 1e-8
+
+
+def test_serve_sparse_system_matches_densified(sparse_sys):
+    rng = np.random.default_rng(8)
+    rhs = [rng.standard_normal(sparse_sys.N) for _ in range(3)]
+    outs = {}
+    for tag, sys_ in (("sp", sparse_sys), ("dn", sparse_sys.densified())):
+        srv = LinsysServer(FactorStore(), solver="cimmino", iters=150,
+                          batch=1)
+        fp = srv.register(sys_)
+        for b in rhs:
+            srv.submit(fp, b)
+        outs[tag] = srv.drain()
+    for r_sp, r_dn in zip(outs["sp"], outs["dn"]):
+        np.testing.assert_allclose(np.asarray(r_sp.x), np.asarray(r_dn.x),
+                                   rtol=1e-8, atol=1e-10)
