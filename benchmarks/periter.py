@@ -156,6 +156,120 @@ def sparse_comparison(n: int = 768, m: int = 4, bandwidth: int = 8,
     return out
 
 
+def sparse_kernel_comparison(n: int = 768, m: int = 4, bandwidth: int = 8,
+                             iters: int = 30, batches=(1, 16),
+                             methods=("apc", "cimmino")) -> dict:
+    """Fused compressed-support kernels vs the unfused sparse step.
+
+    The PR 9 tentpole: on a >= 90%-sparse banded system the kernel path
+    contracts (p, w) vals / (w, p) compressed-pinv tiles instead of
+    falling back to the dense engine.  Three paths per (method, batch)
+    cell, mirroring ``kernel_comparison``: ``unfused``, raw ``kernel``
+    (engine pinned fused), and ``dispatch`` (what ``use_fused`` picks).
+    ``scripts/bench_ci.py`` gates dispatch >= unfused at batch 16.
+    """
+    import os
+
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import block_projection as bp
+    from repro.kernels import ops as kops
+
+    jax.config.update("jax_enable_x64", True)
+    sys_ = linsys.banded_system(n=n, m=m, bandwidth=bandwidth, seed=0)
+    store = FactorStore()
+    out = {"n": n, "m": m, "p": sys_.p, "bandwidth": bandwidth,
+           "sparsity": round(sys_.sparsity, 4),
+           "support_width": int(sys_.cols.shape[1]), "iters_timed": iters,
+           "interpret": bp.default_interpret(), "methods": {}}
+    for name in methods:
+        s = solvers.get(name)
+        prm = s.resolve_params(sys_)
+        factors = store.factors(s, sys_, use_kernel=True, **prm)
+        family = ("cimmino" if name == "cimmino" else "apc") + "_sparse"
+        w = int(factors.A.vals.shape[2])
+        per = {}
+        for k in batches:
+            Bb = jnp.asarray(np.random.default_rng(0).standard_normal(
+                (k, sys_.m, sys_.p)))
+            states = jax.vmap(lambda b: s.init(factors, b, prm))(Bb)
+            unfused = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
+                              _s.step_many(_f, _B, sts, _p,
+                                           use_kernel=False))
+            fused = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
+                            _s.step_many(_f, _B, sts, _p, use_kernel=True))
+            dispatch = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
+                               _s.step_many(_f, _B, sts, _p,
+                                            use_kernel=True))
+            tu = _time(unfused, states, iters=iters)
+            prev = os.environ.get(kops.ENGINE_ENV)
+            os.environ[kops.ENGINE_ENV] = "fused"
+            try:
+                tk = _time(fused, states, iters=iters)
+            finally:
+                if prev is None:
+                    os.environ.pop(kops.ENGINE_ENV, None)
+                else:
+                    os.environ[kops.ENGINE_ENV] = prev
+            td = _time(dispatch, states, iters=iters)
+            per[f"unfused_b{k}_us"] = round(tu, 2)
+            per[f"kernel_b{k}_us"] = round(tk, 2)
+            per[f"kernel_speedup_b{k}"] = round(tu / tk, 4)
+            per[f"dispatch_b{k}_us"] = round(td, 2)
+            per[f"dispatch_speedup_b{k}"] = round(tu / td, 4)
+            per[f"engine_b{k}"] = ("fused" if kops.use_fused(
+                family, sys_.p, sys_.N, k, factors.A.vals.dtype, w=w)
+                else "unfused")
+        out["methods"][name] = per
+    return out
+
+
+def fused_residual_comparison(n: int = 512, m: int = 4, bandwidth: int = 8,
+                              k: int = 16, iters: int = 30,
+                              methods=("apc", "cimmino")) -> dict:
+    """Fused in-step residual vs a separate ||AX - b|| pass, batch ``k``.
+
+    ``step_many_residual`` harvests the residual from the worker
+    contraction the step already does; the separate pass re-reads the
+    full operand for a second ``bmatvec_many``.  The gate in
+    ``scripts/bench_ci.py``: fused >= separate at batch 16.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import blockops
+    from repro.kernels import block_projection as bp
+
+    jax.config.update("jax_enable_x64", True)
+    sys_ = linsys.banded_system(n=n, m=m, bandwidth=bandwidth, seed=0)
+    store = FactorStore()
+    out = {"n": n, "m": m, "k": k, "iters_timed": iters,
+           "interpret": bp.default_interpret(), "methods": {}}
+    A_op = sys_.A_op
+    for name in methods:
+        s = solvers.get(name)
+        prm = s.resolve_params(sys_)
+        factors = store.factors(s, sys_, use_kernel=True, **prm)
+        Bb = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (k, sys_.m, sys_.p)))
+        states = jax.vmap(lambda b: s.init(factors, b, prm))(Bb)
+        fused = jax.jit(lambda sts, _f=factors, _p=prm, _s=s, _B=Bb:
+                        _s.step_many_residual(_f, _B, sts, _p))
+
+        def _separate(sts, _f=factors, _p=prm, _s=s, _B=Bb):
+            nxt = _s.step_many(_f, _B, sts, _p, use_kernel=True)
+            r = blockops.bmatvec_many(A_op, _s.extract(nxt)) - _B
+            return nxt, jnp.sum(r * r, axis=(1, 2))
+
+        separate = jax.jit(_separate)
+        tf = _time(fused, states, iters=iters)
+        ts = _time(separate, states, iters=iters)
+        out["methods"][name] = {
+            "fused_us": round(tf, 2), "separate_us": round(ts, 2),
+            "fused_speedup": round(ts / tf, 4),
+        }
+    return out
+
+
 def run(verbose: bool = True, n: int = 512, m: int = 4):
     jax.config.update("jax_enable_x64", True)
     sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=50.0, seed=0)
@@ -186,6 +300,25 @@ def run(verbose: bool = True, n: int = 512, m: int = 4):
                          per[f"dispatch_b{k}_us"],
                          f"{mode};engine={per[f'engine_b{k}']};"
                          f"vs_unfused={per[f'dispatch_speedup_b{k}']:.2f}x"))
+
+    # sparse fused kernels vs the unfused sparse step (PR 9 tentpole)
+    skc = sparse_kernel_comparison()
+    smode = "interpret" if skc["interpret"] else "compiled"
+    for name, per in skc["methods"].items():
+        for k in (1, 16):
+            rows.append((f"periter/{name}_sparse_dispatch_b{k}",
+                         per[f"dispatch_b{k}_us"],
+                         f"{smode};engine={per[f'engine_b{k}']};"
+                         f"vs_unfused={per[f'dispatch_speedup_b{k}']:.2f}x;"
+                         f"sparsity={skc['sparsity']:.0%}"))
+
+    # fused in-step residual vs a separate ||AX-b|| pass at batch 16
+    frc = fused_residual_comparison()
+    for name, per in frc["methods"].items():
+        rows.append((f"periter/{name}_fused_residual_b16",
+                     per["fused_us"],
+                     f"separate={per['separate_us']:.1f}us;"
+                     f"speedup={per['fused_speedup']:.2f}x"))
 
     # sparse execution path vs its densified parity twin (the system-mode
     # refactor's perf claim: contracting over w support columns beats n)

@@ -1,20 +1,217 @@
-"""Roofline table (§Roofline): reads the dry-run artifact and renders the
-per-(arch × shape × mesh) three-term analysis.
+"""Live roofline for the Pallas kernel engine (§Roofline).
 
-The compile pass itself is ``python -m repro.launch.dryrun --both-meshes
---json dryrun_baseline.json`` (30-60 min on this container); this benchmark
-consumes its JSON so `benchmarks.run` stays fast.  ``--refresh-one`` runs a
-single live cell through a subprocess as a freshness check.
+For each kernel cell (dense/sparse x apc/cimmino at a representative
+shape) this builds the analytic bytes-vs-FLOPs model from the *actual*
+tile schedule ``ops.pick_tiles`` resolves, measures the machine's
+streaming bandwidth and matmul peak as ceilings, times the real fused
+pair, and reports arithmetic intensity, the predicted bottleneck, and
+roofline attainment (predicted-best time / measured time).
+
+No artifact is required: the table is computed live by default.  The
+old dry-run replay (``dryrun_baseline.json`` from ``repro.launch.dryrun``)
+is still available behind ``--from-json`` for the per-(arch x mesh)
+three-term analysis, but nothing in ``benchmarks.run`` depends on it.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
 import time
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = os.path.join(REPO, "dryrun_baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# measured ceilings
+# ---------------------------------------------------------------------------
+
+
+def _best_of(fn, n=5):
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def measured_bandwidth_bps() -> float:
+    """Achievable streaming bandwidth: time a jitted y = x + 1 copy."""
+    x = jnp.zeros((8 * 1024 * 1024,), jnp.float32)  # 32 MiB
+    f = jax.jit(lambda a: a + 1.0)  # repro: allow[R001] one-shot ceiling probe: built once, timed, discarded
+    f(x).block_until_ready()
+    t = _best_of(lambda: f(x).block_until_ready())
+    return 2 * x.nbytes / t  # one read + one write
+
+
+def measured_flops_ps() -> float:
+    """Achievable f32 compute: time a jitted square matmul."""
+    n = 768
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda u, v: u @ v)  # repro: allow[R001] one-shot ceiling probe: built once, timed, discarded
+    f(a, a).block_until_ready()
+    t = _best_of(lambda: f(a, a).block_until_ready(), n=3)
+    return 2.0 * n ** 3 / t
+
+
+# ---------------------------------------------------------------------------
+# analytic bytes/FLOPs per fused pair, from the resolved tile schedule
+# ---------------------------------------------------------------------------
+
+
+def _pad(v, m):
+    return int(-(-v // m) * m)
+
+
+def pair_model(family: str, m: int, p: int, n: int, k: int,
+               tiles, itemsize_ab: int = 4, itemsize_x: int = 4,
+               w: int | None = None):
+    """(flops, bytes) for one gather+scatter pair across ``m`` workers.
+
+    ``w`` switches to the compressed-support traffic (the sparse pair
+    contracts over w_pad instead of n_pad, plus the XLA gather/scatter
+    glue on the full-width state).  Byte counts follow the 3D grid
+    schedule: an (A|B) tile is resident once per k-tile sweep, the
+    state tiles are re-read once per opposing sublane tile.
+    """
+    bn, bp, bk = tiles
+    lane = _pad(n if w is None else w, 128)
+    p_pad, k_pad = _pad(p, 8), _pad(k, 8)
+    bn = min(bn, lane)
+    k_sweeps = -(-k_pad // bk)
+    cim = family.startswith("cimmino")
+    # contraction: gather (k,p,lane) + scatter (k,lane,p), 2 flops/MAC
+    flops = m * 4.0 * k_pad * p_pad * lane
+    a_bytes = p_pad * lane * itemsize_ab * k_sweeps       # A tiles
+    b_bytes = lane * p_pad * itemsize_ab * k_sweeps       # B (pinv) tiles
+    nstate = 1 if cim else 2                              # xbar vs (x, xbar)
+    g_state = nstate * k_pad * lane * (p_pad // bp) * itemsize_x
+    s_state = (0 if cim else nstate * k_pad * lane * itemsize_x)
+    u_bytes = k_pad * p_pad * (1 + lane // bn) * itemsize_x
+    y_bytes = k_pad * lane * itemsize_x
+    bytes_ = m * (a_bytes + b_bytes + g_state + s_state + u_bytes + y_bytes)
+    if w is not None:  # XLA glue: gather x[:, cols] in, scatter-add out
+        glue = m * k_pad * _pad(w, 128) * 2 * itemsize_x + 2 * k * n * itemsize_x
+        bytes_ += glue
+    return flops, bytes_
+
+
+# ---------------------------------------------------------------------------
+# cells: build real operands, time the real jitted pair
+# ---------------------------------------------------------------------------
+
+
+def _dense_cell(family: str, p: int, n: int, k: int, rng):
+    from repro.kernels import ops
+    A = jnp.asarray(rng.standard_normal((p, n)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    Xb = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    if family == "apc":
+        def call():
+            u = ops.proj_gather(A, X, Xb)
+            return ops.proj_scatter(B, X, Xb, u, 0.9).block_until_ready()
+    else:
+        bsh = jnp.asarray(rng.standard_normal((k, p)), jnp.float32)
+
+        def call():
+            u = ops.cimmino_gather(A, Xb)
+            return ops.cimmino_scatter(B, bsh - u).block_until_ready()
+    return call, dict(m=1, p=p, n=n, k=k, w=None)
+
+
+def _sparse_cell(family: str, k: int, rng):
+    from repro import solvers
+    from repro.data import linsys
+    from repro.kernels import ops
+    from repro.solvers.store import FactorStore
+    sys_ = linsys.banded_system(n=512, m=4, bandwidth=8, seed=0,
+                                dtype=jnp.float32)
+    s = solvers.get(family)
+    f = FactorStore().factors(s, sys_, use_kernel=True,
+                              **s.resolve_params(sys_))
+    m, p, w = f.A.vals.shape
+    X = jnp.asarray(rng.standard_normal((k, sys_.N)), jnp.float32)
+    Xb = jnp.asarray(rng.standard_normal((k, sys_.N)), jnp.float32)
+    if family == "apc":
+        def call():
+            outs = [ops.sparse_proj_update(f.A.vals[i], f.A.cols[i],
+                                           f.B[i], X, Xb, 0.9)[0]
+                    for i in range(m)]
+            return outs[-1].block_until_ready()
+    else:
+        bsh = jnp.asarray(rng.standard_normal((m, k, p)), jnp.float32)
+
+        def call():
+            outs = [ops.sparse_cimmino_update(f.A.vals[i], f.A.cols[i],
+                                              f.B[i], bsh[i], Xb)[0]
+                    for i in range(m)]
+            return outs[-1].block_until_ready()
+    return call, dict(m=m, p=p, n=sys_.N, k=k, w=w)
+
+
+CELLS = [
+    ("dense/apc", "apc", False, dict(p=64, n=1024, k=16)),
+    ("dense/cimmino", "cimmino", False, dict(p=64, n=1024, k=16)),
+    ("sparse/apc", "apc", True, dict(k=16)),
+    ("sparse/cimmino", "cimmino", True, dict(k=16)),
+]
+
+
+def live_cells(verbose: bool = True, out=sys.stdout):
+    from repro.kernels import block_projection as bp_mod
+    from repro.kernels import ops
+    interp = bp_mod.default_interpret()
+    bw = measured_bandwidth_bps()
+    peak = measured_flops_ps()
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, family, sparse, shp in CELLS:
+        call, dims = (_sparse_cell(family, shp["k"], rng) if sparse
+                      else _dense_cell(family, rng=rng, **shp))
+        lane_src = dims["w"] if sparse else dims["n"]
+        tiles = ops.pick_tiles(_pad(lane_src, 128), _pad(dims["p"], 8),
+                               _pad(dims["k"], 8), jnp.float32,
+                               interpret=interp)
+        flops, bytes_ = pair_model(family, dims["m"], dims["p"], dims["n"],
+                                   dims["k"], tiles, w=dims["w"])
+        call()  # compile/warm
+        t_meas = _best_of(call, n=3)
+        t_mem, t_comp = bytes_ / bw, flops / peak
+        t_roof = max(t_mem, t_comp)
+        rows.append(dict(
+            name=name, shape=f"m{dims['m']}p{dims['p']}n{dims['n']}"
+            + (f"w{dims['w']}" if dims["w"] else "") + f"k{dims['k']}",
+            tiles=list(tiles), flops=flops, bytes=bytes_,
+            intensity=flops / bytes_,
+            bound="memory" if t_mem >= t_comp else "compute",
+            t_mem=t_mem, t_comp=t_comp, t_meas=t_meas,
+            attainment=t_roof / t_meas, interpret=interp))
+    if verbose:
+        print(f"ceilings: {bw/1e9:.1f} GB/s stream, {peak/1e9:.1f} GFLOP/s "
+              f"(interpret={interp})", file=out)
+        hdr = (f"{'cell':16s} {'shape':20s} {'tiles':>14s} {'AI':>6s} "
+               f"{'bound':>7s} {'t_roof':>9s} {'t_meas':>9s} {'attain':>7s}")
+        print(hdr, file=out)
+        print("-" * len(hdr), file=out)
+        for r in rows:
+            print(f"{r['name']:16s} {r['shape']:20s} "
+                  f"{str(tuple(r['tiles'])):>14s} {r['intensity']:6.1f} "
+                  f"{r['bound']:>7s} {max(r['t_mem'], r['t_comp']):9.2e} "
+                  f"{r['t_meas']:9.2e} {r['attainment']:7.3f}", file=out)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# optional replay of the dry-run artifact (legacy three-term analysis)
+# ---------------------------------------------------------------------------
 
 
 def load(path: str = DEFAULT_JSON):
@@ -49,57 +246,42 @@ def render(records, mesh: str = "16x16", out=sys.stdout):
               f"{100*f['roofline_fraction']:6.2f}%", file=out)
 
 
-def markdown(records, mesh: str = "16x16"):
-    lines = ["| arch | shape | t_compute (s) | t_memory (s) | "
-             "t_collective (s) | bottleneck | useful | roofline-frac |",
-             "|---|---|---|---|---|---|---|---|"]
-    for r in records:
-        if r.get("mesh") != mesh:
-            continue
-        if r["status"] == "skipped":
-            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
-                         f"skipped | — | — |")
-            continue
-        if r["status"] != "ok":
-            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
-            continue
-        f = r["roofline"]
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {f['t_compute']:.2e} | "
-            f"{f['t_memory']:.2e} | {f['t_collective']:.2e} | "
-            f"{f['bottleneck']} | {f['useful_ratio']:.3f} | "
-            f"{100*f['roofline_fraction']:.2f}% |")
-    return "\n".join(lines)
-
-
-def run(verbose: bool = True, path: str = DEFAULT_JSON):
+def replay(path: str, out=sys.stdout):
     recs = load(path)
-    if verbose:
-        for mesh in ("16x16", "2x16x16"):
-            n = sum(1 for r in recs if r.get("mesh") == mesh)
-            if not n:
-                continue
-            print(f"\n=== mesh {mesh} ===")
-            render(recs, mesh)
+    for mesh in ("16x16", "2x16x16"):
+        if not any(r.get("mesh") == mesh for r in recs):
+            continue
+        print(f"\n=== mesh {mesh} (replay of {os.path.basename(path)}) ===",
+              file=out)
+        render(recs, mesh, out=out)
     return recs
 
 
+def run(verbose: bool = True):
+    return live_cells(verbose=verbose)
+
+
 def csv_rows():
-    t0 = time.time()
-    try:
-        recs = run(verbose=False)
-    except FileNotFoundError:
-        return [("roofline/all", 0.0, "missing-dryrun-json")]
-    ok = sum(r["status"] == "ok" for r in recs)
-    worst = None
-    for r in recs:
-        if r["status"] == "ok":
-            rf = r["roofline"]["roofline_fraction"]
-            if worst is None or rf < worst[1]:
-                worst = (f"{r['arch']}/{r['shape']}", rf)
-    return [("roofline/all", (time.time() - t0) * 1e6,
-             f"cells_ok={ok};worst={worst[0]}:{100*worst[1]:.2f}%")]
+    rows = []
+    for r in live_cells(verbose=False):
+        rows.append((f"roofline/{r['name']}", r["t_meas"] * 1e6,
+                     f"bound={r['bound']};ai={r['intensity']:.1f};"
+                     f"attain={r['attainment']:.3f}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--from-json", metavar="PATH", default=None,
+                    help="replay a repro.launch.dryrun artifact instead "
+                         "of the live kernel roofline")
+    args = ap.parse_args(argv)
+    if args.from_json:
+        replay(args.from_json)
+    else:
+        run()
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -57,7 +57,23 @@ PR8 adds the system-mode rows on top (the PR6 gates carry unchanged):
     gated ``stream_warm_hits`` (every post-priming batch warm) and
     ``stream_zero_retrace`` (steady-state jit cache constant).
 
-    PYTHONPATH=src python scripts/bench_ci.py --out BENCH_PR8.json
+PR9 adds the roofline-push rows (all earlier gates carry unchanged):
+
+  * ``benchmarks.periter.sparse_kernel_comparison``: the fused
+    compressed-support Pallas pair vs the unfused sparse step on the
+    same >= 90%-sparse banded system, gated
+    ``sparse_dispatch_ge_unfused_b16`` — the DISPATCHED sparse path
+    (engine autotune may pick either engine) must not lose to the
+    unfused step it can fall back to.  Raw sparse-kernel speedups stay
+    on record ungated (interpret-mode absolutes are not TPU perf).
+  * ``benchmarks.periter.fused_residual_comparison``: in-step residual
+    harvest vs a separate ||AX-b|| pass at batch 16, gated
+    ``fused_residual_ge_separate_b16`` at the same noise floor.
+  * ``benchmarks.roofline.live_cells``: the live bytes-vs-FLOPs model
+    per kernel cell with measured ceilings — recorded (attainment per
+    cell), ungated: attainment on a loaded CPU lane is a trend number.
+
+    PYTHONPATH=src python scripts/bench_ci.py --out BENCH_PR9.json
 """
 from __future__ import annotations
 
@@ -85,6 +101,8 @@ PERITER = dict(n=512, m=2, batches=(1, 16), iters=30)
 SERVE = dict(n=256, m=4, iters=100, warm_batches=6)
 TRAFFIC = dict(n_requests=32, iters=100)
 SPARSE = dict(n=768, m=4, bandwidth=8, iters=30)
+SPARSE_KERNEL = dict(n=768, m=4, bandwidth=8, iters=30, batches=(1, 16))
+FUSED_RES = dict(n=512, m=4, bandwidth=8, k=16, iters=30)
 STREAM = dict(n_requests=100, iters=100, solver="dhbm")
 DISPATCH_MIN = 0.75         # noise floor for dispatch >= unfused gates
 SPARSE_MIN = 1.0            # compressed path never loses to densified
@@ -94,7 +112,7 @@ ASYNC_MIN_SINGLECORE = 0.80  # overhead bound at the 1-core makespan floor
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR8.json",
+    ap.add_argument("--out", default="BENCH_PR9.json",
                     help="where to write the benchmark trajectory record")
     ap.add_argument("--no-gate", action="store_true",
                     help="record only; do not fail on gate violations "
@@ -132,6 +150,35 @@ def main(argv=None) -> int:
               f"w={sc['support_width']}/{sc['n']})")
     assert sc["sparsity"] >= 0.90, (
         f"sparse gate shape must be >= 90% sparse, got {sc['sparsity']:.0%}")
+
+    print(f"== bench_ci: periter sparse kernel dispatch {SPARSE_KERNEL} ==")
+    skc = periter.sparse_kernel_comparison(**SPARSE_KERNEL)
+    for name, row in skc["methods"].items():
+        for k in (1, 16):
+            print(f"  {name:10s} b{k:<2d} unfused "
+                  f"{row[f'unfused_b{k}_us']:9.1f}us  kernel "
+                  f"{row[f'kernel_b{k}_us']:9.1f}us "
+                  f"({row[f'kernel_speedup_b{k}']:.2f}x)  dispatch "
+                  f"{row[f'dispatch_b{k}_us']:9.1f}us "
+                  f"({row[f'dispatch_speedup_b{k}']:.2f}x, "
+                  f"{row[f'engine_b{k}']})")
+    assert skc["sparsity"] >= 0.90, (
+        f"sparse kernel gate shape must be >= 90% sparse, "
+        f"got {skc['sparsity']:.0%}")
+
+    print(f"== bench_ci: periter fused residual vs separate pass "
+          f"{FUSED_RES} ==")
+    frc = periter.fused_residual_comparison(**FUSED_RES)
+    for name, row in frc["methods"].items():
+        print(f"  {name:10s} fused {row['fused_us']:9.1f}us  separate "
+              f"{row['separate_us']:9.1f}us ({row['fused_speedup']:.2f}x)")
+
+    print("== bench_ci: roofline live cells ==")
+    from benchmarks import roofline
+    roof = roofline.live_cells(verbose=False)
+    for r in roof:
+        print(f"  {r['name']:16s} {r['shape']:20s} AI {r['intensity']:5.1f} "
+              f"{r['bound']:7s} attain {r['attainment']:.3f}")
 
     print(f"== bench_ci: serve_traffic.streaming {STREAM} ==")
     stream = {}
@@ -226,6 +273,15 @@ def main(argv=None) -> int:
         "sparse_ge_densified": all(
             row["sparse_speedup"] >= SPARSE_MIN
             for row in sc["methods"].values()),
+        # the dispatched SPARSE kernel path never loses to the unfused
+        # sparse step it can fall back to (the PR9 tentpole's invariant)
+        "sparse_dispatch_ge_unfused_b16": all(
+            row["dispatch_speedup_b16"] >= DISPATCH_MIN
+            for row in skc["methods"].values()),
+        # in-step residual harvest never loses to the separate pass
+        "fused_residual_ge_separate_b16": all(
+            row["fused_speedup"] >= DISPATCH_MIN
+            for row in frc["methods"].values()),
         # streaming mode: every post-priming perturbed-b batch resumes
         # warm (warm_rhs_ok solver), through BOTH servers...
         "stream_warm_hits": all(
@@ -235,8 +291,8 @@ def main(argv=None) -> int:
             stream[k]["zero_retrace"] for k in ("sync", "async")),
     }
     record = {
-        "schema": 3,
-        "pr": 8,
+        "schema": 4,
+        "pr": 9,
         "backend": jax.default_backend(),
         "pallas_interpret": bp.default_interpret(),
         "host_cpus": cpus,
@@ -252,6 +308,14 @@ def main(argv=None) -> int:
             "tracecheck_report": retrace_report,
             "sparse_speedups": {name: row["sparse_speedup"]
                                 for name, row in sc["methods"].items()},
+            "sparse_dispatch_speedups_b16": {
+                name: row["dispatch_speedup_b16"]
+                for name, row in skc["methods"].items()},
+            "fused_residual_speedups": {
+                name: row["fused_speedup"]
+                for name, row in frc["methods"].items()},
+            "roofline_attainment": {r["name"]: r["attainment"]
+                                    for r in roof},
             "sparse_min": SPARSE_MIN,
             "sparse_gate_sparsity": sc["sparsity"],
             "stream_warm_rates": {k: stream[k]["warm_hit_rate"]
@@ -261,6 +325,9 @@ def main(argv=None) -> int:
                            for k, v in sorted(kops.engine_cache().items())},
         "periter_kernel": per,
         "periter_sparse": sc,
+        "periter_sparse_kernel": skc,
+        "periter_fused_residual": frc,
+        "roofline": roof,
         "serve_traffic": srv,
         "streaming": stream,
         "traffic": {"sync": tr["sync"], "async": tr["async"],
@@ -273,11 +340,17 @@ def main(argv=None) -> int:
 
     sparse_min_seen = min(row["sparse_speedup"]
                           for row in sc["methods"].values())
+    sk_min_seen = min(row["dispatch_speedup_b16"]
+                      for row in skc["methods"].values())
+    fr_min_seen = min(row["fused_speedup"]
+                      for row in frc["methods"].values())
     failed = [k for k, ok in gates.items() if not ok]
     if failed:
         msg = (f"bench gate FAILED: {failed} "
                f"(dispatch b1={disp_b1:.2f}x b16={disp_b16:.2f}x, "
                f"sparse>={sparse_min_seen:.2f}x, "
+               f"sparse-dispatch b16>={sk_min_seen:.2f}x, "
+               f"fused-residual>={fr_min_seen:.2f}x, "
                f"stream warm {stream['sync']['warm_hit_rate']:.0%}/"
                f"{stream['async']['warm_hit_rate']:.0%}, "
                f"async/sync={ratio:.2f} vs >={async_min:.2f} "
@@ -289,7 +362,9 @@ def main(argv=None) -> int:
         return 1
     print(f"bench gates OK: dispatch b1 {disp_b1:.2f}x / b16 {disp_b16:.2f}x "
           f">= {DISPATCH_MIN}, sparse {sparse_min_seen:.2f}x >= "
-          f"{SPARSE_MIN} at {sc['sparsity']:.0%} sparsity, stream warm "
+          f"{SPARSE_MIN} at {sc['sparsity']:.0%} sparsity, sparse-dispatch "
+          f"b16 {sk_min_seen:.2f}x / fused-residual {fr_min_seen:.2f}x >= "
+          f"{DISPATCH_MIN}, stream warm "
           f"100% both servers, async/sync {ratio:.2f} >= {async_min:.2f} "
           f"({cpus} cpu(s)), zero retraces, overload sheds explicitly")
     return 0

@@ -5,6 +5,10 @@ Covers, against the unfused/pure-jnp references:
   * raw ops — fused block_projection (single + multi-RHS), the split
     proj_gather/proj_scatter pair, and the Cimmino gather/scatter pair,
     including a non-multiple-of-128 n and a p=1 edge block;
+  * sparse ops — the compressed-support ``sparse_proj_update`` /
+    ``sparse_cimmino_update`` pair vs the einsum oracles with the engine
+    pinned fused, then end-to-end silent sparse dispatch (local + mesh,
+    fused-residual history parity) and a ``precision="mixed"`` solve;
   * solver paths — apc / consensus / cimmino with ``use_kernel=True`` on
     the local AND mesh backends (forced 4-host-device 2x2 data x model
     mesh, so the column-sharded gather/psum/scatter composition runs),
@@ -105,6 +109,71 @@ def smoke_solver_paths():
                            rtol=1e-6, atol=1e-12), name
 
 
+def smoke_sparse_paths():
+    """Sparse fused pair + mixed precision (PR 9): raw ops against the
+    einsum oracles with the engine PINNED fused (so the autotune cannot
+    route around the kernels), then end-to-end dispatch parity."""
+    rng = np.random.default_rng(6)
+    for p, w, n, k, dtype, tol in ((8, 128, 256, 1, jnp.float32, 1e-4),
+                                   (7, 61, 130, 5, jnp.float64, 1e-10)):
+        vals = jnp.asarray(rng.standard_normal((p, w)), dtype)
+        cols = jnp.asarray(rng.choice(n, size=w, replace=False), jnp.int32)
+        bvals = jnp.asarray(rng.standard_normal((w, p)), dtype)
+        shp = (n,) if k == 1 else (k, n)
+        x = jnp.asarray(rng.standard_normal(shp), dtype)
+        xb = jnp.asarray(rng.standard_normal(shp), dtype)
+        b = jnp.asarray(rng.standard_normal((p,) if k == 1 else (k, p)),
+                        dtype)
+        prev = os.environ.get(ops.ENGINE_ENV)
+        os.environ[ops.ENGINE_ENV] = "fused"
+        try:
+            y, u = ops.sparse_proj_update(vals, cols, bvals, x, xb, 0.9)
+            yr, ur = ref.sparse_proj_update_ref(vals, cols, bvals, x, xb,
+                                                0.9)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                       rtol=tol, atol=tol)
+            np.testing.assert_allclose(np.asarray(u), np.asarray(ur),
+                                       rtol=tol, atol=tol)
+            r, uc = ops.sparse_cimmino_update(vals, cols, bvals, b, xb)
+            rr, ucr = ref.sparse_cimmino_update_ref(vals, cols, bvals, b,
+                                                    xb)
+            np.testing.assert_allclose(np.asarray(r), np.asarray(rr),
+                                       rtol=tol, atol=tol)
+            np.testing.assert_allclose(np.asarray(uc), np.asarray(ucr),
+                                       rtol=tol, atol=tol)
+        finally:
+            if prev is None:
+                os.environ.pop(ops.ENGINE_ENV, None)
+            else:
+                os.environ[ops.ENGINE_ENV] = prev
+
+    # end-to-end: silent sparse dispatch + fused-residual history parity
+    import warnings
+    sys_ = linsys.banded_system(n=192, m=4, bandwidth=6, seed=0)
+    mesh = make_compat_mesh((2, 2), ("data", "model"))
+    for name in ("apc", "cimmino"):
+        s = solvers.get(name)
+        prm = s.resolve_params(sys_)
+        r0 = s.solve(sys_, iters=80, **prm)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            rk = s.solve(sys_, iters=80, use_kernel=True, **prm)
+            rm = s.solve(sys_, iters=80, use_kernel=True, backend="mesh",
+                         mesh=mesh, **prm)
+        for tag, r in (("local", rk), ("mesh", rm)):
+            assert np.allclose(np.asarray(r.residuals),
+                               np.asarray(r0.residuals),
+                               rtol=1e-4, atol=2e-6), (name, tag)
+        # mixed precision: bf16 tile streams must stay finite and track
+        # the f32 history within the bf16 envelope
+        rx = s.solve(sys_, iters=80, use_kernel=True, precision="mixed",
+                     **prm)
+        res = np.asarray(rx.residuals)
+        assert np.all(np.isfinite(res)), name
+        assert np.allclose(res, np.asarray(r0.residuals),
+                           rtol=0.5, atol=5e-2), (name, float(res[-1]))
+
+
 def smoke_serving():
     sys_ = linsys.conditioned_gaussian(n=96, m=4, cond=10.0, seed=3)
     store = FactorStore()
@@ -129,11 +198,12 @@ def main():
     mode = ("interpret" if bp.default_interpret() else "COMPILED")
     smoke_raw_ops()
     smoke_solver_paths()
+    smoke_sparse_paths()
     smoke_serving()
     print(f"kernel smoke OK ({mode}, "
           f"REPRO_PALLAS_INTERPRET={os.environ['REPRO_PALLAS_INTERPRET']}): "
-          f"raw ops + 3 solvers x local/mesh/solve_many + serving, "
-          f"bn cache {ops.bn_cache()} in {time.time()-t0:.1f}s")
+          f"raw ops + sparse/mixed + 3 solvers x local/mesh/solve_many + "
+          f"serving, bn cache {ops.bn_cache()} in {time.time()-t0:.1f}s")
 
 
 if __name__ == "__main__":

@@ -20,16 +20,41 @@ through the SAME VMEM residency of the A/B tile — one HBM read of A serves
 the whole batch, which is what makes the ``solve_many`` / ``LinsysServer``
 hot path fused rather than k replayed single-RHS kernels.
 
-Tiling: the n axis is cut into lane-aligned BN-tiles (multiple of 128); the
-p axis and the k batch live entirely in VMEM (p ≪ n by construction — each
-worker's system is highly under-determined — and k is a serving batch).  A
-tile of A (p × BN) occupies p·BN·4 bytes ≤ ~2 MB for p ≤ 512, well inside
-the ~16 MB VMEM budget, and its (k, BN)·(BN, p) MXU work is aligned when
-k, p, BN are multiples of (8, 8, 128).  The BN choice is autotuned by
-``ops.pick_bn`` (measured, cached per (p, n, dtype), env-overridable).
+Tiling: three axes are cut independently.  The n axis streams in
+lane-aligned BN tiles (multiple of 128); the p axis and the k batch may be
+cut into BP / BK sublane tiles (multiples of 8) when they outgrow VMEM —
+by default both stay whole (p ≪ n by construction and k is a serving
+batch), reproducing the original single-residency schedule.  A tile of A
+(BP × BN) occupies BP·BN·4 bytes ≤ ~2 MB for BP ≤ 512, well inside the
+~16 MB VMEM budget, and its (BK, BN)·(BN, BP) MXU work is aligned when
+BK, BP, BN are multiples of (8, 8, 128).  All three tiles are autotuned by
+``ops.pick_tiles`` (measured, cached per (k, p, n, dtype), pins
+``REPRO_KERNEL_BN`` / ``REPRO_KERNEL_BP`` / ``REPRO_KERNEL_BK``).
+
+Accumulation dtype follows the *compute* operand (x / x̄ / u), not the
+stored A/B tiles: under ``precision="mixed"`` the A and B streams are
+bf16 in HBM (half the bytes of the memory-bound pipe) while every MXU
+contraction accumulates in f32 and the iterate stays f32.
 
 The U accumulators use the sequential-grid property of TPU Pallas: every
-grid step writes the same (k, p) output block, zero-initialized at j == 0.
+grid step that revisits an output block accumulates into it, with the
+block zero-initialized on the first visit.
+
+**Sparse fused pair.**  A ``SparseBlocks`` worker block stores its values
+compressed on the support: vals (p, w) on w global columns ``cols``.  The
+compressed vals block IS a dense (p, w) tile, so the sparse kernels are
+the SAME contractions with the lane axis n replaced by the (padded)
+support width w — one VMEM residency of the vals/Bvals tile per grid
+step, streamed exactly like the dense A/B tiles:
+
+  * ``sparse_gather``          U = (X̄ₛ − Xₛ)·valsᵀ     (= apc_gather)
+  * ``sparse_cimmino_gather``  U = X̄ₛ·valsᵀ            (= cimmino_gather)
+  * ``sparse_scatter``         C = U·Bvalsᵀ            (= cimmino_scatter)
+
+The support gather Xₛ = X[:, cols] / scatter-add back to the n axis are
+XLA ops around the kernels (TPU has no lane-axis hardware gather; the
+compressed contraction is where the bytes are).  ``ops.sparse_proj_update``
+and ``ops.sparse_cimmino_update`` assemble the full sparse worker updates.
 
 All kernels are exposed through ``ops.py`` (padding + autotune + jit + vmap
 over workers) and validated in interpret mode against ``ref.py``.
@@ -69,17 +94,23 @@ def _acc_dtype(dtype):
     return jnp.float64 if dtype == jnp.float64 else jnp.float32
 
 
+def _tiles(size: int, tile: Optional[int], axis: str) -> int:
+    tile = size if tile is None else tile
+    assert size % tile == 0, (axis, size, tile)
+    return tile
+
+
 def _gather_kernel(x_ref, xbar_ref, a_ref, u_ref, *, acc_dtype):
-    """Grid step j: U += (X̄ − X)[:, j·BN:(j+1)·BN] @ A[:, j·BN:(j+1)·BN]ᵀ."""
-    j = pl.program_id(0)
+    """Grid (i, l, j): U[i, l] += (X̄ − X)[i, j] @ A[l, j]ᵀ."""
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
         u_ref[...] = jnp.zeros_like(u_ref)
 
-    d = (xbar_ref[...] - x_ref[...]).astype(acc_dtype)      # (k, BN)
-    a = a_ref[...].astype(acc_dtype)                        # (p, BN)
-    # (k, BN) @ (BN, p) on the MXU; accumulate in acc_dtype.
+    d = (xbar_ref[...] - x_ref[...]).astype(acc_dtype)      # (BK, BN)
+    a = a_ref[...].astype(acc_dtype)                        # (BP, BN)
+    # (BK, BN) @ (BN, BP) on the MXU; accumulate in acc_dtype.
     u_ref[...] += jax.lax.dot_general(
         d, a, (((1,), (1,)), ((), ())),
         preferred_element_type=acc_dtype).astype(u_ref.dtype)
@@ -87,101 +118,133 @@ def _gather_kernel(x_ref, xbar_ref, a_ref, u_ref, *, acc_dtype):
 
 def _scatter_kernel(x_ref, xbar_ref, b_ref, u_ref, g_ref, y_ref, *,
                     acc_dtype):
-    """Grid step j: Y_j = X_j + γ·(D_j − U·B_jᵀ)."""
-    d = xbar_ref[...] - x_ref[...]                          # (k, BN)
-    u = u_ref[...].astype(acc_dtype)                        # (k, p)
-    b = b_ref[...].astype(acc_dtype)                        # (BN, p)
+    """Grid (i, j, l): Y[i, j] = X + γD at l == 0, then −= γ·U[i, l]·B[j, l]ᵀ."""
+    l = pl.program_id(2)
+    gamma = g_ref[0, 0].astype(acc_dtype)
+
+    @pl.when(l == 0)
+    def _init():
+        x = x_ref[...].astype(acc_dtype)
+        d = xbar_ref[...].astype(acc_dtype) - x             # (BK, BN)
+        y_ref[...] = (x + gamma * d).astype(y_ref.dtype)
+
+    u = u_ref[...].astype(acc_dtype)                        # (BK, BP)
+    b = b_ref[...].astype(acc_dtype)                        # (BN, BP)
     bu = jax.lax.dot_general(
         u, b, (((1,), (1,)), ((), ())),
-        preferred_element_type=acc_dtype)                   # (k, BN)
-    gamma = g_ref[0, 0].astype(acc_dtype)
-    y = x_ref[...].astype(acc_dtype) + gamma * (d.astype(acc_dtype) - bu)
+        preferred_element_type=acc_dtype)                   # (BK, BN)
+    y = y_ref[...].astype(acc_dtype) - gamma * bu
     y_ref[...] = y.astype(y_ref.dtype)
 
 
 def _cim_gather_kernel(xbar_ref, a_ref, u_ref, *, acc_dtype):
-    """Grid step j: U += X̄[:, j·BN:(j+1)·BN] @ A[:, j·BN:(j+1)·BN]ᵀ."""
-    j = pl.program_id(0)
+    """Grid (i, l, j): U[i, l] += X̄[i, j] @ A[l, j]ᵀ."""
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
         u_ref[...] = jnp.zeros_like(u_ref)
 
-    xb = xbar_ref[...].astype(acc_dtype)                    # (k, BN)
-    a = a_ref[...].astype(acc_dtype)                        # (p, BN)
+    xb = xbar_ref[...].astype(acc_dtype)                    # (BK, BN)
+    a = a_ref[...].astype(acc_dtype)                        # (BP, BN)
     u_ref[...] += jax.lax.dot_general(
         xb, a, (((1,), (1,)), ((), ())),
         preferred_element_type=acc_dtype).astype(u_ref.dtype)
 
 
 def _cim_scatter_kernel(v_ref, b_ref, r_ref, *, acc_dtype):
-    """Grid step j: R_j = V·B_jᵀ  (the rank-p row projection write-out)."""
-    v = v_ref[...].astype(acc_dtype)                        # (k, p)
-    b = b_ref[...].astype(acc_dtype)                        # (BN, p)
+    """Grid (i, j, l): R[i, j] += V[i, l]·B[j, l]ᵀ (rank-BP write-out)."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    v = v_ref[...].astype(acc_dtype)                        # (BK, BP)
+    b = b_ref[...].astype(acc_dtype)                        # (BN, BP)
     r = jax.lax.dot_general(
         v, b, (((1,), (1,)), ((), ())),
-        preferred_element_type=acc_dtype)                   # (k, BN)
-    r_ref[...] = r.astype(r_ref.dtype)
+        preferred_element_type=acc_dtype)                   # (BK, BN)
+    r_ref[...] = (r_ref[...].astype(acc_dtype) + r).astype(r_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bp", "bk", "interpret"))
 def apc_gather(A, x, xbar, *, bn: int = DEFAULT_BN,
+               bp: Optional[int] = None, bk: Optional[int] = None,
                interpret: Optional[bool] = None):
     """U = (X̄ − X) Aᵀ.   A (p, n); X, X̄ (k, n) lane-layout.  n % bn == 0.
 
     k is the RHS batch (k = 1 for a plain solve): every batch row reuses
     the A tile already resident in VMEM, so one A read serves all k.
+    ``bp``/``bk`` (default: whole axis) cut the p / k axes into sublane
+    tiles; the n axis is innermost so each U block accumulates across its
+    BN stream.  Output and accumulation dtypes follow x (the compute
+    stream), so a bf16-stored A contracts into an f32 U.
     """
     if interpret is None:
         interpret = default_interpret()
     p, n = A.shape
     k = x.shape[0]
     assert n % bn == 0, (n, bn)
-    acc = _acc_dtype(A.dtype)
+    bp = _tiles(p, bp, "p")
+    bk = _tiles(k, bk, "k")
+    acc = _acc_dtype(x.dtype)
     kernel = functools.partial(_gather_kernel, acc_dtype=acc)
     return pl.pallas_call(
         kernel,
-        grid=(n // bn,),
+        grid=(k // bk, p // bp, n // bn),
         in_specs=[
-            pl.BlockSpec((k, bn), lambda j: (0, j)),      # x
-            pl.BlockSpec((k, bn), lambda j: (0, j)),      # xbar
-            pl.BlockSpec((p, bn), lambda j: (0, j)),      # A
+            pl.BlockSpec((bk, bn), lambda i, l, j: (i, j)),   # x
+            pl.BlockSpec((bk, bn), lambda i, l, j: (i, j)),   # xbar
+            pl.BlockSpec((bp, bn), lambda i, l, j: (l, j)),   # A
         ],
-        out_specs=pl.BlockSpec((k, p), lambda j: (0, 0)),  # U (accumulated)
-        out_shape=jax.ShapeDtypeStruct((k, p), A.dtype),
+        out_specs=pl.BlockSpec((bk, bp), lambda i, l, j: (i, l)),
+        out_shape=jax.ShapeDtypeStruct((k, p), x.dtype),
         interpret=interpret,
     )(x, xbar, A)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bp", "bk", "interpret"))
 def apc_scatter(B, x, xbar, u, gamma, *, bn: int = DEFAULT_BN,
+                bp: Optional[int] = None, bk: Optional[int] = None,
                 interpret: Optional[bool] = None):
-    """Y = X + γ(D − U Bᵀ).   B (n, p); X, X̄ (k, n); U (k, p); γ (1, 1)."""
+    """Y = X + γ(D − U Bᵀ).   B (n, p); X, X̄ (k, n); U (k, p); γ (1, 1).
+
+    The p axis is innermost: each Y block starts as the fused AXPY
+    X + γD on its first visit and accumulates the −γ·U·Bᵀ rank
+    correction across the BP stream.
+    """
     if interpret is None:
         interpret = default_interpret()
     n, p = B.shape
     k = x.shape[0]
     assert n % bn == 0, (n, bn)
-    acc = _acc_dtype(B.dtype)
+    bp = _tiles(p, bp, "p")
+    bk = _tiles(k, bk, "k")
+    acc = _acc_dtype(x.dtype)
     kernel = functools.partial(_scatter_kernel, acc_dtype=acc)
     return pl.pallas_call(
         kernel,
-        grid=(n // bn,),
+        grid=(k // bk, n // bn, p // bp),
         in_specs=[
-            pl.BlockSpec((k, bn), lambda j: (0, j)),      # x
-            pl.BlockSpec((k, bn), lambda j: (0, j)),      # xbar
-            pl.BlockSpec((bn, p), lambda j: (j, 0)),      # B
-            pl.BlockSpec((k, p), lambda j: (0, 0)),       # U (replicated)
-            pl.BlockSpec((1, 1), lambda j: (0, 0)),       # gamma scalar
+            pl.BlockSpec((bk, bn), lambda i, j, l: (i, j)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, l: (i, j)),   # xbar
+            pl.BlockSpec((bn, bp), lambda i, j, l: (j, l)),   # B
+            pl.BlockSpec((bk, bp), lambda i, j, l: (i, l)),   # U
+            pl.BlockSpec((1, 1), lambda i, j, l: (0, 0)),     # gamma scalar
         ],
-        out_specs=pl.BlockSpec((k, bn), lambda j: (0, j)),
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((k, n), x.dtype),
         interpret=interpret,
     )(x, xbar, B, u, gamma)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bp", "bk", "interpret"))
 def cimmino_gather(A, xbar, *, bn: int = DEFAULT_BN,
+                   bp: Optional[int] = None, bk: Optional[int] = None,
                    interpret: Optional[bool] = None):
     """U = X̄ Aᵀ.   A (p, n); X̄ (k, n).  The Cimmino gather pass A x̄."""
     if interpret is None:
@@ -189,23 +252,27 @@ def cimmino_gather(A, xbar, *, bn: int = DEFAULT_BN,
     p, n = A.shape
     k = xbar.shape[0]
     assert n % bn == 0, (n, bn)
-    acc = _acc_dtype(A.dtype)
+    bp = _tiles(p, bp, "p")
+    bk = _tiles(k, bk, "k")
+    acc = _acc_dtype(xbar.dtype)
     kernel = functools.partial(_cim_gather_kernel, acc_dtype=acc)
     return pl.pallas_call(
         kernel,
-        grid=(n // bn,),
+        grid=(k // bk, p // bp, n // bn),
         in_specs=[
-            pl.BlockSpec((k, bn), lambda j: (0, j)),      # xbar
-            pl.BlockSpec((p, bn), lambda j: (0, j)),      # A
+            pl.BlockSpec((bk, bn), lambda i, l, j: (i, j)),   # xbar
+            pl.BlockSpec((bp, bn), lambda i, l, j: (l, j)),   # A
         ],
-        out_specs=pl.BlockSpec((k, p), lambda j: (0, 0)),  # U (accumulated)
-        out_shape=jax.ShapeDtypeStruct((k, p), A.dtype),
+        out_specs=pl.BlockSpec((bk, bp), lambda i, l, j: (i, l)),
+        out_shape=jax.ShapeDtypeStruct((k, p), xbar.dtype),
         interpret=interpret,
     )(xbar, A)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bp", "bk", "interpret"))
 def cimmino_scatter(B, v, *, bn: int = DEFAULT_BN,
+                    bp: Optional[int] = None, bk: Optional[int] = None,
                     interpret: Optional[bool] = None):
     """R = V Bᵀ.   B (n, p); V (k, p).  The Cimmino scatter pass B v."""
     if interpret is None:
@@ -213,16 +280,36 @@ def cimmino_scatter(B, v, *, bn: int = DEFAULT_BN,
     n, p = B.shape
     k = v.shape[0]
     assert n % bn == 0, (n, bn)
-    acc = _acc_dtype(B.dtype)
+    bp = _tiles(p, bp, "p")
+    bk = _tiles(k, bk, "k")
+    acc = _acc_dtype(v.dtype)
     kernel = functools.partial(_cim_scatter_kernel, acc_dtype=acc)
     return pl.pallas_call(
         kernel,
-        grid=(n // bn,),
+        grid=(k // bk, n // bn, p // bp),
         in_specs=[
-            pl.BlockSpec((k, p), lambda j: (0, 0)),       # v (replicated)
-            pl.BlockSpec((bn, p), lambda j: (j, 0)),      # B
+            pl.BlockSpec((bk, bp), lambda i, j, l: (i, l)),   # v
+            pl.BlockSpec((bn, bp), lambda i, j, l: (j, l)),   # B
         ],
-        out_specs=pl.BlockSpec((k, bn), lambda j: (0, j)),
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((k, n), v.dtype),
         interpret=interpret,
     )(v, B)
+
+
+# ---------------------------------------------------------------------------
+# Sparse fused pair (compressed SparseBlocks operands)
+# ---------------------------------------------------------------------------
+#
+# A SparseBlocks worker block is already a dense (p, w) tile on its column
+# support, so the sparse kernels ARE the dense contractions with the lane
+# axis n replaced by the padded support width w — same VMEM residency, same
+# accumulation schedule, ~w/n of the HBM bytes.  The support gather
+# Xₛ = X[:, cols] and the scatter-add back to the n axis happen in XLA
+# around these calls (``ops.sparse_proj_update`` / ``sparse_cimmino_update``)
+# because the TPU has no lane-axis hardware gather; padded support slots
+# carry exact-zero vals/Bvals, so their contributions are exactly zero.
+
+sparse_gather = apc_gather            # U = (X̄ₛ − Xₛ)·valsᵀ   (p, w) tile
+sparse_cimmino_gather = cimmino_gather  # U = X̄ₛ·valsᵀ
+sparse_scatter = cimmino_scatter      # C = U·Bvalsᵀ; scatter-add via cols

@@ -54,3 +54,23 @@ def cimmino_scatter_ref(B, v):
 def cimmino_update_ref(A, B, b, xbar):
     """Full fused row projection: r = B (b - A xbar)."""
     return cimmino_scatter_ref(B, b - cimmino_gather_ref(A, xbar))
+
+
+def sparse_proj_update_ref(vals, cols, bvals, x, xbar, gamma):
+    """Sparse fused APC update on the compressed support (the oracle for
+    ``ops.sparse_proj_update``): vals (p, w) on global columns cols (w,);
+    bvals (w, p) = B_i compressed to the support.  Returns (y, u)."""
+    d = xbar - x
+    u = jnp.einsum("pw,...w->...p", vals, d[..., cols])
+    c = jnp.einsum("wp,...p->...w", bvals, u)
+    y = x + gamma * d
+    return y.at[..., cols].add(-gamma * c), u
+
+
+def sparse_cimmino_update_ref(vals, cols, bvals, b, xbar):
+    """Sparse fused Cimmino row projection (the oracle for
+    ``ops.sparse_cimmino_update``).  Returns (r, u)."""
+    u = jnp.einsum("pw,...w->...p", vals, xbar[..., cols])
+    c = jnp.einsum("wp,...p->...w", bvals, b - u)
+    r = jnp.zeros_like(xbar).at[..., cols].add(c)
+    return r, u

@@ -205,6 +205,70 @@ class Solver:
         """
         return factors
 
+    # ----- fused residual hooks -------------------------------------------
+    # A kernel-capable solver whose gather pass already computes the
+    # consumed state's residual blocks sets ``supports_fused_residual``
+    # and implements the ``*_residual`` step variants, each returning
+    # ``(new_state, rsq)`` with ``rsq`` the SQUARED residual norm of the
+    # state the step CONSUMED (scalar, or (k,) for the batched variants).
+    # The history drivers then record ‖Ax−b‖ per iteration withOUT a
+    # second full read of A: the lagged records are shifted by one and the
+    # history closes with a single true-A residual of the final state.
+    supports_fused_residual: bool = False
+
+    def step_residual(self, factors: Any, b: jnp.ndarray, state: Any,
+                      params: Dict[str, float]) -> Tuple[Any, jnp.ndarray]:
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the fused residual")
+
+    def step_many_residual(self, factors: Any, Bb: jnp.ndarray, states: Any,
+                           params: Dict[str, float]
+                           ) -> Tuple[Any, jnp.ndarray]:
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the fused residual")
+
+    def mesh_step_residual(self, factors: Any, b: jnp.ndarray, state: Any,
+                           params: Dict[str, float], ctx
+                           ) -> Tuple[Any, jnp.ndarray]:
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the fused residual")
+
+    def mesh_step_many_residual(self, factors: Any, Bb: jnp.ndarray,
+                                states: Any, params: Dict[str, float], ctx
+                                ) -> Tuple[Any, jnp.ndarray]:
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the fused residual")
+
+    # ----- mixed-precision tile streams -----------------------------------
+    def cast_factors(self, factors: Any, precision: str) -> Any:
+        """Cast the kernel tile streams to the storage precision.
+
+        ``precision="mixed"`` stores the memory-bound operand streams
+        (A/B tiles) in bfloat16 while every kernel contraction still
+        accumulates in f32 and the factorization (Cholesky) stays in the
+        working precision.  Idempotent — casting already-cast factors is
+        a no-op — so store-cached mixed factors round-trip freely.
+        """
+        if precision == "default":
+            return factors
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement precision="
+            f"{precision!r}")
+
+    def _check_precision(self, precision: str, use_kernel: bool) -> None:
+        if precision == "default":
+            return
+        if precision != "mixed":
+            raise ValueError(f"unknown precision {precision!r}; expected "
+                             f"'default' or 'mixed'")
+        if not (use_kernel and self.supports_kernel):
+            raise ValueError(
+                "precision='mixed' casts the Pallas kernel tile streams "
+                "(bf16 storage, f32 accumulation) and therefore requires "
+                "use_kernel=True on a kernel-capable solver; "
+                f"{self.name!r} was dispatched with use_kernel="
+                f"{use_kernel} (supports_kernel={self.supports_kernel})")
+
     # ----- least-squares mode hooks ---------------------------------------
     # A solver declaring "least_squares" in ``supports`` implements BOTH
     # hooks (lint rule R008 enforces this).  ``ls_moment`` is the solver's
@@ -387,7 +451,8 @@ class Solver:
                              resume=resume, **prm), prm
 
     def solve(self, sys: BlockSystem, *, iters: int = 1000, tol: float = 1e-6,
-              use_kernel: bool = False, warm_state: Any = None,
+              use_kernel: bool = False, precision: str = "default",
+              warm_state: Any = None,
               factors: Any = None, store: Any = None,
               backend: str = "local", mesh: Any = None,
               worker_axes=("data",), model_axis: Optional[str] = "model",
@@ -412,10 +477,16 @@ class Solver:
         ``alive_schedule`` (callable t -> (m,) mask, a mask array, or a
         ``runtime.fault.HeartbeatMonitor``) with EXACT semantics — see
         ``solvers/redundant.py``.
+
+        ``precision="mixed"`` (kernel path only) stores the streamed A/B
+        tiles in bfloat16 with f32 accumulation — residual histories hold
+        to the bf16 storage tolerance (~1e-2 relative) at half the HBM
+        bytes per iteration.
         """
         resume = warm_state is not None
         check_capability(self, sys, context="solve")
         use_kernel = resolve_use_kernel(self, sys, use_kernel)
+        self._check_precision(precision, use_kernel)
         if redundancy != 1 or alive_schedule is not None:
             use_mesh = self._dispatch_mesh(backend, use_kernel, mesh)
             if use_kernel:
@@ -440,13 +511,14 @@ class Solver:
                 self, sys, mesh=mesh, iters=iters, tol=tol,
                 worker_axes=worker_axes, model_axis=model_axis,
                 warm_state=warm_state, factors=factors, store=store,
-                use_kernel=use_kernel, **params)
+                use_kernel=use_kernel, precision=precision, **params)
         self._check_kernel(use_kernel)
         prm = self.resolve_params(sys, **params)
         if factors is None:
             if store is not None:
                 factors = store.factors(self, sys, use_kernel=use_kernel,
-                                        resume=resume, **prm)
+                                        resume=resume, precision=precision,
+                                        **prm)
             else:
                 if resume:
                     # a warm-start resume silently repaying the full
@@ -460,6 +532,8 @@ class Solver:
                 factors = self.prepare(sys.A_op, prm)
         if use_kernel:
             factors = self.kernel_factors(factors)
+        if precision != "default":
+            factors = self.cast_factors(factors, precision)   # idempotent
         state = (self.init(factors, sys.b_blocks, prm)
                  if warm_state is None else warm_state)
         step = lambda f, b, s: self.step(f, b, s, prm, use_kernel=use_kernel)
@@ -467,9 +541,14 @@ class Solver:
         xt = sys.x_true
         if xt is None and sys.mode == "least_squares":
             xt = jnp.asarray(self.ls_reference(sys))
+        step_res = None
+        if (use_kernel and self.supports_fused_residual
+                and residual_fn is None and iters > 0):
+            step_res = lambda f, b, s: self.step_residual(f, b, s, prm)
         state, res, err = _history_scan(step, self.extract, factors,
                                         sys.b_blocks, state, sys.A_op,
-                                        xt, iters, residual_fn=residual_fn)
+                                        xt, iters, residual_fn=residual_fn,
+                                        step_residual=step_res)
         return SolveResult(
             name=self.name, x=self.extract(state), state=state, residuals=res,
             errors=err if xt is not None else None, params=prm,
@@ -495,6 +574,7 @@ class Solver:
 
     def solve_many(self, sys: BlockSystem, B, *, iters: int = 1000,
                    tol: float = 1e-6, use_kernel: bool = False,
+                   precision: str = "default",
                    factors: Any = None, store: Any = None,
                    backend: str = "local",
                    mesh: Any = None, worker_axes=("data",),
@@ -517,13 +597,14 @@ class Solver:
                 "side, or batch without redundancy")
         check_capability(self, sys, context="solve_many")
         use_kernel = resolve_use_kernel(self, sys, use_kernel)
+        self._check_precision(precision, use_kernel)
         if self._dispatch_mesh(backend, use_kernel, mesh):
             from . import mesh as mesh_backend
             return mesh_backend.solve_many_mesh(
                 self, sys, B, mesh=mesh, iters=iters, tol=tol,
                 worker_axes=worker_axes, model_axis=model_axis,
                 factors=factors, store=store, use_kernel=use_kernel,
-                **params)
+                precision=precision, **params)
         self._check_kernel(use_kernel)
         B = jnp.asarray(B)
         if B.ndim == 1:
@@ -536,17 +617,25 @@ class Solver:
         if factors is None:
             if store is not None:
                 factors = store.factors(self, sys, use_kernel=use_kernel,
-                                        **prm)
+                                        precision=precision, **prm)
             else:
                 factors = self.prepare(sys.A_op, prm)  # once, shared
         if use_kernel:
             factors = self.kernel_factors(factors)
+        if precision != "default":
+            factors = self.cast_factors(factors, precision)   # idempotent
         states = jax.vmap(lambda b: self.init(factors, b, prm))(Bb)
         step_many = lambda f, bb, sts: self.step_many(
             f, bb, sts, prm, use_kernel=use_kernel)
+        residual_fn = self._ls_residual_fn(sys, factors, prm)
+        step_many_res = None
+        if (use_kernel and self.supports_fused_residual
+                and residual_fn is None and iters > 0):
+            step_many_res = lambda f, bb, sts: self.step_many_residual(
+                f, bb, sts, prm)
         states, res = _history_scan_many(
             step_many, self.extract, factors, Bb, states, sys.A_op, iters,
-            residual_fn=self._ls_residual_fn(sys, factors, prm))
+            residual_fn=residual_fn, step_many_residual=step_many_res)
         X = jax.vmap(self.extract)(states)
         return SolveResult(
             name=self.name, x=X, state=states, residuals=res, errors=None,
@@ -559,17 +648,41 @@ class Solver:
 
 
 def _history_scan(step, extract, factors, b, state, A, x_true, iters: int,
-                  residual_fn=None):
+                  residual_fn=None, step_residual=None):
     """Scan ``step`` for ``iters`` iterations recording residual/error.
 
     ``A`` is either the dense (m, p, n) stack or a ``SparseBlocks``
     operand; the dense matvec is the identical einsum the driver always
     used, so dense histories are bit-exact.  ``residual_fn(b, x)``
     (LS mode) replaces the plain ``||Ax-b||/||b||`` history.
+
+    ``step_residual(factors, b, state) -> (state, rsq)`` switches to the
+    FUSED residual: each step harvests ‖Ax−b‖² of the state it consumed
+    from its own gather pass, so the history costs no second full read of
+    A per iteration.  The lagged records are shifted by one and the
+    history closes with ONE true-A residual of the final state — same
+    indexing as the plain path (entry t = residual after step t+1).
     """
     b_norm = jnp.sqrt(jnp.sum(b * b))
     xt = x_true
     xt_norm = None if xt is None else jnp.linalg.norm(xt)
+
+    if step_residual is not None:
+        def body(state, _):
+            state, rsq = step_residual(factors, b, state)
+            res = jnp.sqrt(rsq) / b_norm
+            x = extract(state)
+            err = (jnp.linalg.norm(x - xt) / xt_norm) if xt is not None \
+                else res
+            return state, (res, err)
+
+        state, (res, err) = jax.lax.scan(body, state, None, length=iters)
+        r = blockops.bmatvec(A, extract(state)) - b
+        final = jnp.sqrt(jnp.sum(r * r)) / b_norm
+        res = jnp.concatenate([res[1:], final[None]])
+        if xt is None:
+            err = res          # error channel aliases the shifted history
+        return state, res, err
 
     def body(state, _):
         state = step(factors, b, state)
@@ -587,15 +700,30 @@ def _history_scan(step, extract, factors, b, state, A, x_true, iters: int,
 
 
 def _history_scan_many(step_many, extract, factors, Bb, states, A,
-                       iters: int, residual_fn=None):
+                       iters: int, residual_fn=None,
+                       step_many_residual=None):
     """Batched variant: states/Bb carry a leading (k,) RHS axis.
 
     ``step_many`` is the solver's batched iteration — a vmap of ``step``
     by default, the fused multi-RHS kernel path for the projection family
     under ``use_kernel=True``.  ``residual_fn(b, x)`` is the per-RHS LS
-    residual; it is vmapped over the batch.
+    residual; it is vmapped over the batch.  ``step_many_residual`` is the
+    batched fused-residual variant (same lagged-shift contract as
+    ``_history_scan``).
     """
     b_norms = jnp.sqrt(jnp.sum(Bb * Bb, axis=(1, 2)))
+
+    if step_many_residual is not None:
+        def body(states, _):
+            states, rsq = step_many_residual(factors, Bb, states)
+            return states, jnp.sqrt(rsq) / b_norms         # (k,)
+
+        states, res = jax.lax.scan(body, states, None, length=iters)
+        X = jax.vmap(extract)(states)
+        r = blockops.bmatvec_many(A, X) - Bb
+        final = jnp.sqrt(jnp.sum(r * r, axis=(1, 2))) / b_norms
+        res = jnp.concatenate([res[1:], final[None]], axis=0)
+        return states, res.T                               # (k, T)
 
     def body(states, _):
         states = step_many(factors, Bb, states)

@@ -10,10 +10,14 @@ solver handed a least-squares system raises a :class:`CapabilityError`
 naming the solver and the mode instead of silently diverging — the
 failure the paper's consistency assumption would otherwise hide.
 
-``use_kernel=True`` on a sparse system is a *fallback*, not an error:
-the fused Pallas engine has no sparse layout yet (ROADMAP item 2), so
-:func:`resolve_use_kernel` downgrades the flag LOUDLY (a
-``RuntimeWarning`` plus a log line) and the unfused sparse path runs.
+``use_kernel=True`` on a sparse system dispatches the fused sparse
+Pallas pair (compressed-support gather/scatter — see ``kernels/ops``)
+silently, exactly like the dense engine: :func:`resolve_use_kernel`
+only downgrades the flag — loudly, with a ``RuntimeWarning`` plus a log
+line — on the genuinely unsupported cells (a kernel-capable solver in a
+mode its kernels do not cover, or a solver with no kernel engine at
+all).  ``redundancy=`` + kernel stays a hard ``ValueError`` in
+``solve`` (the coded-block path has no kernel layout).
 """
 from __future__ import annotations
 
@@ -53,16 +57,21 @@ def check_capability(solver, sys, *, context: str = "solve") -> None:
 
 
 def resolve_use_kernel(solver, sys, use_kernel: bool) -> bool:
-    """Downgrade ``use_kernel=True`` on sparse systems — loudly.
+    """Resolve the ``use_kernel`` flag against the solver's kernel engine.
 
-    The fused Pallas engine streams dense (p, n) tiles; a sparse layout
-    is recorded future work (ROADMAP item 2).  Returns the flag to
+    Sparse systems now dispatch the fused sparse Pallas pair silently on
+    kernel-capable solvers (``supports_kernel=True``) — same contract as
+    the dense engine.  The only remaining downgrade cell is a solver
+    with *no* kernel engine at all handed ``use_kernel=True`` on a
+    sparse system; that one warns (``RuntimeWarning`` + log line) and
+    falls back to the unfused sparse path.  Returns the flag to
     actually use.
     """
-    if use_kernel and sys.is_sparse:
+    if (use_kernel and sys.is_sparse
+            and not getattr(solver, "supports_kernel", False)):
         msg = (f"use_kernel=True on a sparse system: solver "
-               f"{solver.name!r} has no sparse Pallas kernel yet "
-               f"(ROADMAP item 2); falling back to the unfused sparse "
+               f"{solver.name!r} declares supports_kernel=False (no "
+               f"Pallas engine); falling back to the unfused sparse "
                f"path")
         warnings.warn(msg, RuntimeWarning, stacklevel=3)
         log.warning(msg)

@@ -185,7 +185,8 @@ def _host_factors(solver, factors, use_kernel: bool):
 
 
 def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors,
-           store=None, resume: bool = False, use_kernel: bool = False):
+           store=None, resume: bool = False, use_kernel: bool = False,
+           precision: str = "default"):
     """Shard A/b, run on-mesh prepare (unless factors are given).
 
     With a ``store``, the ``factors is None`` branch becomes a cache
@@ -208,7 +209,8 @@ def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors,
     A = _put_tree(sys.A_op, A_spec, mesh)
     b = jax.device_put(sys.b_blocks, NamedSharding(mesh, b_spec))
     if factors is None and store is not None:
-        factors = store.lookup(solver, sys, use_kernel=use_kernel, **prm)
+        factors = store.lookup(solver, sys, use_kernel=use_kernel,
+                               precision=precision, **prm)
     if factors is None:
         prep_fn = ((lambda A_: solver.mesh_prepare(A_, prm, ctx,
                                                    use_kernel=True))
@@ -219,10 +221,14 @@ def _place(solver, sys: BlockSystem, ctx: MeshContext, prm, factors,
         factors = prep(A)
         if store is not None:
             store.insert(solver, sys, factors, resume=resume,
-                         use_kernel=use_kernel, **prm)
+                         use_kernel=use_kernel, precision=precision, **prm)
     else:
         factors = _put_tree(_host_factors(solver, factors, use_kernel),
                             fspecs, mesh)
+    if precision != "default":
+        # cast LAST: an elementwise astype preserves each leaf's sharding,
+        # and cast_factors is idempotent for store-returned mixed entries
+        factors = solver.cast_factors(factors, precision)
     return A, b, A_spec, b_spec, fspecs, factors
 
 
@@ -246,10 +252,12 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                   model_axis: Optional[str] = "model",
                   warm_state: Any = None, factors: Any = None,
                   store: Any = None, use_kernel: bool = False,
+                  precision: str = "default",
                   **params) -> CompiledSolve:
     """Placement + on-mesh setup + the jitted scan, without executing it."""
     check_capability(solver, sys, context="solve(mesh)")
     use_kernel = resolve_use_kernel(solver, sys, use_kernel)
+    solver._check_precision(precision, use_kernel)
     if mesh is None:
         mesh = _default_mesh(sys.m)
     ctx = make_context(mesh, sys, worker_axes=worker_axes,
@@ -257,7 +265,8 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
     prm = solver.resolve_params(sys, **params)
     A, b, A_spec, b_spec, fspecs, factors = _place(
         solver, sys, ctx, prm, factors, store=store,
-        resume=warm_state is not None, use_kernel=use_kernel)
+        resume=warm_state is not None, use_kernel=use_kernel,
+        precision=precision)
     sspecs = solver.mesh_state_specs(ctx)
 
     if warm_state is None:
@@ -283,6 +292,8 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                else (lambda f, b_, st: solver.mesh_step(f, b_, st, prm,
                                                         ctx)))
     ls_mode = sys.mode == "least_squares"
+    fused_res = (use_kernel and solver.supports_fused_residual
+                 and not ls_mode and iters > 0)
 
     def run_body(A_, b_, f_, s_, *rest):
         b_norm = jnp.sqrt(ctx.psum_workers(jnp.sum(b_ * b_)))
@@ -298,6 +309,29 @@ def compile_solve(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                 return jnp.sqrt(ctx.psum_model(jnp.sum(mom * mom)))
 
             ls_denom = ls_norm(jnp.zeros_like(solver.extract(s_)))
+
+        if fused_res:
+            # fused residual: every step harvests ‖Ax−b‖ of the state it
+            # CONSUMED from its own gather pass; shift the lagged records
+            # by one and close with a single true-A residual — no second
+            # per-iteration read of A
+            def body(st, _):
+                st, rsq = solver.mesh_step_residual(f_, b_, st, prm, ctx)
+                res = jnp.sqrt(rsq) / b_norm
+                if xt_ is not None:
+                    dx = solver.extract(st) - xt_
+                    err = (jnp.sqrt(ctx.psum_model(jnp.sum(dx * dx)))
+                           / xt_norm)
+                else:
+                    err = res
+                return st, (res, err)
+
+            s_, (res, err) = jax.lax.scan(body, s_, None, length=iters)
+            final = residual_shard(A_, b_, solver.extract(s_), b_norm, ctx)
+            res = jnp.concatenate([res[1:], final[None]])
+            if xt_ is None:
+                err = res
+            return s_, res, err
 
         def body(st, _):
             st = step_fn(f_, b_, st)
@@ -331,6 +365,7 @@ def solve_mesh(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
                model_axis: Optional[str] = "model",
                warm_state: Any = None, factors: Any = None,
                store: Any = None, use_kernel: bool = False,
+               precision: str = "default",
                **params) -> SolveResult:
     """Sharded ``solve``: the mesh twin of ``Solver.solve``.
 
@@ -342,7 +377,7 @@ def solve_mesh(solver, sys: BlockSystem, *, mesh: Optional[Mesh] = None,
     cs = compile_solve(solver, sys, mesh=mesh, iters=iters,
                        worker_axes=worker_axes, model_axis=model_axis,
                        warm_state=warm_state, factors=factors, store=store,
-                       use_kernel=use_kernel, **params)
+                       use_kernel=use_kernel, precision=precision, **params)
     state, res, err = cs.run(*cs.args)
     return SolveResult(
         name=solver.name, x=solver.extract(state), state=state,
@@ -374,7 +409,8 @@ class BatchedRunner(NamedTuple):
 
 def batched_runner(solver, ctx: MeshContext, prm, iters: int,
                    use_kernel: bool = False, *, a_spec: Any = None,
-                   ls_mode: bool = False) -> BatchedRunner:
+                   ls_mode: bool = False,
+                   fused_residual: bool = False) -> BatchedRunner:
     """Build the jitted multi-RHS init/run pair shared by ``solve_many_mesh``
     and the serving layer.  Nothing system-specific is baked in beyond the
     params and the mesh context: A / b / factors / states are arguments, so
@@ -383,7 +419,9 @@ def batched_runner(solver, ctx: MeshContext, prm, iters: int,
     path (projection family).  ``a_spec`` overrides the operand spec (a
     ``SparseBlocks`` spec pytree for sparse systems, see ``operand_specs``);
     ``ls_mode`` switches the residual channel to the per-RHS LS optimality
-    moment."""
+    moment; ``fused_residual`` (kernel path, square mode) harvests the
+    per-iteration history from the gather pass instead of a second full
+    read of A (lagged-shift contract, see ``api._history_scan``)."""
     mesh = ctx.mesh
     if a_spec is None:
         a_spec = P(ctx.w, None, ctx.n)
@@ -391,6 +429,8 @@ def batched_runner(solver, ctx: MeshContext, prm, iters: int,
     fspecs = _patch_factor_specs(_factor_specs(solver, ctx, use_kernel),
                                  A_spec)
     sspecs = _batched_specs(solver.mesh_state_specs(ctx))
+    fused_residual = (fused_residual and use_kernel and not ls_mode
+                      and iters > 0 and solver.supports_fused_residual)
 
     init_fn = jax.jit(shard_map(
         lambda f, Bb_: jax.vmap(
@@ -411,6 +451,20 @@ def batched_runner(solver, ctx: MeshContext, prm, iters: int,
 
             X0 = jax.vmap(solver.extract)(s_)
             ls_denoms = jax.vmap(ls_norm)(Bb_, jnp.zeros_like(X0))
+
+        if fused_residual:
+            def body(sts, _):
+                sts, rsq = solver.mesh_step_many_residual(f_, Bb_, sts,
+                                                          prm, ctx)
+                return sts, jnp.sqrt(rsq) / b_norms           # (k,)
+
+            s_, res = jax.lax.scan(body, s_, None, length=iters)
+            X = jax.vmap(solver.extract)(s_)
+            r = ctx.psum_model(blockops.bmatvec_many(A_, X)) - Bb_
+            final = jnp.sqrt(
+                ctx.psum_workers(jnp.sum(r * r, axis=(1, 2)))) / b_norms
+            res = jnp.concatenate([res[1:], final[None]], axis=0)
+            return s_, X, res.T                               # (k, T)
 
         def body(sts, _):
             sts = vstep(Bb_, sts)
@@ -441,12 +495,14 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
                     worker_axes: Sequence[str] = ("data",),
                     model_axis: Optional[str] = "model",
                     factors: Any = None, store: Any = None,
-                    use_kernel: bool = False, **params) -> SolveResult:
+                    use_kernel: bool = False, precision: str = "default",
+                    **params) -> SolveResult:
     """Sharded multi-RHS solve: one on-mesh factorization, k right-hand
     sides batched inside the shard_map body (batch axis replicated) — the
     fused multi-RHS kernels under ``use_kernel=True``."""
     check_capability(solver, sys, context="solve_many(mesh)")
     use_kernel = resolve_use_kernel(solver, sys, use_kernel)
+    solver._check_precision(precision, use_kernel)
     if mesh is None:
         mesh = _default_mesh(sys.m)
     ctx = make_context(mesh, sys, worker_axes=worker_axes,
@@ -459,10 +515,12 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
     k = B.shape[0]
     prm = solver.resolve_params(sys, **params)
     A, _, _, _, _, factors = _place(solver, sys, ctx, prm, factors,
-                                    store=store, use_kernel=use_kernel)
+                                    store=store, use_kernel=use_kernel,
+                                    precision=precision)
     runner = batched_runner(solver, ctx, prm, iters, use_kernel=use_kernel,
                             a_spec=operand_specs(sys, ctx),
-                            ls_mode=sys.mode == "least_squares")
+                            ls_mode=sys.mode == "least_squares",
+                            fused_residual=use_kernel)
 
     Bb = jax.device_put(B.reshape(k, sys.m, sys.p),
                         NamedSharding(mesh, runner.Bb_spec))

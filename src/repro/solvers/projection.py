@@ -28,8 +28,10 @@ class ProjFactors(NamedTuple):
     """b-independent per-worker factors (leading axis = worker)."""
     A: jnp.ndarray      # (m, p, n) row blocks, or a blockops.SparseBlocks
     chol: jnp.ndarray   # (m, p, p) Cholesky of Gram A_i A_i^T
-    B: Optional[jnp.ndarray] = None  # (m, n, p) pinv factors A^T G^{-1}
-                                     # (kernel path only, see kernel_factors)
+    B: Optional[jnp.ndarray] = None  # pinv factors A^T G^{-1}: (m, n, p)
+                                     # dense, (m, w, p) support-compressed
+                                     # for SparseBlocks operands (kernel
+                                     # path only, see kernel_factors)
 
 
 def _proj_prepare(A, jitter: float) -> ProjFactors:
@@ -46,11 +48,21 @@ def _proj_prepare(A, jitter: float) -> ProjFactors:
 
 
 def _with_pinv(factors: ProjFactors) -> ProjFactors:
-    """Precompute B_i = A_i^T G_i^{-1} once (iteration-invariant)."""
-    if factors.B is not None or blockops.is_sparse(factors.A):
-        # sparse operands never reach the kernel path (capability layer
-        # downgrades use_kernel loudly), so no pinv augmentation either
+    """Precompute B_i = A_i^T G_i^{-1} once (iteration-invariant).
+
+    Sparse operands get the SUPPORT-COMPRESSED pinv: B_i has rows only on
+    the block's column support, so Bvals_i = (G_i^{-1} vals_i)^T is the
+    full factor stored as (w, p) on the same ``cols`` — padded support
+    slots carry exact-zero vals columns and therefore exact-zero Bvals
+    rows, keeping every kernel contraction exact.
+    """
+    if factors.B is not None:
         return factors
+    if blockops.is_sparse(factors.A):
+        B = jax.vmap(
+            lambda Vi, Li: jax.scipy.linalg.cho_solve((Li, True), Vi).T)(
+                factors.A.vals, factors.chol)          # (m, w, p)
+        return factors._replace(B=B)
     B = jax.vmap(lambda Ai, Li: jax.scipy.linalg.cho_solve((Li, True), Ai).T)(
         factors.A, factors.chol)
     return factors._replace(B=B)
@@ -74,6 +86,33 @@ def _cho_solve_workers(chol, u):
 def _cho_solve_replicas(chol, u):
     """Replicated form: leading (m, r) worker x slot axes."""
     return jax.vmap(_cho_solve_workers)(chol, u)
+
+
+def _sparse_use_fused(family: str, Asp, k: int) -> bool:
+    """Trace-time engine choice for the compressed-support kernel pair."""
+    from repro.kernels import ops as kops
+    return kops.use_fused(family, Asp.vals.shape[1], blockops.ncols(Asp),
+                          k, Asp.vals.dtype, w=Asp.vals.shape[2])
+
+
+def _cast_proj_factors(factors: ProjFactors, precision: str) -> ProjFactors:
+    """``precision="mixed"``: bf16 storage for the streamed A/B tiles.
+
+    Only the memory-bound tile streams are cast — the Cholesky factors
+    (and every cho_solve against them) stay in the working precision, and
+    the kernels accumulate every contraction in f32 (see
+    ``kernels/block_projection``).  Residual histories then hold to the
+    bf16 storage tolerance (~1e-2 relative) while halving the HBM bytes
+    of the dominant per-iteration reads.
+    """
+    if precision == "default":
+        return factors
+    if blockops.is_sparse(factors.A):
+        A = factors.A._replace(vals=factors.A.vals.astype(jnp.bfloat16))
+    else:
+        A = factors.A.astype(jnp.bfloat16)
+    B = None if factors.B is None else factors.B.astype(jnp.bfloat16)
+    return ProjFactors(A=A, chol=factors.chol, B=B)
 
 
 def _mesh_gram_chol(A, jitter: float, ctx):
@@ -122,13 +161,27 @@ class APCSolver(Solver):
     def step(self, factors, b, state, params, *, use_kernel=False):
         gamma, eta = params["gamma"], params["eta"]
         if blockops.is_sparse(factors.A):
-            # mask-aware products on the column support (same update as the
-            # unfused mesh formulation below)
-            d = state.xbar[None, :] - state.x
-            u = blockops.bmatvec_each(factors.A, d)
-            w = _cho_solve_workers(factors.chol, u)
-            proj = d - blockops.brmatvec(factors.A, w)
-            x_new = state.x + gamma * proj
+            Asp = factors.A
+            if (use_kernel and factors.B is not None
+                    and _sparse_use_fused("apc_sparse", Asp, 1)):
+                from repro.kernels import ops as kops
+
+                # fused compressed-support pair: one VMEM residency of the
+                # (p, w) vals / (w, p) Bvals tiles per worker
+                def worker(Vi, ci, Bvi, xi):
+                    return kops.sparse_proj_update(Vi, ci, Bvi, xi,
+                                                   state.xbar, gamma)[0]
+
+                x_new = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B,
+                                         state.x)
+            else:
+                # mask-aware products on the column support (same update
+                # as the unfused mesh formulation below)
+                d = state.xbar[None, :] - state.x
+                u = blockops.bmatvec_each(factors.A, d)
+                w = _cho_solve_workers(factors.chol, u)
+                proj = d - blockops.brmatvec(factors.A, w)
+                x_new = state.x + gamma * proj
             xbar_new = (eta * jnp.mean(x_new, axis=0)
                         + (1.0 - eta) * state.xbar)
             return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
@@ -161,11 +214,27 @@ class APCSolver(Solver):
             return super().step_many(factors, Bb, states, params,
                                      use_kernel=use_kernel)
         from repro.kernels import ops as kops
+        gamma, eta = params["gamma"], params["eta"]
+        if blockops.is_sparse(factors.A):
+            Asp = factors.A
+            if not _sparse_use_fused("apc_sparse", Asp, Bb.shape[0]):
+                return super().step_many(factors, Bb, states, params,
+                                         use_kernel=False)  # measured fb
+            X = jnp.swapaxes(states.x, 0, 1)              # (m, k, n)
+
+            def worker(Vi, ci, Bvi, Xi):
+                return kops.sparse_proj_update(Vi, ci, Bvi, Xi,
+                                               states.xbar, gamma)[0]
+
+            x_new = jnp.swapaxes(jax.vmap(worker)(
+                Asp.vals, Asp.cols, factors.B, X), 0, 1)  # (k, m, n)
+            xbar_new = (eta * jnp.mean(x_new, axis=1)
+                        + (1.0 - eta) * states.xbar)
+            return APCState(x=x_new, xbar=xbar_new, t=states.t + 1)
         if not kops.use_fused("apc", factors.A.shape[1], factors.A.shape[2],
                               Bb.shape[0], factors.A.dtype):
             return super().step_many(factors, Bb, states, params,
                                      use_kernel=False)   # measured fallback
-        gamma, eta = params["gamma"], params["eta"]
         X = jnp.swapaxes(states.x, 0, 1)                  # (m, k, n)
 
         def worker(Ai, Bi, Xi):
@@ -176,6 +245,115 @@ class APCSolver(Solver):
         xbar_new = (eta * jnp.mean(x_new, axis=1)
                     + (1.0 - eta) * states.xbar)
         return APCState(x=x_new, xbar=xbar_new, t=states.t + 1)
+
+    # ----- fused residual --------------------------------------------------
+    # The iterates satisfy A_i x_i = b_i exactly (min-norm init, preserved
+    # by the projection since A_i B_i = I), so the gather pass's result
+    # u_i = A_i(x̄ − x_i) IS the residual block A_i x̄ − b_i of the CONSUMED
+    # state — the history costs no second read of A per iteration.  The
+    # drivers in ``api._history_scan`` shift the lagged records by one and
+    # close with a single true-A residual of the final state.
+    supports_fused_residual = True
+
+    def cast_factors(self, factors, precision):
+        return _cast_proj_factors(factors, precision)
+
+    def _step_u(self, factors, state, gamma):
+        """One worker update plus the gather result u (the residual
+        source); engine dispatch identical to ``step``."""
+        kern = factors.B is not None
+        sparse = blockops.is_sparse(factors.A)
+        if kern:
+            if sparse:
+                kern = _sparse_use_fused("apc_sparse", factors.A, 1)
+            else:
+                from repro.kernels import ops as kops
+                kern = kops.use_fused("apc", factors.A.shape[1],
+                                      factors.A.shape[2], 1,
+                                      factors.A.dtype)
+        if kern and sparse:
+            from repro.kernels import ops as kops
+            Asp = factors.A
+
+            def worker(Vi, ci, Bvi, xi):
+                return kops.sparse_proj_update(Vi, ci, Bvi, xi,
+                                               state.xbar, gamma)
+
+            x_new, u = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B,
+                                        state.x)
+        elif kern:
+            from repro.kernels import ops as kops
+            u = jax.vmap(
+                lambda Ai, xi: kops.proj_gather(Ai, xi, state.xbar))(
+                    factors.A, state.x)                   # (m, p)
+            x_new = jax.vmap(
+                lambda Bi, xi, ui: kops.proj_scatter(Bi, xi, state.xbar,
+                                                     ui, gamma))(
+                    factors.B, state.x, u)
+        else:
+            d = state.xbar[None, :] - state.x
+            u = blockops.bmatvec_each(factors.A, d)
+            w = _cho_solve_workers(factors.chol, u)
+            proj = d - blockops.brmatvec(factors.A, w)
+            x_new = state.x + gamma * proj
+        return x_new, u
+
+    def step_residual(self, factors, b, state, params):
+        gamma, eta = params["gamma"], params["eta"]
+        x_new, u = self._step_u(factors, state, gamma)
+        xbar_new = (eta * jnp.mean(x_new, axis=0)
+                    + (1.0 - eta) * state.xbar)
+        return (APCState(x=x_new, xbar=xbar_new, t=state.t + 1),
+                jnp.sum(u * u))
+
+    def step_many_residual(self, factors, Bb, states, params):
+        gamma, eta = params["gamma"], params["eta"]
+        kern = factors.B is not None
+        sparse = blockops.is_sparse(factors.A)
+        k = Bb.shape[0]
+        if kern:
+            if sparse:
+                kern = _sparse_use_fused("apc_sparse", factors.A, k)
+            else:
+                from repro.kernels import ops as kops
+                kern = kops.use_fused("apc", factors.A.shape[1],
+                                      factors.A.shape[2], k,
+                                      factors.A.dtype)
+        if kern:
+            from repro.kernels import ops as kops
+            X = jnp.swapaxes(states.x, 0, 1)              # (m, k, n)
+            if sparse:
+                Asp = factors.A
+
+                def worker(Vi, ci, Bvi, Xi):
+                    return kops.sparse_proj_update(Vi, ci, Bvi, Xi,
+                                                   states.xbar, gamma)
+
+                x_new, u = jax.vmap(worker)(Asp.vals, Asp.cols,
+                                            factors.B, X)
+            else:
+                u = jax.vmap(
+                    lambda Ai, Xi: kops.proj_gather(Ai, Xi, states.xbar))(
+                        factors.A, X)                     # (m, k, p)
+                x_new = jax.vmap(
+                    lambda Bi, Xi, ui: kops.proj_scatter(
+                        Bi, Xi, states.xbar, ui, gamma))(
+                            factors.B, X, u)              # (m, k, n)
+            x_new = jnp.swapaxes(x_new, 0, 1)             # (k, m, n)
+            rsq = jnp.sum(u * u, axis=(0, 2))             # (k,)
+        else:
+            def one(xk, xbark):
+                d = xbark[None, :] - xk
+                uk = blockops.bmatvec_each(factors.A, d)
+                w = _cho_solve_workers(factors.chol, uk)
+                proj = d - blockops.brmatvec(factors.A, w)
+                return xk + gamma * proj, uk
+
+            x_new, u = jax.vmap(one)(states.x, states.xbar)
+            rsq = jnp.sum(u * u, axis=(1, 2))             # (k,)
+        xbar_new = (eta * jnp.mean(x_new, axis=1)
+                    + (1.0 - eta) * states.xbar)
+        return (APCState(x=x_new, xbar=xbar_new, t=states.t + 1), rsq)
 
     def extract(self, state):
         return state.xbar
@@ -211,10 +389,23 @@ class APCSolver(Solver):
         xbar0 = ctx.psum_workers(jnp.sum(x0, axis=0)) / m
         return APCState(x=x0, xbar=xbar0, t=jnp.zeros((), jnp.int32))
 
-    def mesh_step(self, factors, b, state, params, ctx, *, use_kernel=False):
-        gamma, eta = params["gamma"], params["eta"]
+    def _mesh_step_u(self, factors, state, gamma, ctx, use_kernel):
+        """Shared Eq. 2a body on local shards: (x_new, full u)."""
         if use_kernel and factors.B is not None:
             from repro.kernels import ops as kops
+            if blockops.is_sparse(factors.A):
+                # sparse systems shard over worker axes only (model_axis
+                # is None — cols index the global n), so the per-worker
+                # fused pair composes directly and u is already full
+                Asp = factors.A
+
+                def worker(Vi, ci, Bvi, xi):
+                    return kops.sparse_proj_update(Vi, ci, Bvi, xi,
+                                                   state.xbar, gamma)
+
+                x_new, u = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B,
+                                            state.x)
+                return x_new, ctx.psum_model(u)
             u_loc = jax.vmap(
                 lambda Ai, xi: kops.proj_gather(Ai, xi, state.xbar))(
                     factors.A, state.x)               # (m_loc, p)
@@ -223,24 +414,45 @@ class APCSolver(Solver):
                 lambda Bi, xi, ui: kops.proj_scatter(Bi, xi, state.xbar,
                                                      ui, gamma))(
                     factors.B, state.x, u)            # Eq. 2a, fused
-        else:
-            d = state.xbar[None, :] - state.x             # (m_loc, n_loc)
-            u = ctx.psum_model(blockops.bmatvec_each(factors.A, d))
-            w = _cho_solve_workers(factors.chol, u)       # G^{-1} A_i d
-            proj = d - blockops.brmatvec(factors.A, w)
-            x_new = state.x + gamma * proj                # Eq. 2a
+            return x_new, u
+        d = state.xbar[None, :] - state.x             # (m_loc, n_loc)
+        u = ctx.psum_model(blockops.bmatvec_each(factors.A, d))
+        w = _cho_solve_workers(factors.chol, u)       # G^{-1} A_i d
+        proj = d - blockops.brmatvec(factors.A, w)
+        return state.x + gamma * proj, u              # Eq. 2a
+
+    def mesh_step(self, factors, b, state, params, ctx, *, use_kernel=False):
+        gamma, eta = params["gamma"], params["eta"]
+        x_new, _ = self._mesh_step_u(factors, state, gamma, ctx, use_kernel)
         m = ctx.workers_total(x_new.shape[0])
         s = ctx.psum_workers(jnp.sum(x_new, axis=0))      # Eq. 2b psum
         xbar_new = (eta / m) * s + (1.0 - eta) * state.xbar
         return APCState(x=x_new, xbar=xbar_new, t=state.t + 1)
 
-    def mesh_step_many(self, factors, Bb, states, params, ctx, *,
-                       use_kernel=False):
-        if not (use_kernel and factors.B is not None):
-            return super().mesh_step_many(factors, Bb, states, params, ctx)
-        from repro.kernels import ops as kops
+    def mesh_step_residual(self, factors, b, state, params, ctx):
+        """Mesh step plus the consumed state's GLOBAL squared residual,
+        psum'd from the gather results (see the local hook)."""
         gamma, eta = params["gamma"], params["eta"]
+        x_new, u = self._mesh_step_u(factors, state, gamma, ctx, True)
+        m = ctx.workers_total(x_new.shape[0])
+        s = ctx.psum_workers(jnp.sum(x_new, axis=0))
+        xbar_new = (eta / m) * s + (1.0 - eta) * state.xbar
+        rsq = ctx.psum_workers(jnp.sum(u * u))
+        return APCState(x=x_new, xbar=xbar_new, t=state.t + 1), rsq
+
+    def _mesh_step_many_u(self, factors, states, gamma, ctx):
+        """Batched Eq. 2a body: (x_new (k, m_loc, n_loc), full u)."""
+        from repro.kernels import ops as kops
         X = jnp.swapaxes(states.x, 0, 1)                  # (m_loc, k, n_loc)
+        if blockops.is_sparse(factors.A):
+            Asp = factors.A
+
+            def worker(Vi, ci, Bvi, Xi):
+                return kops.sparse_proj_update(Vi, ci, Bvi, Xi,
+                                               states.xbar, gamma)
+
+            x_new, u = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B, X)
+            return jnp.swapaxes(x_new, 0, 1), ctx.psum_model(u)
         u_loc = jax.vmap(
             lambda Ai, Xi: kops.proj_gather(Ai, Xi, states.xbar))(
                 factors.A, X)                             # (m_loc, k, p)
@@ -249,10 +461,38 @@ class APCSolver(Solver):
             lambda Bi, Xi, ui: kops.proj_scatter(Bi, Xi, states.xbar,
                                                  ui, gamma))(
                 factors.B, X, u), 0, 1)                   # (k, m_loc, n_loc)
+        return x_new, u
+
+    def mesh_step_many(self, factors, Bb, states, params, ctx, *,
+                       use_kernel=False):
+        if not (use_kernel and factors.B is not None):
+            return super().mesh_step_many(factors, Bb, states, params, ctx)
+        gamma, eta = params["gamma"], params["eta"]
+        x_new, _ = self._mesh_step_many_u(factors, states, gamma, ctx)
         m = ctx.workers_total(x_new.shape[1])
         s = ctx.psum_workers(jnp.sum(x_new, axis=1))      # (k, n_loc)
         xbar_new = (eta / m) * s + (1.0 - eta) * states.xbar
         return APCState(x=x_new, xbar=xbar_new, t=states.t + 1)
+
+    def mesh_step_many_residual(self, factors, Bb, states, params, ctx):
+        gamma, eta = params["gamma"], params["eta"]
+        if factors.B is not None:
+            x_new, u = self._mesh_step_many_u(factors, states, gamma, ctx)
+            rsq = ctx.psum_workers(jnp.sum(u * u, axis=(0, 2)))   # (k,)
+        else:
+            def one(xk, xbark):
+                d = xbark[None, :] - xk
+                uk = ctx.psum_model(blockops.bmatvec_each(factors.A, d))
+                w = _cho_solve_workers(factors.chol, uk)
+                proj = d - blockops.brmatvec(factors.A, w)
+                return xk + gamma * proj, uk
+
+            x_new, u = jax.vmap(one)(states.x, states.xbar)
+            rsq = ctx.psum_workers(jnp.sum(u * u, axis=(1, 2)))
+        m = ctx.workers_total(x_new.shape[1])
+        s = ctx.psum_workers(jnp.sum(x_new, axis=1))
+        xbar_new = (eta / m) * s + (1.0 - eta) * states.xbar
+        return APCState(x=x_new, xbar=xbar_new, t=states.t + 1), rsq
 
     # ----- redundant execution (solvers/redundant.py) ---------------------
     # Internal state keeps the APCState structure with x grown to the
@@ -349,15 +589,29 @@ class CimminoSolver(Solver):
 
     def init(self, factors, b, params):
         n = blockops.ncols(factors.A)
-        return CimminoState(xbar=jnp.zeros(n, blockops.block_dtype(factors.A)),
+        # state dtype follows b, not the stored blocks: under
+        # precision="mixed" the A/B tiles are bf16 storage but the
+        # iterate (and every accumulation) stays in the working precision
+        return CimminoState(xbar=jnp.zeros(n, b.dtype),
                             t=jnp.zeros((), jnp.int32))
 
     def step(self, factors, b, state, params, *, use_kernel=False):
         nu = params["nu"]
         if blockops.is_sparse(factors.A):
-            u = blockops.bmatvec(factors.A, state.xbar)
-            w = _cho_solve_workers(factors.chol, b - u)
-            r = blockops.brmatvec(factors.A, w)       # row projections
+            Asp = factors.A
+            if (use_kernel and factors.B is not None
+                    and _sparse_use_fused("cimmino_sparse", Asp, 1)):
+                from repro.kernels import ops as kops
+
+                def worker(Vi, ci, Bvi, bi):
+                    return kops.sparse_cimmino_update(Vi, ci, Bvi, bi,
+                                                      state.xbar)[0]
+
+                r = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B, b)
+            else:
+                u = blockops.bmatvec(factors.A, state.xbar)
+                w = _cho_solve_workers(factors.chol, b - u)
+                r = blockops.brmatvec(factors.A, w)   # row projections
             return CimminoState(xbar=state.xbar + nu * jnp.sum(r, axis=0),
                                 t=state.t + 1)
         kern = use_kernel and factors.B is not None
@@ -394,6 +648,21 @@ class CimminoSolver(Solver):
             return super().step_many(factors, Bb, states, params,
                                      use_kernel=use_kernel)
         from repro.kernels import ops as kops
+        if blockops.is_sparse(factors.A):
+            Asp = factors.A
+            if not _sparse_use_fused("cimmino_sparse", Asp, Bb.shape[0]):
+                return super().step_many(factors, Bb, states, params,
+                                         use_kernel=False)  # measured fb
+            bw = jnp.swapaxes(Bb, 0, 1)                   # (m, k, p)
+
+            def worker(Vi, ci, Bvi, bi):
+                return kops.sparse_cimmino_update(Vi, ci, Bvi, bi,
+                                                  states.xbar)[0]
+
+            r = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B, bw)
+            return CimminoState(
+                xbar=states.xbar + params["nu"] * jnp.sum(r, 0),
+                t=states.t + 1)
         if not kops.use_fused("cimmino", factors.A.shape[1],
                               factors.A.shape[2], Bb.shape[0],
                               factors.A.dtype):
@@ -407,6 +676,69 @@ class CimminoSolver(Solver):
         r = jax.vmap(worker)(factors.A, factors.B, bw)    # (m, k, n)
         return CimminoState(xbar=states.xbar + params["nu"] * jnp.sum(r, 0),
                             t=states.t + 1)
+
+    # ----- fused residual --------------------------------------------------
+    # The gather result u_i = A_i x̄ gives the consumed state's residual
+    # blocks directly: A x̄ − b = u − b = −v where v = b − u is exactly the
+    # operand the scatter consumes, so the history rides along for free.
+    supports_fused_residual = True
+
+    def cast_factors(self, factors, precision):
+        return _cast_proj_factors(factors, precision)
+
+    def _r_v(self, factors, b, xbar):
+        """Row projections r plus v = b − A x̄ (the residual source);
+        engine dispatch identical to ``step``.  Batch-polymorphic: b may
+        be (m, p) or (m, k, p) with xbar (n,) / (k, n)."""
+        k = b.shape[1] if b.ndim == 3 else 1
+        sparse = blockops.is_sparse(factors.A)
+        kern = factors.B is not None
+        if kern:
+            if sparse:
+                kern = _sparse_use_fused("cimmino_sparse", factors.A, k)
+            else:
+                from repro.kernels import ops as kops
+                kern = kops.use_fused("cimmino", factors.A.shape[1],
+                                      factors.A.shape[2], k,
+                                      factors.A.dtype)
+        if kern and sparse:
+            from repro.kernels import ops as kops
+            Asp = factors.A
+
+            def worker(Vi, ci, Bvi, bi):
+                return kops.sparse_cimmino_update(Vi, ci, Bvi, bi, xbar)
+
+            r, u = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B, b)
+        elif kern:
+            from repro.kernels import ops as kops
+            u = jax.vmap(lambda Ai: kops.cimmino_gather(Ai, xbar))(
+                factors.A)                                # (m[, k], p)
+            r = jax.vmap(kops.cimmino_scatter)(factors.B, b - u)
+        else:
+            def one(bk, xk):
+                uk = blockops.bmatvec(factors.A, xk)      # (m, p)
+                wk = _cho_solve_workers(factors.chol, bk - uk)
+                return blockops.brmatvec(factors.A, wk), bk - uk
+
+            if b.ndim == 2:
+                return one(b, xbar)
+            # batched: map the k axis (b (m, k, p) ax 1, xbar (k, n) ax 0)
+            return jax.vmap(one, in_axes=(1, 0), out_axes=(1, 1))(b, xbar)
+        return r, b - u
+
+    def step_residual(self, factors, b, state, params):
+        r, v = self._r_v(factors, b, state.xbar)
+        return (CimminoState(xbar=state.xbar + params["nu"] * jnp.sum(r, 0),
+                             t=state.t + 1),
+                jnp.sum(v * v))
+
+    def step_many_residual(self, factors, Bb, states, params):
+        bw = jnp.swapaxes(Bb, 0, 1)                       # (m, k, p)
+        r, v = self._r_v(factors, bw, states.xbar)        # (m, k, n/p)
+        rsq = jnp.sum(v * v, axis=(0, 2))                 # (k,)
+        return (CimminoState(
+            xbar=states.xbar + params["nu"] * jnp.sum(r, 0),
+            t=states.t + 1), rsq)
 
     def extract(self, state):
         return state.xbar
@@ -432,19 +764,42 @@ class CimminoSolver(Solver):
             factors = _with_pinv(factors)     # shard-local, see APCSolver
         return factors
 
-    def mesh_step(self, factors, b, state, params, ctx, *, use_kernel=False):
+    def _mesh_r_v(self, factors, b, xbar, ctx, use_kernel):
+        """Local row projections r plus full v = b − A x̄ (the residual
+        source) from local shards."""
         if use_kernel and factors.B is not None:
             from repro.kernels import ops as kops
+            if blockops.is_sparse(factors.A):
+                # sparse systems shard over worker axes only (cols index
+                # the global n), so the fused pair composes per worker
+                Asp = factors.A
+
+                def worker(Vi, ci, Bvi, bi):
+                    return kops.sparse_cimmino_update(Vi, ci, Bvi, bi, xbar)
+
+                r, u = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B, b)
+                return r, b - ctx.psum_model(u)
             u = ctx.psum_model(jax.vmap(
-                lambda Ai: kops.cimmino_gather(Ai, state.xbar))(factors.A))
-            r = jax.vmap(kops.cimmino_scatter)(factors.B, b - u)
-        else:
-            u = ctx.psum_model(blockops.bmatvec(factors.A, state.xbar))
-            w = _cho_solve_workers(factors.chol, b - u)   # G^{-1}(b - A xbar)
-            r = blockops.brmatvec(factors.A, w)           # row projections
+                lambda Ai: kops.cimmino_gather(Ai, xbar))(factors.A))
+            return jax.vmap(kops.cimmino_scatter)(factors.B, b - u), b - u
+        u = ctx.psum_model(blockops.bmatvec(factors.A, xbar))
+        w = _cho_solve_workers(factors.chol, b - u)   # G^{-1}(b - A xbar)
+        return blockops.brmatvec(factors.A, w), b - u  # row projections
+
+    def mesh_step(self, factors, b, state, params, ctx, *, use_kernel=False):
+        r, _ = self._mesh_r_v(factors, b, state.xbar, ctx, use_kernel)
         s = ctx.psum_workers(jnp.sum(r, axis=0))
         return CimminoState(xbar=state.xbar + params["nu"] * s,
                             t=state.t + 1)
+
+    def mesh_step_residual(self, factors, b, state, params, ctx):
+        """Mesh step plus ‖A x̄ − b‖² of the CONSUMED state, harvested
+        from the gather pass (v = b − A x̄)."""
+        r, v = self._mesh_r_v(factors, b, state.xbar, ctx, True)
+        s = ctx.psum_workers(jnp.sum(r, axis=0))
+        rsq = ctx.psum_workers(jnp.sum(v * v))
+        return CimminoState(xbar=state.xbar + params["nu"] * s,
+                            t=state.t + 1), rsq
 
     # ----- least-squares mode ---------------------------------------------
     # The Cimmino fixed point minimizes Σᵢ ‖L_i^{-1}(A_i x − b_i)‖² — the
@@ -470,19 +825,51 @@ class CimminoSolver(Solver):
                                 rcond=None)
         return jnp.asarray(x, dtype=sys.b_blocks.dtype)
 
+    def _mesh_r_v_many(self, factors, Bb, xbar, ctx):
+        """Batched kernel-path row projections: r (m_loc, k, n_loc) and
+        v = b − A x̄ (m_loc, k, p).  Bb (k, m_loc, p); x̄ (k, n_loc)."""
+        from repro.kernels import ops as kops
+        bw = jnp.swapaxes(Bb, 0, 1)                       # (m_loc, k, p)
+        if blockops.is_sparse(factors.A):
+            Asp = factors.A
+
+            def worker(Vi, ci, Bvi, bi):
+                return kops.sparse_cimmino_update(Vi, ci, Bvi, bi, xbar)
+
+            r, u = jax.vmap(worker)(Asp.vals, Asp.cols, factors.B, bw)
+            return r, bw - ctx.psum_model(u)
+        # gather is RHS-batched per worker
+        u = ctx.psum_model(jax.vmap(
+            lambda Ai: kops.cimmino_gather(Ai, xbar))(factors.A))
+        v = bw - u                                        # (m_loc, k, p)
+        return jax.vmap(kops.cimmino_scatter)(factors.B, v), v
+
     def mesh_step_many(self, factors, Bb, states, params, ctx, *,
                        use_kernel=False):
         if not (use_kernel and factors.B is not None):
             return super().mesh_step_many(factors, Bb, states, params, ctx)
-        from repro.kernels import ops as kops
-        # Bb (k, m_loc, p); x̄ (k, n_loc); gather is RHS-batched per worker
-        u = ctx.psum_model(jax.vmap(
-            lambda Ai: kops.cimmino_gather(Ai, states.xbar))(factors.A))
-        v = jnp.swapaxes(Bb, 0, 1) - u                    # (m_loc, k, p)
-        r = jax.vmap(kops.cimmino_scatter)(factors.B, v)  # (m_loc, k, n_loc)
+        r, _ = self._mesh_r_v_many(factors, Bb, states.xbar, ctx)
         s = ctx.psum_workers(jnp.sum(r, axis=0))          # (k, n_loc)
         return CimminoState(xbar=states.xbar + params["nu"] * s,
                             t=states.t + 1)
+
+    def mesh_step_many_residual(self, factors, Bb, states, params, ctx):
+        if factors.B is not None:
+            r, v = self._mesh_r_v_many(factors, Bb, states.xbar, ctx)
+            s = ctx.psum_workers(jnp.sum(r, axis=0))
+            rsq = ctx.psum_workers(jnp.sum(v * v, axis=(0, 2)))   # (k,)
+        else:
+            def one(bk, xk):
+                uk = ctx.psum_model(blockops.bmatvec(factors.A, xk))
+                vk = bk - uk
+                wk = _cho_solve_workers(factors.chol, vk)
+                return blockops.brmatvec(factors.A, wk), vk
+
+            r, v = jax.vmap(one)(Bb, states.xbar)         # (k, m_loc, ·)
+            s = ctx.psum_workers(jnp.sum(r, axis=1))
+            rsq = ctx.psum_workers(jnp.sum(v * v, axis=(1, 2)))
+        return CimminoState(xbar=states.xbar + params["nu"] * s,
+                            t=states.t + 1), rsq
 
     # ----- redundant execution (solvers/redundant.py) ---------------------
     # State is the master estimate alone (already global-shaped): the

@@ -103,8 +103,8 @@ class _System:
     prm: Dict[str, float]
     dtype: Any                      # A's dtype, read once at register()
     executor_key: Tuple             # compile-once cache key, built once
-    use_kernel: bool = False        # per-system resolution (sparse systems
-                                    # downgrade the server-level flag)
+    use_kernel: bool = False        # per-system resolution (downgraded only
+                                    # for solvers with no kernel engine)
     A_placed: Any = None            # backend-placed A blocks
     factors_placed: Any = None      # backend-placed factors
     placed_src: Any = None          # host factors the placement came from
@@ -122,6 +122,9 @@ class _LocalExecutor:
 
     def __init__(self, solver, prm, iters: int, use_kernel: bool = False,
                  ls_mode: bool = False):
+        fused_res = (use_kernel and solver.supports_fused_residual
+                     and not ls_mode and iters > 0)
+
         def _residual_fn(A, factors):
             if not ls_mode:
                 return None
@@ -135,9 +138,12 @@ class _LocalExecutor:
         def _run(A, factors, Bb, states):
             step_many = lambda f, bb, sts: solver.step_many(
                 f, bb, sts, prm, use_kernel=use_kernel)
+            step_many_res = (lambda f, bb, sts: solver.step_many_residual(
+                f, bb, sts, prm)) if fused_res else None
             states, res = _history_scan_many(
                 step_many, solver.extract, factors, Bb, states, A, iters,
-                residual_fn=_residual_fn(A, factors))
+                residual_fn=_residual_fn(A, factors),
+                step_many_residual=step_many_res)
             return states, jax.vmap(solver.extract)(states), res
 
         def _cold(A, factors, Bb):
@@ -182,7 +188,8 @@ class _MeshExecutor:
         self.runner = mesh_backend.batched_runner(
             solver, self.ctx, prm, iters, use_kernel=use_kernel,
             a_spec=mesh_backend.operand_specs(sys, self.ctx),
-            ls_mode=sys.mode == "least_squares")
+            ls_mode=sys.mode == "least_squares",
+            fused_residual=use_kernel)
 
     def place_system(self, sys: BlockSystem, factors):
         from . import mesh as mesh_backend
@@ -222,6 +229,7 @@ class LinsysServer:
                  solver="apc", iters: int = 500, tol: float = 1e-6,
                  batch: int = 4, backend: str = "local", mesh=None,
                  warm_start: bool = False, use_kernel: bool = False,
+                 precision: str = "default",
                  worker_axes: Sequence[str] = ("data",),
                  model_axis: Optional[str] = "model", **params):
         if backend not in ("local", "mesh"):
@@ -233,10 +241,12 @@ class LinsysServer:
         self.store = store if store is not None else FactorStore()
         self.solver = get(solver) if isinstance(solver, str) else solver
         self.solver._check_kernel(use_kernel)
+        self.solver._check_precision(precision, use_kernel)
         self.iters, self.tol, self.batch = iters, tol, batch
         self.backend, self.mesh = backend, mesh
         self.warm_start = warm_start
         self.use_kernel = use_kernel
+        self.precision = precision
         self.worker_axes, self.model_axis = tuple(worker_axes), model_axis
         self.params = params
         self.stats = ServerStats()
@@ -254,17 +264,22 @@ class LinsysServer:
 
         Capability is checked HERE — an unservable (solver, system-mode)
         pair fails at registration, not on the first request.  The kernel
-        flag resolves per system: sparse systems downgrade it (loudly)
-        while dense ones on the same server keep the fused path."""
+        flag resolves per system: sparse systems on kernel-capable solvers
+        keep the fused path (the compressed-support Pallas pair); only a
+        solver with no kernel engine downgrades it, loudly."""
         check_capability(self.solver, sys, context="register")
         use_kernel = resolve_use_kernel(self.solver, sys, self.use_kernel)
+        # re-check per system: a sparse downgrade of the kernel flag must
+        # not silently serve full-precision under precision="mixed"
+        self.solver._check_precision(self.precision, use_kernel)
         prm = self.solver.resolve_params(sys, **{**self.params, **params})
-        fp = self.store.key(self.solver, sys, **prm)
+        fp = self.store.key(self.solver, sys, precision=self.precision,
+                            **prm)
         dtype = sys.A_blocks.dtype
         executor_key = (self.solver.name, sys.m, sys.p, sys.n, str(dtype),
                         sys.structure, sys.mode,
                         tuple(sorted(prm.items())), self.backend,
-                        self.batch, self.iters, use_kernel)
+                        self.batch, self.iters, use_kernel, self.precision)
         self._systems[fp] = _System(sys=sys, prm=prm, dtype=dtype,
                                     executor_key=executor_key,
                                     use_kernel=use_kernel)
@@ -357,7 +372,8 @@ class LinsysServer:
         # the kernel path augments the cached entry with the pinv factors
         # exactly once — ``kernel_factors`` is idempotent)
         factors = self.store.factors(self.solver, ent.sys, key=fp,
-                                     use_kernel=ent.use_kernel, **ent.prm)
+                                     use_kernel=ent.use_kernel,
+                                     precision=self.precision, **ent.prm)
         ex = self._executor(ent)
         if ent.placed_src is not factors:     # first batch / post-eviction
             ent.A_placed, ent.factors_placed = ex.place_system(ent.sys,

@@ -59,7 +59,7 @@ log = logging.getLogger("repro.solvers.store")
 
 
 def fingerprint(solver_name: str, sys: BlockSystem,
-                params: Dict[str, Any]) -> str:
+                params: Dict[str, Any], precision: str = "default") -> str:
     """Content hash identifying (A-blocks, partition, solver, params).
 
     Everything ``prepare`` can depend on is in the digest; b is NOT — the
@@ -71,6 +71,11 @@ def fingerprint(solver_name: str, sys: BlockSystem,
     there, so a sparse system and its densified twin hold the SAME values
     but different factor pytrees — they must never share a slot.  Dense
     digests are byte-identical to what they always were.
+
+    A non-default ``precision`` (mixed bf16 tile streams) enters the
+    digest too — a cast entry must never serve a full-precision request —
+    while ``precision="default"`` adds NOTHING, keeping every existing
+    fingerprint byte-stable.
     """
     A = np.asarray(jax.device_get(sys.A_blocks))
     h = hashlib.sha256()
@@ -92,6 +97,8 @@ def fingerprint(solver_name: str, sys: BlockSystem,
         h.update(b"structure=sparse")
         h.update(f"support={tuple(cols.shape)}".encode())
         h.update(np.ascontiguousarray(cols).tobytes())
+    if precision != "default":
+        h.update(f"precision={precision}".encode())
     return h.hexdigest()
 
 
@@ -194,15 +201,17 @@ class FactorStore:
             return get(solver)
         return solver
 
-    def key(self, solver, sys: BlockSystem, **params) -> str:
+    def key(self, solver, sys: BlockSystem, *, precision: str = "default",
+            **params) -> str:
         """The content-addressed key a ``factors`` call would use."""
         solver = self._as_solver(solver)
         prm = solver.resolve_params(sys, **params)
-        return fingerprint(solver.name, sys, prm)
+        return fingerprint(solver.name, sys, prm, precision)
 
     # ----- the one way to obtain factors ------------------------------------
     def factors(self, solver, sys: BlockSystem, *, use_kernel: bool = False,
-                resume: bool = False, key: Optional[str] = None, **params):
+                resume: bool = False, key: Optional[str] = None,
+                precision: str = "default", **params):
         """Cached ``solver.prepare(sys.A_op, params)``.
 
         Lookup order: memory LRU -> disk tier -> full ``prepare`` (counted
@@ -211,18 +220,23 @@ class FactorStore:
         hot serving paths.  ``resume=True`` marks the call as part of a
         warm-start resume so a miss there is counted separately — resume
         cost should be visible, not silent.
+
+        ``precision="mixed"`` entries live under their OWN fingerprint and
+        cache the already-cast factors (prepare and the pinv augmentation
+        still run in full precision on a miss; the cast happens last).
         """
         solver = self._as_solver(solver)
         prm = solver.resolve_params(sys, **params)
         if key is None:
-            key = fingerprint(solver.name, sys, prm)
+            key = fingerprint(solver.name, sys, prm, precision)
         factors = self.lookup(solver, sys, key=key, use_kernel=use_kernel,
-                              **prm)
+                              precision=precision, **prm)
         if factors is None:
             factors = self.insert(solver, sys,
                                   solver.prepare(sys.A_op, prm),
                                   resume=resume, key=key,
-                                  use_kernel=use_kernel, **prm)
+                                  use_kernel=use_kernel,
+                                  precision=precision, **prm)
         return factors
 
     def _augment(self, solver, key: str, factors):
@@ -236,7 +250,7 @@ class FactorStore:
 
     def lookup(self, solver, sys: BlockSystem, *,
                key: Optional[str] = None, use_kernel: bool = False,
-               **params):
+               precision: str = "default", **params):
         """Memory/disk lookup that does NOT prepare on a miss (returns
         None instead).  Backends whose factorization should not run on
         the host (the mesh backend prepares on-mesh under shard_map) use
@@ -248,7 +262,7 @@ class FactorStore:
         solver = self._as_solver(solver)
         if key is None:
             prm = solver.resolve_params(sys, **params)
-            key = fingerprint(solver.name, sys, prm)
+            key = fingerprint(solver.name, sys, prm, precision)
         factors = self._mem.get(key)
         if factors is not None:
             self._mem.move_to_end(key)
@@ -265,18 +279,23 @@ class FactorStore:
 
     def insert(self, solver, sys: BlockSystem, factors, *,
                resume: bool = False, key: Optional[str] = None,
-               use_kernel: bool = False, **params):
+               use_kernel: bool = False, precision: str = "default",
+               **params):
         """Record a caller-prepared factorization: counts the miss the
         caller just repaid, persists to the disk tier, and caches it.
         ``use_kernel=True`` ensures the cached entry carries the pinv
         augmentation (a no-op when the caller's prepare — e.g. the
-        on-mesh kernel ``mesh_prepare`` — already computed it)."""
+        on-mesh kernel ``mesh_prepare`` — already computed it); a
+        non-default ``precision`` casts the tile streams LAST, so the
+        cached entry is the cast one (``cast_factors`` is idempotent)."""
         solver = self._as_solver(solver)
         prm = solver.resolve_params(sys, **params)
         if key is None:
-            key = fingerprint(solver.name, sys, prm)
+            key = fingerprint(solver.name, sys, prm, precision)
         if use_kernel:
             factors = solver.kernel_factors(factors)
+        if precision != "default":
+            factors = solver.cast_factors(factors, precision)
         self.stats.misses += 1
         if resume:
             self.stats.resume_misses += 1

@@ -1,0 +1,224 @@
+"""Tile-padding exactness and mixed-precision corner cases for PR 9.
+
+The kernel engine pads every operand to (8, 128) tile multiples and, for
+sparse systems, compresses the column axis to the per-worker support
+width ``w``.  These tests pin the contract at the awkward shapes where
+padding bugs hide: odd ``w``, one-row workers (``p=1``), and ``n`` that
+is not a multiple of the 128 lane width — through solve, solve_many,
+and the mesh backend.  The mixed-precision tests pin the bf16 tile
+stream's tolerance envelope, the store-fingerprint split, and the
+``_check_precision`` rejection surface.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.data import linsys
+from repro.launch import mesh as mesh_lib
+from repro.solvers.store import FactorStore
+
+# f32 relative-residual histories sit at the ~1e-7 floor late in a run,
+# so history parity is an absolute comparison (see test_modes.py).
+HIST_TOL = dict(rtol=1e-4, atol=2e-6)
+X_TOL = dict(rtol=1e-5, atol=1e-6)
+# bf16 has ~3 decimal digits: the mixed tile stream floors histories
+# near 1e-2 on well-conditioned systems.
+MIXED_TOL = dict(rtol=0.5, atol=5e-2)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return mesh_lib.solver_mesh(1, 1)
+
+
+# odd support width AND n not a multiple of 128 (p=65, w=65+2*6=77);
+# p=1 workers (n=24, m=24); plain even case as control.
+CORNER_SYSTEMS = [
+    pytest.param(dict(n=130, m=2, bandwidth=6), id="odd-w-n130"),
+    pytest.param(dict(n=24, m=24, bandwidth=2), id="p1"),
+    pytest.param(dict(n=192, m=4, bandwidth=6), id="even"),
+]
+
+
+def _sys(spec):
+    return linsys.banded_system(seed=0, **spec)
+
+
+@pytest.mark.parametrize("spec", CORNER_SYSTEMS)
+@pytest.mark.parametrize("name", ["apc", "cimmino"])
+def test_sparse_kernel_exact_at_corner_shapes(spec, name):
+    sys_ = _sys(spec)
+    s = solvers.get(name)
+    prm = s.resolve_params(sys_)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        r_k = s.solve(sys_, iters=80, use_kernel=True, **prm)
+    r = s.solve(sys_, iters=80, **prm)
+    np.testing.assert_allclose(np.asarray(r_k.x), np.asarray(r.x), **X_TOL)
+    np.testing.assert_allclose(np.asarray(r_k.residuals),
+                               np.asarray(r.residuals), **HIST_TOL)
+
+
+@pytest.mark.parametrize("spec", CORNER_SYSTEMS)
+def test_sparse_kernel_solve_many_exact_at_corner_shapes(spec):
+    sys_ = _sys(spec)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    rng = np.random.default_rng(7)
+    B = rng.standard_normal((3, sys_.N))
+    r_k = s.solve_many(sys_, B, iters=60, use_kernel=True, **prm)
+    r = s.solve_many(sys_, B, iters=60, **prm)
+    np.testing.assert_allclose(np.asarray(r_k.x), np.asarray(r.x), **X_TOL)
+    np.testing.assert_allclose(np.asarray(r_k.residuals),
+                               np.asarray(r.residuals), **HIST_TOL)
+
+
+@pytest.mark.parametrize("spec", CORNER_SYSTEMS)
+def test_sparse_kernel_mesh_exact_at_corner_shapes(spec, mesh):
+    sys_ = _sys(spec)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    r_k = s.solve(sys_, iters=60, use_kernel=True, backend="mesh",
+                  mesh=mesh, **prm)
+    r = s.solve(sys_, iters=60, **prm)
+    np.testing.assert_allclose(np.asarray(r_k.x), np.asarray(r.x), **X_TOL)
+    np.testing.assert_allclose(np.asarray(r_k.residuals),
+                               np.asarray(r.residuals), **HIST_TOL)
+
+
+# ---------------------------------------------------------------------------
+# fused residual: kernel solves measure ||Ax-b|| inside the step pass;
+# histories must match the separate-pass (unfused) measurement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["apc", "cimmino"])
+def test_fused_residual_history_matches_unfused(name):
+    sys_ = linsys.banded_system(n=192, m=4, bandwidth=6, seed=1)
+    s = solvers.get(name)
+    assert s.supports_fused_residual
+    prm = s.resolve_params(sys_)
+    r_k = s.solve(sys_, iters=80, use_kernel=True, **prm)
+    r = s.solve(sys_, iters=80, **prm)
+    np.testing.assert_allclose(np.asarray(r_k.residuals),
+                               np.asarray(r.residuals), **HIST_TOL)
+    if r.errors is not None:
+        np.testing.assert_allclose(np.asarray(r_k.errors),
+                                   np.asarray(r.errors), **HIST_TOL)
+
+
+def test_fused_residual_history_matches_unfused_mesh(mesh):
+    sys_ = linsys.banded_system(n=192, m=4, bandwidth=6, seed=1)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    r_k = s.solve(sys_, iters=80, use_kernel=True, backend="mesh",
+                  mesh=mesh, **prm)
+    r = s.solve(sys_, iters=80, **prm)
+    np.testing.assert_allclose(np.asarray(r_k.residuals),
+                               np.asarray(r.residuals), **HIST_TOL)
+
+
+def test_fused_residual_history_matches_unfused_many():
+    sys_ = linsys.banded_system(n=192, m=4, bandwidth=6, seed=1)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    B = np.random.default_rng(5).standard_normal((4, sys_.N))
+    r_k = s.solve_many(sys_, B, iters=60, use_kernel=True, **prm)
+    r = s.solve_many(sys_, B, iters=60, **prm)
+    np.testing.assert_allclose(np.asarray(r_k.residuals),
+                               np.asarray(r.residuals), **HIST_TOL)
+
+
+# ---------------------------------------------------------------------------
+# mixed precision: bf16 tile streams, f32 accumulate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparse"])
+@pytest.mark.parametrize("name", ["apc", "cimmino"])
+def test_mixed_precision_tracks_f32_within_bf16_envelope(sparse, name):
+    sys_ = (linsys.banded_system(n=192, m=4, bandwidth=6, seed=0) if sparse
+            else linsys.conditioned_gaussian(n=192, m=4, cond=10.0, seed=0))
+    s = solvers.get(name)
+    prm = s.resolve_params(sys_)
+    r_m = s.solve(sys_, iters=40, use_kernel=True, precision="mixed", **prm)
+    r = s.solve(sys_, iters=40, use_kernel=True, **prm)
+    res_m = np.asarray(r_m.residuals)
+    assert np.all(np.isfinite(res_m))
+    np.testing.assert_allclose(res_m, np.asarray(r.residuals), **MIXED_TOL)
+
+
+def test_mixed_precision_solve_many_and_mesh(mesh):
+    sys_ = linsys.banded_system(n=192, m=4, bandwidth=6, seed=0)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    B = np.random.default_rng(2).standard_normal((3, sys_.N))
+    r_many = s.solve_many(sys_, B, iters=30, use_kernel=True,
+                          precision="mixed", **prm)
+    assert np.all(np.isfinite(np.asarray(r_many.residuals)))
+    r_mesh = s.solve(sys_, iters=30, use_kernel=True, precision="mixed",
+                     backend="mesh", mesh=mesh, **prm)
+    r_loc = s.solve(sys_, iters=30, use_kernel=True, precision="mixed", **prm)
+    np.testing.assert_allclose(np.asarray(r_mesh.residuals),
+                               np.asarray(r_loc.residuals), **MIXED_TOL)
+
+
+def test_precision_rejections():
+    sys_ = linsys.standard_gaussian(n=96, m=4, seed=0)
+    s = solvers.get("apc")
+    with pytest.raises(ValueError, match="use_kernel"):
+        s.solve(sys_, iters=2, precision="mixed")
+    with pytest.raises(ValueError, match="unknown precision"):
+        s.solve(sys_, iters=2, use_kernel=True, precision="f8")
+    # a solver with no kernel engine cannot honour mixed at all
+    with pytest.raises(ValueError):
+        solvers.get("dgd").solve(sys_, iters=2, use_kernel=True,
+                                 precision="mixed")
+
+
+def test_precision_splits_store_fingerprint():
+    sys_ = linsys.standard_gaussian(n=96, m=4, seed=0)
+    s = solvers.get("apc")
+    st = FactorStore()
+    k_def = st.key(s, sys_)
+    # explicit default is byte-stable with the implicit one (old digests
+    # stay valid), mixed gets its own entry
+    assert st.key(s, sys_, precision="default") == k_def
+    assert st.key(s, sys_, precision="mixed") != k_def
+    s.solve(sys_, iters=3, use_kernel=True, precision="mixed", store=st)
+    s.solve(sys_, iters=3, use_kernel=True, precision="mixed", store=st)
+    assert st.stats.hits == 1 and st.stats.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# tile autotune plumbing: env pins for the new bp/bk axes
+# ---------------------------------------------------------------------------
+
+
+def test_tile_env_pins(monkeypatch):
+    from repro.kernels import ops
+    ops.tile_cache_clear()
+    monkeypatch.setenv(ops.BN_ENV, "128")
+    monkeypatch.setenv(ops.BP_ENV, "8")
+    monkeypatch.setenv(ops.BK_ENV, "8")
+    bn, bp_, bk = ops.pick_tiles(1024, 32, 16, np.dtype(np.float32),
+                                 interpret=True)
+    assert (bn, bp_, bk) == (128, 8, 8)
+    ops.tile_cache_clear()
+
+
+def test_tile_env_pin_rejects_nondivisor(monkeypatch):
+    from repro.kernels import ops
+    ops.tile_cache_clear()
+    monkeypatch.setenv(ops.BP_ENV, "24")
+    with pytest.raises(ValueError):
+        ops.pick_tiles(1024, 32, 16, np.dtype(np.float32), interpret=True)
+    ops.tile_cache_clear()
+
+
+def test_use_fused_sparse_family_requires_w():
+    from repro.kernels import ops
+    with pytest.raises(ValueError, match="support width w"):
+        ops.use_fused("apc_sparse", 8, 256, 16, np.dtype(np.float32))

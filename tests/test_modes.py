@@ -9,6 +9,8 @@ is numerically a twin of the densified one; and the streaming mode
 (``solve_stream``) warm-starts exactly where ``Solver.warm_rhs_ok``
 allows.
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -230,10 +232,32 @@ def test_sparse_mesh_matches_local(sparse_sys, mesh, name):
                                rtol=1e-6, atol=1e-12)
 
 
-def test_sparse_kernel_request_falls_back_loudly(sparse_sys):
-    s = solvers.get("apc")
+@pytest.mark.parametrize("name", ["apc", "cimmino"])
+def test_sparse_kernel_request_dispatches_silently(sparse_sys, name):
+    # Kernel-capable solvers run the compressed-support Pallas pair on
+    # sparse systems: no fallback, no RuntimeWarning, same answer.
+    s = solvers.get(name)
     prm = s.resolve_params(sparse_sys)
-    with pytest.warns(RuntimeWarning, match="no sparse Pallas kernel"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        r_k = s.solve(sparse_sys, iters=100, use_kernel=True, **prm)
+    r = s.solve(sparse_sys, iters=100, **prm)
+    np.testing.assert_allclose(np.asarray(r_k.x), np.asarray(r.x),
+                               rtol=1e-5, atol=1e-6)
+    # relative-residual histories live at the f32 floor (~1e-7) late in
+    # the run, so compare absolutely, not relatively
+    np.testing.assert_allclose(np.asarray(r_k.residuals),
+                               np.asarray(r.residuals),
+                               rtol=1e-4, atol=2e-6)
+
+
+def test_sparse_kernel_without_engine_falls_back_loudly(sparse_sys):
+    # A solver with no kernel engine (supports_kernel=False) downgrades
+    # a sparse use_kernel request with a RuntimeWarning, then matches
+    # the unfused path bit-for-bit.
+    s = solvers.get("dgd")
+    prm = s.resolve_params(sparse_sys)
+    with pytest.warns(RuntimeWarning, match="supports_kernel=False"):
         r_k = s.solve(sparse_sys, iters=100, use_kernel=True, **prm)
     r = s.solve(sparse_sys, iters=100, **prm)
     assert np.array_equal(np.asarray(r_k.x), np.asarray(r.x))
