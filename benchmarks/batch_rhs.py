@@ -37,7 +37,8 @@ def run(verbose: bool = True, n: int = 384, m: int = 4):
         prm = s.resolve_params(sys_)
 
         t0 = time.perf_counter()
-        rb = s.solve_many(sys_, B, iters=ITERS, store=store, **prm)
+        rb = s.solve_many(sys_, B, iters=ITERS,
+                          plan=solvers.ExecutionPlan(store=store), **prm)
         jax.block_until_ready(rb.x)
         t_batch = time.perf_counter() - t0
 
@@ -65,12 +66,16 @@ def run(verbose: bool = True, n: int = 384, m: int = 4):
             # amortization: re-time the unfused path store-WARM (factors
             # now cached) so both sides of the ratio hit the cache
             t0 = time.perf_counter()
-            rw = s.solve_many(sys_, B, iters=ITERS, store=store, **prm)
+            rw = s.solve_many(sys_, B, iters=ITERS,
+                              plan=solvers.ExecutionPlan(store=store),
+                              **prm)
             jax.block_until_ready(rw.x)
             t_warm = time.perf_counter() - t0
             t0 = time.perf_counter()
-            rk = s.solve_many(sys_, B, iters=ITERS, store=store,
-                              use_kernel=True, **prm)
+            rk = s.solve_many(sys_, B, iters=ITERS,
+                              plan=solvers.ExecutionPlan(store=store,
+                                                         kernel=True),
+                              **prm)
             jax.block_until_ready(rk.x)
             t_kernel = time.perf_counter() - t0
             rows.append((f"batch_rhs/{name}_kernel", t_kernel * 1e6,

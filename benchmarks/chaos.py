@@ -1,0 +1,170 @@
+"""Chaos benchmark: kill and add workers on a schedule while an
+``ElasticRuntime`` keeps the solve converging.
+
+The scenario drives the full PR 10 membership surface against one
+oracle — the uninterrupted run on the original partition:
+
+  * at iteration 100 a worker is KILLED (``mark_dead``): the runtime
+    re-lowers the selection-weight schedule over the survivors and,
+    by the redundant exactness invariant, loses ZERO iterations;
+  * at iteration 150 a replacement JOINS: the fleet returns to its
+    previous alive count, so the runtime reassigns holders without
+    touching state or the compiled scan (still zero loss);
+  * at iteration 200 a second join GROWS the fleet: the rows are
+    repartitioned and the iterate is lifted into the new layout — the
+    one step that may genuinely cost iterations (the lift restarts
+    solver momentum), so ``iters_lost`` is the headline number.
+
+Reported per scenario: iterations-to-tolerance vs the oracle
+(``iters_lost``), the final relative error against the oracle solution,
+and the engine jit-cache sizes after the last membership change vs at
+the end of the run (``retrace_delta`` — the steady-state retrace gate:
+membership changes may compile NEW engines, but once the fleet settles
+every further segment re-enters cached scans).
+
+    PYTHONPATH=src python benchmarks/chaos.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import solvers
+from repro.data import linsys
+from repro.runtime.fault import HeartbeatMonitor
+from repro.solvers.capability import ExecutionPlan
+from repro.solvers.store import FactorStore
+
+ITERS = 400
+SEGMENT = 25
+TOL = 1e-8
+KILL_AT, REPLACE_AT, GROW_AT = 50, 75, 100
+KILL_WORKER = 3
+
+
+def _to_tol(residuals: np.ndarray, tol: float):
+    hit = np.nonzero(residuals <= tol)[0]
+    return int(hit[0]) + 1 if hit.size else None
+
+
+def chaos(n: int = 256, m: int = 8, iters: int = ITERS,
+          segment: int = SEGMENT, tol: float = TOL):
+    """Run the kill/replace/grow schedule; return the measured record."""
+    jax.config.update("jax_enable_x64", True)
+    sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=0)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    oracle = s.solve(sys_, iters=iters, tol=tol, plan=ExecutionPlan(),
+                     **prm)
+    oracle_res = np.asarray(oracle.residuals)
+
+    mon = HeartbeatMonitor(n_workers=m)
+    rt = solvers.ElasticRuntime(
+        s, sys_, plan=ExecutionPlan(redundancy=2, store=FactorStore()),
+        monitor=mon, segment=segment, tol=tol, **prm)
+
+    marks = [(KILL_AT, lambda: mon.mark_dead(KILL_WORKER)),
+             (REPLACE_AT, lambda: mon.join(resynced=True)),
+             (GROW_AT, lambda: mon.join(resynced=True)),
+             (iters, lambda: None)]
+    res_parts, done, t_solve = [], 0, 0.0
+    sizes_after_change = None
+    for upto, act in marks:
+        if upto > done:
+            t0 = time.perf_counter()
+            rep = rt.run(iters=upto - done)
+            t_solve += time.perf_counter() - t0
+            res_parts.append(np.asarray(rep.residuals))
+            done = upto
+        act()
+        if sizes_after_change is None and done > GROW_AT:
+            # first segment after the last membership change has run:
+            # every engine is built — from here the caches must be flat
+            sizes_after_change = dict(rt.engine_cache_sizes())
+    residuals = np.concatenate(res_parts)
+    sizes_end = dict(rt.engine_cache_sizes())
+
+    chaos_tt, oracle_tt = _to_tol(residuals, tol), _to_tol(oracle_res, tol)
+    lost = (None if chaos_tt is None or oracle_tt is None
+            else chaos_tt - oracle_tt)
+    x, xo = np.asarray(rep.x), np.asarray(oracle.x)
+    return {
+        "n": n, "m": m, "iters": iters, "segment": segment, "tol": tol,
+        "schedule": {"kill_at": KILL_AT, "replace_at": REPLACE_AT,
+                     "grow_at": GROW_AT},
+        "events": [e.kind for e in rt.events],
+        "fleet_final": int(rt.sys.m),
+        "relowerings": rt.relowerings,
+        "repartitions": rt.repartitions,
+        "reused_blocks": rt.reused_blocks,
+        "prepared_blocks": rt.prepared_blocks,
+        "oracle_to_tol": oracle_tt,
+        "chaos_to_tol": chaos_tt,
+        "iters_lost": lost,
+        "rel_err_vs_oracle": float(np.linalg.norm(x - xo)
+                                   / np.linalg.norm(xo)),
+        "final_residual": float(residuals[-1]),
+        "us_per_iter": t_solve / iters * 1e6,
+        "engine_cache_after_change": sizes_after_change,
+        "engine_cache_end": sizes_end,
+        "retrace_delta": sum(sizes_end.values())
+        - sum(sizes_after_change.values()),
+    }
+
+
+def death_only(n: int = 256, m: int = 8, iters: int = ITERS,
+               segment: int = SEGMENT, tol: float = TOL):
+    """Kill one covered worker mid-run, nothing else: the exactness
+    invariant says this loses ZERO iterations vs the oracle."""
+    jax.config.update("jax_enable_x64", True)
+    sys_ = linsys.conditioned_gaussian(n=n, m=m, cond=20.0, seed=0)
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    oracle = s.solve(sys_, iters=iters, tol=tol, plan=ExecutionPlan(),
+                     **prm)
+    mon = HeartbeatMonitor(n_workers=m)
+    rt = solvers.ElasticRuntime(
+        s, sys_, plan=ExecutionPlan(redundancy=2), monitor=mon,
+        segment=segment, tol=tol, **prm)
+    t0 = time.perf_counter()
+    r1 = rt.run(iters=KILL_AT)
+    mon.mark_dead(KILL_WORKER)
+    r2 = rt.run(iters=iters - KILL_AT)
+    dt = time.perf_counter() - t0
+    residuals = np.concatenate([np.asarray(r1.residuals),
+                                np.asarray(r2.residuals)])
+    oracle_res = np.asarray(oracle.residuals)
+    return {
+        "iters_lost": _to_tol(residuals, tol) - _to_tol(oracle_res, tol),
+        "history_exact": bool(np.allclose(residuals, oracle_res,
+                                          rtol=1e-6, atol=1e-12)),
+        "us_per_iter": dt / iters * 1e6,
+    }
+
+
+def run(verbose: bool = True):
+    rows = []
+    d = death_only()
+    rows.append(("chaos/apc/death_only", d["us_per_iter"],
+                 f"iters_lost={d['iters_lost']};"
+                 f"history_exact={d['history_exact']}"))
+    c = chaos()
+    rows.append((
+        "chaos/apc/kill_replace_grow", c["us_per_iter"],
+        f"iters_lost={c['iters_lost']};to_tol={c['chaos_to_tol']}"
+        f"(oracle {c['oracle_to_tol']});fleet={c['m']}->"
+        f"{c['fleet_final']};retrace_delta={c['retrace_delta']}"))
+    if verbose:
+        for row in rows:
+            print(f"{row[0]:32s} {row[1]:10.1f} us/iter   {row[2]}")
+    return rows
+
+
+def csv_rows():
+    return run(verbose=False)
+
+
+if __name__ == "__main__":
+    run()

@@ -9,8 +9,8 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import batch_rhs, fig2_decay, mesh_scaling, periter, \
-    roofline, serve_traffic, straggler, table1_rates, table2_times
+from benchmarks import batch_rhs, chaos, fig2_decay, mesh_scaling, \
+    periter, roofline, serve_traffic, straggler, table1_rates, table2_times
 
 SUITES = {
     "table1": table1_rates,
@@ -22,6 +22,7 @@ SUITES = {
     "straggler": straggler,
     "serve_traffic": serve_traffic,
     "roofline": roofline,
+    "chaos": chaos,
 }
 
 

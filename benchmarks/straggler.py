@@ -163,13 +163,17 @@ def run(verbose: bool = True, n: int = 256, m: int = 8):
     rows = []
 
     run_p, st0 = _compiled_plain(s, sys_, store)
-    res0 = s.solve(sys_, iters=ITERS, tol=TOL, store=store, **prm)
+    res0 = s.solve(sys_, iters=ITERS, tol=TOL,
+                   plan=solvers.ExecutionPlan(store=store), **prm)
     rows.append(("straggler/apc/plain", _time_compiled(run_p, st0),
                  f"n={n};m={m};to_tol={res0.iters_to_tol}"))
     for r in RS:
         for rate in RATES:
-            res = s.solve(sys_, iters=ITERS, tol=TOL, redundancy=r,
-                          alive_schedule=_schedule(m, rate), store=store,
+            res = s.solve(sys_, iters=ITERS, tol=TOL,
+                          plan=solvers.ExecutionPlan(
+                              redundancy=r,
+                              alive_schedule=_schedule(m, rate),
+                              store=store),
                           **prm)
             # exactness: convergence never degrades.  Check the documented
             # contract (history match to 1e-6 relative) — the integer

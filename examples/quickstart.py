@@ -57,17 +57,25 @@ def main():
     print(f"solve_many: 4 RHS, final residuals "
           f"{[f'{float(r[-1]):.1e}' for r in batch.residuals]}")
 
-    # The fused Pallas engine: use_kernel=True routes the projection
+    # Execution options travel on ONE object: solvers.ExecutionPlan
+    # (backend/mesh, kernel, precision, redundancy/alive_schedule, store,
+    # warm_state...).  The old loose kwargs still work for one release
+    # behind a DeprecationWarning and build the identical plan.
+    # The fused Pallas engine: kernel=True routes the projection
     # family (apc/consensus/cimmino) through the block-projection kernels
     # on the SAME call — single or batched RHS, local or mesh backend
     # (each worker shard runs the kernel on its local block; histories
     # match the unfused path to <= 1e-6).  Interpret mode off-TPU.
-    rk = solvers.get("apc").solve_many(sys_, B, iters=1000, use_kernel=True)
-    print(f"solve_many(use_kernel=True): max |Δresidual| vs unfused "
+    rk = solvers.get("apc").solve_many(
+        sys_, B, iters=1000, plan=solvers.ExecutionPlan(kernel=True))
+    print(f"solve_many(plan=ExecutionPlan(kernel=True)): max |Δresidual| "
+          f"vs unfused "
           f"{float(np.max(np.abs(np.asarray(rk.residuals) - np.asarray(batch.residuals)))):.1e}")
     from repro.launch.mesh import solver_mesh
-    rkm = solvers.get("apc").solve(sys_, iters=1000, use_kernel=True,
-                                   backend="mesh", mesh=solver_mesh(1, 1))
+    rkm = solvers.get("apc").solve(
+        sys_, iters=1000,
+        plan=solvers.ExecutionPlan(kernel=True, backend="mesh",
+                                   mesh=solver_mesh(1, 1)))
     print(f"mesh + use_kernel: rel-error {float(rkm.errors[-1]):.3e} "
           f"(kernel runs inside shard_map, psum contract unchanged)")
 
@@ -78,14 +86,14 @@ def main():
     # compile-once executor — the first batch is COLD (prepare + compile,
     # a store miss), every later one WARM (store hit, zero retraces).
     # A well-conditioned serve-scale system keeps each batch fast:
-    # use_kernel=True serves every coalesced batch through the fused
-    # multi-RHS kernels: the k right-hand sides stream through ONE VMEM
-    # residency of each A/B tile, and the store entry is augmented with
-    # the pinv factors exactly once.
+    # plan=ExecutionPlan(kernel=True) serves every coalesced batch through
+    # the fused multi-RHS kernels: the k right-hand sides stream through
+    # ONE VMEM residency of each A/B tile, and the store entry is
+    # augmented with the pinv factors exactly once.
     serve_sys = linsys.conditioned_gaussian(n=256, m=4, cond=20.0, seed=2)
     store = solvers.FactorStore()
     srv = solvers.LinsysServer(store, solver="apc", iters=300, batch=4,
-                               use_kernel=True)
+                               plan=solvers.ExecutionPlan(kernel=True))
     fp = srv.register(serve_sys)             # content fingerprint
     rng = np.random.default_rng(2)
     for tag in ("cold", "warm", "warm"):
@@ -111,18 +119,20 @@ def main():
           f"{float(rs.errors[-1]):.3e}  |dx| vs densified "
           f"{float(np.max(np.abs(np.asarray(rs.x) - np.asarray(rd.x)))):.1e}")
 
-    # Sparse systems are kernel-first too: use_kernel=True dispatches the
+    # Sparse systems are kernel-first too: kernel=True dispatches the
     # fused compressed-support Pallas pair (gather the w support columns,
     # contract the (p, w) vals / (w, p) compressed-pinv tiles, scatter-add
     # back) — silently, and with the residual history harvested inside
     # the step pass instead of a second full read of A per iteration.
     # precision="mixed" additionally streams the A/B tiles as bf16 under
     # f32 accumulation — histories track f32 within the bf16 envelope.
-    rsk = solvers.get("apc").solve(sp, iters=400, use_kernel=True)
-    print(f"sparse + use_kernel: max |Δresidual| vs unfused "
+    rsk = solvers.get("apc").solve(
+        sp, iters=400, plan=solvers.ExecutionPlan(kernel=True))
+    print(f"sparse + kernel: max |Δresidual| vs unfused "
           f"{float(np.max(np.abs(np.asarray(rsk.residuals) - np.asarray(rs.residuals)))):.1e}")
-    rsm = solvers.get("apc").solve(sp, iters=400, use_kernel=True,
-                                   precision="mixed")
+    rsm = solvers.get("apc").solve(
+        sp, iters=400,
+        plan=solvers.ExecutionPlan(kernel=True, precision="mixed"))
     print(f"sparse + use_kernel + precision='mixed': final residual "
           f"{float(rsm.residuals[-1]):.1e} (bf16 tile streams)")
 
@@ -159,7 +169,8 @@ def main():
     # returns a Ticket immediately.
     asrv = solvers.AsyncLinsysServer(store, solver="apc", iters=300,
                                      batch=4, pipeline_depth=2,
-                                     admit_capacity=64, use_kernel=True)
+                                     admit_capacity=64,
+                                     plan=solvers.ExecutionPlan(kernel=True))
     afp = asrv.register(serve_sys)
     with asrv:                               # start()/close() the stages
         tickets = [asrv.submit(afp, rng.standard_normal(serve_sys.N))
@@ -171,6 +182,29 @@ def main():
           f"p50/p99 {rep['p50_ms']:.0f}/{rep['p99_ms']:.0f} ms, "
           f"worst residual "
           f"{max(r.residual for r in results if not isinstance(r, solvers.Shed)):.1e}")
+
+    # Elastic fleets: ElasticRuntime drives the same solve across
+    # membership changes from a HeartbeatMonitor.  With redundancy r, a
+    # permanent worker death just re-lowers the selection weights over
+    # the survivors — the iterate continues EXACTLY, zero iterations
+    # lost; joins repartition + lift the iterate, reusing unchanged
+    # per-block factors through the store's block tier.
+    from repro.runtime.fault import HeartbeatMonitor
+    el_sys = linsys.conditioned_gaussian(n=128, m=4, cond=10.0, seed=5)
+    mon = HeartbeatMonitor(n_workers=el_sys.m)
+    rt = solvers.ElasticRuntime(solvers.get("apc"), el_sys,
+                                plan=solvers.ExecutionPlan(redundancy=2),
+                                monitor=mon, segment=25)
+    rt.run(iters=50)
+    mon.mark_dead(2)                         # permanent loss mid-solve
+    rep_el = rt.run(iters=100)
+    oracle = solvers.get("apc").solve(el_sys, iters=150)
+    survivors = sorted(set(rep_el.fleet) - mon.dead)
+    print(f"elastic: worker 2 died @50, re-lowered over survivors "
+          f"{survivors}; final residual "
+          f"{float(rep_el.result.residuals[-1]):.1e} "
+          f"(== full-fleet oracle {float(oracle.residuals[-1]):.1e}, "
+          f"0 iterations lost)")
 
 
 if __name__ == "__main__":

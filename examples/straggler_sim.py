@@ -1,7 +1,8 @@
 """Fault-tolerance demo on the unified solver API: redundant execution
-(``solve(sys, redundancy=r, alive_schedule=...)``, solvers/redundant.py)
-keeps converging while workers randomly stall, and the run matches the
-no-failure run exactly — on any projection-family solver.  Also shows a
+(``solve(sys, plan=ExecutionPlan(redundancy=r, alive_schedule=...))``,
+solvers/redundant.py) keeps converging while workers randomly stall, and
+the run matches the no-failure run exactly — on any projection-family
+solver.  Also shows a
 ``runtime.fault.HeartbeatMonitor`` as the alive-mask source: its
 ``drop_set()`` (dead OR straggling workers) is snapshotted when the
 schedule is lowered at launch (re-lower via warm-started segments to
@@ -35,8 +36,9 @@ def main():
 
     apc = solvers.get("apc")
     clean = apc.solve(sys_, iters=300)
-    failing = apc.solve(sys_, iters=300, redundancy=r,
-                        alive_schedule=alive_schedule)
+    failing = apc.solve(sys_, iters=300,
+                        plan=solvers.ExecutionPlan(
+                            redundancy=r, alive_schedule=alive_schedule))
     dev = float(np.abs(np.asarray(clean.x) - np.asarray(failing.x)).max())
     print(f"no-failure final residual:   {clean.residuals[-1]:.3e}")
     print(f"with-straggler residual:     {failing.residuals[-1]:.3e}")
@@ -53,7 +55,9 @@ def main():
         mon.beat(w, now=now, duration=5.0 if w == 2 else 1.0)
     mon.mark_dead(5)
     dropped = [int(w) for w in np.flatnonzero(mon.drop_set())]
-    monitored = apc.solve(sys_, iters=300, redundancy=r, alive_schedule=mon)
+    monitored = apc.solve(sys_, iters=300,
+                          plan=solvers.ExecutionPlan(redundancy=r,
+                                                     alive_schedule=mon))
     dev_m = float(np.abs(np.asarray(clean.x) - np.asarray(monitored.x)).max())
     print(f"monitor drops workers {dropped}; residual "
           f"{monitored.residuals[-1]:.3e}  deviation {dev_m:.3e}")

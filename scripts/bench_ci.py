@@ -73,7 +73,23 @@ PR9 adds the roofline-push rows (all earlier gates carry unchanged):
     per kernel cell with measured ceilings — recorded (attainment per
     cell), ungated: attainment on a loaded CPU lane is a trend number.
 
-    PYTHONPATH=src python scripts/bench_ci.py --out BENCH_PR9.json
+PR10 adds the elastic-runtime chaos rows (all earlier gates carry
+unchanged):
+
+  * ``benchmarks.chaos.death_only``: one covered worker killed mid-run,
+    gated ``elastic_death_exact`` — the re-lowered schedule loses ZERO
+    iterations and the residual history matches the oracle (the
+    redundant exactness invariant, now reached via the membership-event
+    stream instead of a fixed alive_schedule);
+  * ``benchmarks.chaos.chaos``: the kill -> replace -> grow schedule,
+    gated ``elastic_iters_lost_bounded`` (the repartition lift may cost
+    iterations, bounded by ``ELASTIC_LOST_MAX``),
+    ``elastic_converged`` (final x within 1e-6 relative of the oracle),
+    and ``elastic_zero_retrace`` (once the fleet settles, engine jit
+    caches are FLAT — membership changes never cost a steady-state
+    retrace).
+
+    PYTHONPATH=src python scripts/bench_ci.py --out BENCH_PR10.json
 """
 from __future__ import annotations
 
@@ -104,6 +120,8 @@ SPARSE = dict(n=768, m=4, bandwidth=8, iters=30)
 SPARSE_KERNEL = dict(n=768, m=4, bandwidth=8, iters=30, batches=(1, 16))
 FUSED_RES = dict(n=512, m=4, bandwidth=8, k=16, iters=30)
 STREAM = dict(n_requests=100, iters=100, solver="dhbm")
+CHAOS = dict(n=256, m=8, iters=400, segment=25, tol=1e-8)
+ELASTIC_LOST_MAX = 50       # <= 2 segments of momentum lost to a lift
 DISPATCH_MIN = 0.75         # noise floor for dispatch >= unfused gates
 SPARSE_MIN = 1.0            # compressed path never loses to densified
 ASYNC_MIN_MULTICORE = 1.00  # strict: the pipeline must win with cores
@@ -112,7 +130,7 @@ ASYNC_MIN_SINGLECORE = 0.80  # overhead bound at the 1-core makespan floor
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR9.json",
+    ap.add_argument("--out", default="BENCH_PR10.json",
                     help="where to write the benchmark trajectory record")
     ap.add_argument("--no-gate", action="store_true",
                     help="record only; do not fail on gate violations "
@@ -189,6 +207,20 @@ def main(argv=None) -> int:
               f"{st['warm_hit_rate']:.0%}   {st['rhs_per_s']:.1f} RHS/s   "
               f"max residual {st['max_residual']:.1e}   "
               f"jit {st['jit_cache']}")
+
+    print(f"== bench_ci: chaos elastic membership schedule {CHAOS} ==")
+    from benchmarks import chaos as chaos_bench
+    cd = chaos_bench.death_only(**CHAOS)
+    print(f"  death_only        iters_lost={cd['iters_lost']} "
+          f"history_exact={cd['history_exact']} "
+          f"{cd['us_per_iter']:.0f} us/iter")
+    cc = chaos_bench.chaos(**CHAOS)
+    print(f"  kill_replace_grow iters_lost={cc['iters_lost']} "
+          f"to_tol={cc['chaos_to_tol']} (oracle {cc['oracle_to_tol']}) "
+          f"fleet {cc['m']}->{cc['fleet_final']} "
+          f"reuse {cc['reused_blocks']}/{cc['prepared_blocks']} "
+          f"retrace_delta={cc['retrace_delta']} "
+          f"rel_err={cc['rel_err_vs_oracle']:.1e}")
 
     print(f"== bench_ci: serve_traffic.measure {SERVE} ==")
     srv = serve_traffic.measure(**SERVE)
@@ -289,10 +321,21 @@ def main(argv=None) -> int:
         # ...with a constant steady-state jit cache
         "stream_zero_retrace": all(
             stream[k]["zero_retrace"] for k in ("sync", "async")),
+        # a covered death re-lowers the schedule and loses NOTHING
+        "elastic_death_exact": (cd["history_exact"]
+                                and cd["iters_lost"] == 0),
+        # the repartition lift may cost momentum, boundedly
+        "elastic_iters_lost_bounded": (
+            cc["iters_lost"] is not None
+            and cc["iters_lost"] <= ELASTIC_LOST_MAX),
+        # the chaos run still lands on the oracle solution
+        "elastic_converged": cc["rel_err_vs_oracle"] <= 1e-6,
+        # after the fleet settles, engine jit caches stay flat
+        "elastic_zero_retrace": cc["retrace_delta"] == 0,
     }
     record = {
-        "schema": 4,
-        "pr": 9,
+        "schema": 5,
+        "pr": 10,
         "backend": jax.default_backend(),
         "pallas_interpret": bp.default_interpret(),
         "host_cpus": cpus,
@@ -320,6 +363,10 @@ def main(argv=None) -> int:
             "sparse_gate_sparsity": sc["sparsity"],
             "stream_warm_rates": {k: stream[k]["warm_hit_rate"]
                                   for k in ("sync", "async")},
+            "elastic_iters_lost": cc["iters_lost"],
+            "elastic_lost_max": ELASTIC_LOST_MAX,
+            "elastic_rel_err_vs_oracle": cc["rel_err_vs_oracle"],
+            "elastic_retrace_delta": cc["retrace_delta"],
         },
         "engine_choices": {str(k): v
                            for k, v in sorted(kops.engine_cache().items())},
@@ -330,6 +377,7 @@ def main(argv=None) -> int:
         "roofline": roof,
         "serve_traffic": srv,
         "streaming": stream,
+        "chaos": {"death_only": cd, "kill_replace_grow": cc},
         "traffic": {"sync": tr["sync"], "async": tr["async"],
                     "overload": overload},
         "gates": gates,
@@ -353,6 +401,8 @@ def main(argv=None) -> int:
                f"fused-residual>={fr_min_seen:.2f}x, "
                f"stream warm {stream['sync']['warm_hit_rate']:.0%}/"
                f"{stream['async']['warm_hit_rate']:.0%}, "
+               f"elastic lost={cc['iters_lost']} vs <={ELASTIC_LOST_MAX} "
+               f"retrace_delta={cc['retrace_delta']}, "
                f"async/sync={ratio:.2f} vs >={async_min:.2f} "
                f"on {cpus} cpu(s))")
         if args.no_gate:
@@ -366,7 +416,9 @@ def main(argv=None) -> int:
           f"b16 {sk_min_seen:.2f}x / fused-residual {fr_min_seen:.2f}x >= "
           f"{DISPATCH_MIN}, stream warm "
           f"100% both servers, async/sync {ratio:.2f} >= {async_min:.2f} "
-          f"({cpus} cpu(s)), zero retraces, overload sheds explicitly")
+          f"({cpus} cpu(s)), zero retraces, overload sheds explicitly, "
+          f"elastic death exact / lost {cc['iters_lost']} <= "
+          f"{ELASTIC_LOST_MAX} / settled caches flat")
     return 0
 
 

@@ -42,6 +42,9 @@ XLA_FLAGS="$FORCE4" python scripts/smokes/scenarios.py
 echo "== straggler smoke (r=2, rotating straggler, 4 forced host devices) =="
 XLA_FLAGS="$FORCE4" python scripts/smokes/straggler.py
 
+echo "== elastic smoke (kill -> rejoin -> taskmaster recovery, factor reuse) =="
+python scripts/smokes/elastic.py
+
 echo "== kernel smoke (every Pallas path, interpret mode) =="
 XLA_FLAGS="$FORCE4" REPRO_PALLAS_INTERPRET=1 python scripts/smokes/kernel.py
 

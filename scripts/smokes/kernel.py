@@ -96,14 +96,17 @@ def smoke_solver_paths():
         s = solvers.get(name)
         prm = s.resolve_params(sys_)
         r0 = s.solve(sys_, iters=100, **prm)
-        for tag, kw in (("local", {}),
-                        ("mesh", dict(backend="mesh", mesh=mesh))):
-            rk = s.solve(sys_, iters=100, use_kernel=True, **kw, **prm)
+        for tag, plan in (
+                ("local", solvers.ExecutionPlan(kernel=True)),
+                ("mesh", solvers.ExecutionPlan(kernel=True, backend="mesh",
+                                               mesh=mesh))):
+            rk = s.solve(sys_, iters=100, plan=plan, **prm)
             assert np.allclose(np.asarray(rk.residuals),
                                np.asarray(r0.residuals),
                                rtol=1e-6, atol=1e-12), (name, tag)
         m0 = s.solve_many(sys_, Bk, iters=100, **prm)
-        mk = s.solve_many(sys_, Bk, iters=100, use_kernel=True, **prm)
+        mk = s.solve_many(sys_, Bk, iters=100,
+                          plan=solvers.ExecutionPlan(kernel=True), **prm)
         assert np.allclose(np.asarray(mk.residuals),
                            np.asarray(m0.residuals),
                            rtol=1e-6, atol=1e-12), name
@@ -157,17 +160,21 @@ def smoke_sparse_paths():
         r0 = s.solve(sys_, iters=80, **prm)
         with warnings.catch_warnings():
             warnings.simplefilter("error", RuntimeWarning)
-            rk = s.solve(sys_, iters=80, use_kernel=True, **prm)
-            rm = s.solve(sys_, iters=80, use_kernel=True, backend="mesh",
-                         mesh=mesh, **prm)
+            rk = s.solve(sys_, iters=80,
+                         plan=solvers.ExecutionPlan(kernel=True), **prm)
+            rm = s.solve(sys_, iters=80,
+                         plan=solvers.ExecutionPlan(kernel=True,
+                                                    backend="mesh",
+                                                    mesh=mesh), **prm)
         for tag, r in (("local", rk), ("mesh", rm)):
             assert np.allclose(np.asarray(r.residuals),
                                np.asarray(r0.residuals),
                                rtol=1e-4, atol=2e-6), (name, tag)
         # mixed precision: bf16 tile streams must stay finite and track
         # the f32 history within the bf16 envelope
-        rx = s.solve(sys_, iters=80, use_kernel=True, precision="mixed",
-                     **prm)
+        rx = s.solve(sys_, iters=80,
+                     plan=solvers.ExecutionPlan(kernel=True,
+                                                precision="mixed"), **prm)
         res = np.asarray(rx.residuals)
         assert np.all(np.isfinite(res)), name
         assert np.allclose(res, np.asarray(r0.residuals),

@@ -29,7 +29,9 @@ def main():
         s = solvers.get(name)
         prm = s.resolve_params(sys_)
         rl = s.solve(sys_, iters=120, **prm)
-        rm = s.solve(sys_, iters=120, backend="mesh", mesh=mesh, **prm)
+        rm = s.solve(sys_, iters=120,
+                     plan=solvers.ExecutionPlan(backend="mesh", mesh=mesh),
+                     **prm)
         assert np.allclose(np.asarray(rm.residuals),
                            np.asarray(rl.residuals),
                            rtol=1e-6, atol=1e-12), name

@@ -44,7 +44,9 @@ def sparse_scenario(mesh):
         assert np.allclose(np.asarray(r_sp.residuals),
                            np.asarray(r_dn.residuals),
                            rtol=1e-6, atol=1e-12), name
-        r_mesh = s.solve(sys_, iters=150, backend="mesh", mesh=mesh, **prm)
+        r_mesh = s.solve(sys_, iters=150,
+                         plan=solvers.ExecutionPlan(backend="mesh",
+                                                    mesh=mesh), **prm)
         assert np.allclose(np.asarray(r_mesh.x), np.asarray(r_sp.x),
                            rtol=1e-8, atol=1e-10), name
     try:
@@ -64,10 +66,11 @@ def ls_scenario(mesh):
     for name in ("dgd", "dhbm"):
         s = solvers.get(name)
         prm = s.resolve_params(sys_)
-        for kw in ({}, {"backend": "mesh", "mesh": mesh}):
-            r = s.solve(sys_, iters=800, **prm, **kw)
-            assert _rel(r.x, x_ls) < 1e-6, (name, kw)
-            assert r.residuals[-1] < 1e-8, (name, kw)
+        for plan in (solvers.ExecutionPlan(),
+                     solvers.ExecutionPlan(backend="mesh", mesh=mesh)):
+            r = s.solve(sys_, iters=800, plan=plan, **prm)
+            assert _rel(r.x, x_ls) < 1e-6, (name, plan.backend)
+            assert r.residuals[-1] < 1e-8, (name, plan.backend)
     # Cimmino's Gram-weighted fixed point, against its own reference
     s = solvers.get("cimmino")
     r = s.solve(sys_, iters=800, **s.resolve_params(sys_))

@@ -29,9 +29,14 @@ def main():
     s = solvers.get("apc")
     prm = s.resolve_params(sys_)
     r0 = s.solve(sys_, iters=120, **prm)                       # no failures
-    rl = s.solve(sys_, iters=120, redundancy=2, alive_schedule=sched, **prm)
-    rm = s.solve(sys_, iters=120, redundancy=2, alive_schedule=sched,
-                 backend="mesh", mesh=mesh, **prm)
+    rl = s.solve(sys_, iters=120,
+                 plan=solvers.ExecutionPlan(redundancy=2,
+                                            alive_schedule=sched), **prm)
+    rm = s.solve(sys_, iters=120,
+                 plan=solvers.ExecutionPlan(redundancy=2,
+                                            alive_schedule=sched,
+                                            backend="mesh", mesh=mesh),
+                 **prm)
     for r, tag in ((rl, "local"), (rm, "mesh")):
         assert np.allclose(np.asarray(r.residuals),
                            np.asarray(r0.residuals),

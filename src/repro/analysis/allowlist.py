@@ -67,6 +67,10 @@ ALLOW: dict[str, tuple[tuple[str, str, str], ...]] = {
          "factors are then cached by the CompiledSolve"),
         ("src/repro/solvers/redundant.py", "*",
          "redundant placement, same ownership as mesh.py"),
+        ("src/repro/solvers/elastic.py", "*",
+         "elastic repartitioning goes through the FactorStore block "
+         "tier when the solver supports it and falls back to a direct "
+         "prepare for solvers without per-block factor independence"),
         ("src/repro/core/distributed.py", "*",
          "deprecated shim forwards to the solvers layer (kept for API "
          "compat; new code goes through FactorStore)"),

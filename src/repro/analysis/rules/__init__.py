@@ -10,6 +10,7 @@ from repro.analysis.rules.r005_layering import R005CoreLayering
 from repro.analysis.rules.r006_interpret import R006InterpretThreading
 from repro.analysis.rules.r007_broad_except import R007BroadExcept
 from repro.analysis.rules.r008_modes import R008ModeHooks
+from repro.analysis.rules.r009_plan_kwargs import R009PlanKwargs
 
 ALL_RULES = (
     R001JitInFunction,
@@ -20,6 +21,7 @@ ALL_RULES = (
     R006InterpretThreading,
     R007BroadExcept,
     R008ModeHooks,
+    R009PlanKwargs,
 )
 
 __all__ = ["ALL_RULES"] + [c.__name__ for c in ALL_RULES]

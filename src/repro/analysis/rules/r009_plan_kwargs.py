@@ -1,0 +1,53 @@
+"""R009 — internal solve call sites pass ``plan=``, not loose kwargs.
+
+PR 10 consolidated the execution surface (``backend=``, ``mesh=``,
+``use_kernel=``, ``redundancy=``, ``alive_schedule=``, ``store=``,
+``precision=``, ``warm_state=``, ``factors=``, ``worker_axes=``,
+``model_axis=``) into ONE validated ``ExecutionPlan`` resolved at
+dispatch (solvers/capability.py).  The loose kwargs survive only as a
+deprecation shim for EXTERNAL callers — one ``DeprecationWarning`` per
+call.  Internal code (anything under ``repro``) must not lean on its
+own deprecation path: every ``.solve(...)`` / ``.solve_many(...)`` call
+site passes ``plan=`` or nothing.  The shim itself (solvers/api.py)
+forwards plan fields, so it has no such call to flag; tests exercising
+the legacy surface live under ``tests/`` and are out of scope.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.lint import Rule
+
+_DEPRECATED = frozenset({
+    "use_kernel", "precision", "warm_state", "factors", "store",
+    "backend", "mesh", "worker_axes", "model_axis", "redundancy",
+    "alive_schedule",
+})
+_METHODS = ("solve", "solve_many")
+
+
+class R009PlanKwargs(Rule):
+    id = "R009"
+    title = "internal solve() call passes deprecated loose kwargs"
+
+    def _internal(self) -> bool:
+        return "repro" in pathlib.PurePosixPath(self.src.relpath).parts
+
+    def on_call(self, node: ast.Call):
+        if not self._internal():
+            return
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr in _METHODS):
+            return
+        bad = sorted(kw.arg for kw in node.keywords
+                     if kw.arg is not None and kw.arg in _DEPRECATED)
+        if bad:
+            self.report(
+                node,
+                f"{fn.attr}() called with deprecated loose kwargs "
+                f"{bad}: internal code must put the execution surface "
+                f"on the plan — pass plan=ExecutionPlan("
+                f"{', '.join(k + '=...' for k in bad)}) instead "
+                f"(the kwarg shim is for external callers and emits a "
+                f"DeprecationWarning at runtime)")

@@ -117,8 +117,9 @@ def solve(sys: BlockSystem, *, iters: int = 1000,
     ``solve_many`` (batched multi-RHS) and ``warm_state=`` resume.
     """
     from repro import solvers
-    return solvers.get("apc").solve(sys, iters=iters, gamma=gamma, eta=eta,
-                                    use_kernel=use_kernel, jitter=jitter)
+    return solvers.get("apc").solve(
+        sys, iters=iters, plan=solvers.ExecutionPlan(kernel=use_kernel),
+        gamma=gamma, eta=eta, jitter=jitter)
 
 
 def __getattr__(name):

@@ -71,7 +71,9 @@ def solve_redundant(sys: BlockSystem, r: int, *, iters: int = 500,
     the registry API directly and use the full ``SolveResult``.
     """
     from repro import solvers
-    res = solvers.get("apc").solve(sys, iters=iters, redundancy=r,
-                                   alive_schedule=alive_schedule,
-                                   gamma=gamma, eta=eta)
+    res = solvers.get("apc").solve(
+        sys, iters=iters,
+        plan=solvers.ExecutionPlan(redundancy=r,
+                                   alive_schedule=alive_schedule),
+        gamma=gamma, eta=eta)
     return res.x, np.asarray(res.residuals)

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro import solvers
 from repro.data import linsys
+from repro.solvers.capability import ExecutionPlan
 from repro.solvers.pipeline import AsyncLinsysServer, Shed
 from repro.solvers.serve import LinsysServer
 from repro.solvers.store import FactorStore
@@ -82,9 +83,9 @@ def main(argv=None):
     jax.config.update("jax_enable_x64", args.x64)
     store = FactorStore(capacity=args.store_capacity,
                         directory=args.store_dir)
+    plan = ExecutionPlan(backend=args.backend, kernel=args.use_kernel)
     kw = dict(solver=args.solver, iters=args.iters, tol=args.tol,
-              batch=args.batch, backend=args.backend,
-              warm_start=args.warm_start, use_kernel=args.use_kernel)
+              batch=args.batch, plan=plan, warm_start=args.warm_start)
     if args.async_:
         srv = AsyncLinsysServer(store, pipeline_depth=args.pipeline_depth,
                                 admit_capacity=args.admit_capacity, **kw)

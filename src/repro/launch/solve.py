@@ -134,20 +134,17 @@ def main(argv=None):
         print(f"redundant execution: r={args.redundancy}"
               + (f", straggler rate {args.straggler_sim}"
                  if args.straggler_sim else ", no simulated stragglers"))
+    # the whole execution surface travels on ONE validated plan
+    mesh = None
     if args.use_mesh:
         mesh = mesh_lib.solver_mesh_for(sys_.m)
         print(f"mesh backend: {tuple(mesh.shape.items())} over "
               f"{len(jax.devices())} device(s)")
-        res = solver.solve(sys_, iters=args.iters, backend="mesh",
-                           mesh=mesh, warm_state=warm, store=store,
-                           redundancy=args.redundancy,
-                           use_kernel=args.use_kernel,
-                           alive_schedule=alive_schedule, **params)
-    else:
-        res = solver.solve(sys_, iters=args.iters, warm_state=warm,
-                           store=store, redundancy=args.redundancy,
-                           use_kernel=args.use_kernel,
-                           alive_schedule=alive_schedule, **params)
+    plan = solvers.ExecutionPlan(
+        backend="mesh" if args.use_mesh else "local", mesh=mesh,
+        kernel=args.use_kernel, redundancy=args.redundancy,
+        alive_schedule=alive_schedule, warm_state=warm, store=store)
+    res = solver.solve(sys_, iters=args.iters, plan=plan, **params)
     xbar, final_res = res.x, float(res.residuals[-1])
     if res.iters_to_tol != -1:
         print(f"reached residual < {res.tol:.0e} after "

@@ -39,9 +39,24 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, List, NamedTuple, Optional
 
 import numpy as np
+
+
+class MembershipEvent(NamedTuple):
+    """One fleet-membership transition, as observed by the monitor.
+
+    ``kind`` is ``"died"`` (explicit ``mark_dead`` or a ``sweep`` timeout
+    — emitted once per worker until it rejoins), ``"rejoined"`` (a
+    previously-dead worker back after the resync handshake), or
+    ``"joined"`` (a NEW worker grew the fleet via ``join``).  ``alive``
+    is the post-transition alive count — consumers that repartition use
+    it without re-deriving monitor state.
+    """
+    kind: str
+    worker: int
+    alive: int
 
 
 @dataclasses.dataclass
@@ -52,6 +67,28 @@ class HeartbeatMonitor:
     _last: Dict[int, float] = dataclasses.field(default_factory=dict)
     _durations: Dict[int, float] = dataclasses.field(default_factory=dict)
     _dead: set = dataclasses.field(default_factory=set)
+    _events: List[MembershipEvent] = dataclasses.field(default_factory=list)
+
+    def _emit(self, kind: str, worker: int, now: Optional[float] = None):
+        self._events.append(MembershipEvent(
+            kind=kind, worker=worker,
+            alive=int(self.alive_mask(now).sum())))
+
+    @property
+    def dead(self) -> frozenset:
+        """Workers currently evicted (sticky until ``rejoin``) — the
+        membership truth an in-process driver keys alive masks off
+        (heartbeat timeouts need real workers beating; the elastic
+        runtime drives beats itself and uses explicit deaths only)."""
+        return frozenset(self._dead)
+
+    def poll_events(self) -> List[MembershipEvent]:
+        """Drain the membership-event stream (ordered, each transition
+        exactly once).  The elastic runtime polls this between solve
+        segments and reacts: died -> re-lower the selection weights over
+        the survivors, joined/rejoined -> repartition + warm-start."""
+        events, self._events = self._events, []
+        return events
 
     def beat(self, worker: int, now: Optional[float] = None,
              duration: Optional[float] = None):
@@ -65,7 +102,9 @@ class HeartbeatMonitor:
 
     def mark_dead(self, worker: int):
         """Explicitly evict a worker (sticky until ``rejoin``)."""
-        self._dead.add(worker)
+        if worker not in self._dead:
+            self._dead.add(worker)
+            self._emit("died", worker)
 
     def sweep(self, now: Optional[float] = None) -> np.ndarray:
         """Mark every timed-out worker dead and return the alive mask.
@@ -77,8 +116,10 @@ class HeartbeatMonitor:
         now = time.monotonic() if now is None else now
         for w in range(self.n_workers):
             last = self._last.get(w)
-            if last is None or now - last > self.timeout:
+            if (last is None or now - last > self.timeout) \
+                    and w not in self._dead:
                 self._dead.add(w)
+                self._emit("died", w, now)
         return self.alive_mask(now)
 
     def rejoin(self, worker: int, *, resynced: bool):
@@ -86,8 +127,30 @@ class HeartbeatMonitor:
         if not resynced:
             raise RuntimeError(
                 f"worker {worker} must resync replicas before rejoining")
-        self._dead.discard(worker)
+        if worker in self._dead:
+            self._dead.discard(worker)
+            self._last[worker] = time.monotonic()
+            self._emit("rejoined", worker)
+        else:
+            self._last[worker] = time.monotonic()
+
+    def join(self, *, resynced: bool = True) -> int:
+        """Grow the fleet by one NEW worker and return its id.
+
+        Unlike ``rejoin`` (a known worker returning to its old slot), a
+        join changes the fleet SIZE — consumers must repartition.  The
+        newcomer still owes the resync handshake: it holds no block
+        state at all, so admitting it without one would be worse than a
+        stale rejoin.
+        """
+        if not resynced:
+            raise RuntimeError(
+                "a joining worker must sync block state before admission")
+        worker = self.n_workers
+        self.n_workers += 1
         self._last[worker] = time.monotonic()
+        self._emit("joined", worker)
+        return worker
 
     def alive_mask(self, now: Optional[float] = None) -> np.ndarray:
         """PURE read: alive = not explicitly dead AND beaten within timeout.

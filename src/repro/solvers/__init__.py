@@ -12,24 +12,46 @@ Batched serving (one factorization, many right-hand sides):
 
     res = solvers.get("apc").solve_many(sys, B)          # B: (k, N)
 
+Execution surface: everything beyond iters/tol/params travels on ONE
+validated ``ExecutionPlan`` (backend, mesh, kernel, precision,
+redundancy, store, warm_state, ...), resolved once at dispatch.  The
+old loose kwargs (``backend=``, ``use_kernel=``, ...) still work via a
+shim but are deprecated (one ``DeprecationWarning`` per call; lint rule
+R009 keeps internal call sites off them):
+
+    from repro.solvers import ExecutionPlan
+    res = solvers.get("apc").solve(
+        sys, plan=ExecutionPlan(backend="mesh", kernel=True), iters=500)
+
 Warm starts / resume (feeds repro.checkpoint.ckpt):
 
     r1 = solvers.get("apc").solve(sys, iters=100)
-    r2 = solvers.get("apc").solve(sys, iters=100, warm_state=r1.state)
-
-Mesh execution (shard_map over a device mesh, any registered solver):
-
-    res = solvers.get("apc").solve(sys, backend="mesh", mesh=mesh)
+    r2 = solvers.get("apc").solve(
+        sys, iters=100, plan=ExecutionPlan(warm_state=r1.state))
 
 Straggler-tolerant redundant execution (projection family, both backends):
 
-    res = solvers.get("apc").solve(sys, redundancy=2,
-                                   alive_schedule=lambda t: mask_t)
+    res = solvers.get("apc").solve(
+        sys, plan=ExecutionPlan(redundancy=2,
+                                alive_schedule=lambda t: mask_t))
+
+Elastic fleet execution (membership changes mid-solve — deaths re-lower
+the redundant schedule over the survivors, joins/rejoins repartition and
+warm-start with per-block factor reuse, taskmaster loss recovers from
+the store's disk tier):
+
+    from repro.runtime.fault import HeartbeatMonitor
+    rt = solvers.ElasticRuntime(solvers.get("apc"), sys,
+                                plan=ExecutionPlan(redundancy=2),
+                                monitor=HeartbeatMonitor(n_workers=sys.m))
+    rt.monitor.mark_dead(2)          # death -> re-lower, keep iterating
+    rep = rt.run(iters=600)          # rep.reused_blocks / rep.events
 
 Cached factorizations + request serving (the serve-traffic hot path):
 
     store = solvers.FactorStore(directory="/ckpt/factors")
-    res = solvers.get("apc").solve(sys, store=store)     # hit after 1st
+    res = solvers.get("apc").solve(
+        sys, plan=ExecutionPlan(store=store))            # hit after 1st
     srv = solvers.LinsysServer(store, solver="apc", batch=4)
 
 Async pipelined serving (overlapped admission/assembly/execution, per-
@@ -61,13 +83,15 @@ factor cache, ``serve`` for the linear-system request server, and
 ``pipeline`` for its async pipelined twin.
 """
 from .api import Solver, SolveResult, iters_to_tolerance  # noqa: F401
-from .capability import CapabilityError  # noqa: F401
+from .capability import (CapabilityError, ExecutionPlan,  # noqa: F401
+                         resolve_plan)
 from .registry import available, get, register  # noqa: F401
 
 # Importing the implementation modules populates the registry.
 from . import admm, gradient, projection  # noqa: F401, E402
 from . import mesh  # noqa: F401, E402  (the shard_map execution backend)
 from . import redundant  # noqa: F401, E402  (straggler-tolerant layer)
-from .store import FactorStore, fingerprint  # noqa: F401, E402
+from .store import BlockReuse, FactorStore, fingerprint  # noqa: F401, E402
 from .serve import LinsysServer, StreamReport, solve_stream  # noqa: F401, E402
 from .pipeline import AsyncLinsysServer, Shed, Ticket  # noqa: F401, E402
+from .elastic import ElasticReport, ElasticRuntime  # noqa: F401, E402

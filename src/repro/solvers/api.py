@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -48,12 +49,59 @@ import numpy as np
 
 from repro.core import blockops
 from repro.core.partition import BlockSystem
-from repro.solvers.capability import (CapabilityError, check_capability,
-                                      resolve_use_kernel)
+from repro.solvers.capability import (CapabilityError, ExecutionPlan,
+                                      resolve_plan)
 
 log = logging.getLogger("repro.solvers")
 
-__all__ = ["Solver", "SolveResult", "CapabilityError", "iters_to_tolerance"]
+__all__ = ["Solver", "SolveResult", "CapabilityError", "ExecutionPlan",
+           "iters_to_tolerance"]
+
+
+_UNSET = object()     # sentinel distinguishing "not passed" from None
+
+# legacy kwarg -> ExecutionPlan field (the use_kernel rename is the only
+# non-identity entry); everything here goes through the deprecation shim
+_LEGACY_PLAN_KWARGS = {
+    "use_kernel": "kernel", "precision": "precision",
+    "warm_state": "warm_state", "factors": "factors", "store": "store",
+    "backend": "backend", "mesh": "mesh", "worker_axes": "worker_axes",
+    "model_axis": "model_axis", "redundancy": "redundancy",
+    "alive_schedule": "alive_schedule",
+}
+
+
+def _coerce_plan(plan: Optional[ExecutionPlan], legacy: Dict[str, Any],
+                 *, context: str) -> ExecutionPlan:
+    """Resolve the plan/legacy-kwarg split of a solve call.
+
+    Exactly one of the two surfaces may be used: an explicit ``plan=``
+    wins, loose legacy kwargs build one through this shim and emit
+    exactly ONE ``DeprecationWarning`` per call (however many kwargs
+    were passed), and mixing the two is an error — silently merging
+    would make the plan lie about what runs.
+    """
+    given = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if plan is not None:
+        if given:
+            raise ValueError(
+                f"{context} was called with both plan= and the legacy "
+                f"kwargs {sorted(given)}; put everything on the "
+                f"ExecutionPlan")
+        if not isinstance(plan, ExecutionPlan):
+            raise TypeError(f"plan= must be an ExecutionPlan, got "
+                            f"{type(plan).__name__}")
+        return plan
+    if not given:
+        return ExecutionPlan()
+    warnings.warn(
+        f"passing {sorted(given)} to {context} as loose kwargs is "
+        f"deprecated; build an ExecutionPlan and pass plan= instead "
+        f"(e.g. plan=ExecutionPlan("
+        + ", ".join(f"{_LEGACY_PLAN_KWARGS[k]}=..." for k in sorted(given))
+        + "))", DeprecationWarning, stacklevel=3)
+    return ExecutionPlan(**{_LEGACY_PLAN_KWARGS[k]: v
+                            for k, v in given.items()})
 
 
 class _LocalPsum:
@@ -178,6 +226,31 @@ class Solver:
     def extract(self, state: Any) -> jnp.ndarray:
         """The global estimate x (n,) carried by ``state``."""
         raise NotImplementedError
+
+    # A solver that can rebuild a valid state for a NEW partition from
+    # nothing but the global estimate sets this and implements
+    # ``lift_state``.  This is the cross-partition warm start the elastic
+    # runtime uses when the fleet is repartitioned (join/rejoin): states
+    # are global-SHAPED but their per-block invariants (e.g. APC's
+    # A_i x_i = b_i feasibility) are partition-specific, so a plain
+    # ``warm_state=`` handoff across a repartition would be wrong.
+    supports_lift: bool = False
+
+    # ``prepare`` factorizes each row block independently and every factor
+    # leaf carries a leading worker axis — the contract that lets
+    # ``FactorStore.blockwise_factors`` assemble full factors from cached
+    # per-block slices after a repartition.
+    supports_block_store: bool = False
+
+    def lift_state(self, factors: Any, b: jnp.ndarray,
+                   params: Dict[str, float], x: jnp.ndarray) -> Any:
+        """A state for THIS partition warm-started from the global
+        estimate ``x`` of a previous (differently-partitioned) run.
+        Must satisfy every invariant ``init`` establishes; ``extract``
+        of the result should be (close to) ``x``."""
+        raise NotImplementedError(
+            f"solver {self.name!r} cannot lift a state across partitions "
+            f"(supports_lift=False)")
 
     # ----- optional analysis hooks ----------------------------------------
     def theoretical_rate(self, sys: BlockSystem) -> Optional[float]:
@@ -451,68 +524,80 @@ class Solver:
                              resume=resume, **prm), prm
 
     def solve(self, sys: BlockSystem, *, iters: int = 1000, tol: float = 1e-6,
-              use_kernel: bool = False, precision: str = "default",
-              warm_state: Any = None,
-              factors: Any = None, store: Any = None,
-              backend: str = "local", mesh: Any = None,
-              worker_axes=("data",), model_axis: Optional[str] = "model",
-              redundancy: int = 1, alive_schedule: Any = None,
+              plan: Optional[ExecutionPlan] = None,
+              use_kernel: Any = _UNSET, precision: Any = _UNSET,
+              warm_state: Any = _UNSET,
+              factors: Any = _UNSET, store: Any = _UNSET,
+              backend: Any = _UNSET, mesh: Any = _UNSET,
+              worker_axes: Any = _UNSET, model_axis: Any = _UNSET,
+              redundancy: Any = _UNSET, alive_schedule: Any = _UNSET,
               **params) -> SolveResult:
         """End-to-end solve: prepare -> init (or warm-start) -> scan steps.
 
-        Pass ``factors`` (from an earlier ``prepare`` with the same params)
-        to skip the one-time factorization, or — better — a ``store``
-        (``solvers.FactorStore``): the ``factors is None`` branch is then a
-        content-addressed cache lookup (memory LRU, optional disk tier)
-        instead of an unconditional re-``prepare``.  Cached-factor serving
-        (``solvers.serve``) and the checkpoint-resume driver use these.
+        The execution surface travels on ONE validated object::
+
+            solve(sys, plan=ExecutionPlan(backend="mesh", kernel=True),
+                  iters=500, tol=1e-6, **params)
+
+        ``plan.factors`` (from an earlier ``prepare`` with the same
+        params) skips the one-time factorization; ``plan.store``
+        (``solvers.FactorStore``) turns the ``factors is None`` branch
+        into a content-addressed cache lookup (memory LRU, optional disk
+        tier) instead of an unconditional re-``prepare``.  Cached-factor
+        serving (``solvers.serve``) and the checkpoint-resume driver use
+        these.
 
         ``backend="mesh"`` runs the identical lifecycle sharded over a
-        device mesh (``mesh=None`` builds one over the available devices);
-        ``worker_axes``/``model_axis`` choose which mesh axes the row
-        blocks and the n dimension shard over.
+        device mesh (``mesh=None`` builds one over the available
+        devices); ``worker_axes``/``model_axis`` choose which mesh axes
+        the row blocks and the n dimension shard over.
 
-        ``redundancy=r`` (projection family, both backends) replicates the
-        row blocks r-redundantly so iterations tolerate stragglers named by
-        ``alive_schedule`` (callable t -> (m,) mask, a mask array, or a
-        ``runtime.fault.HeartbeatMonitor``) with EXACT semantics — see
-        ``solvers/redundant.py``.
+        ``redundancy=r`` (projection family, both backends) replicates
+        the row blocks r-redundantly so iterations tolerate stragglers
+        named by ``alive_schedule`` (callable t -> (m,) mask, a mask
+        array, or a ``runtime.fault.HeartbeatMonitor``) with EXACT
+        semantics — see ``solvers/redundant.py``.
 
         ``precision="mixed"`` (kernel path only) stores the streamed A/B
         tiles in bfloat16 with f32 accumulation — residual histories hold
         to the bf16 storage tolerance (~1e-2 relative) at half the HBM
         bytes per iteration.
+
+        The loose kwargs (``use_kernel=``, ``backend=``, ...) are a
+        DEPRECATED shim: they build the same plan and warn once.
         """
-        resume = warm_state is not None
-        check_capability(self, sys, context="solve")
-        use_kernel = resolve_use_kernel(self, sys, use_kernel)
-        self._check_precision(precision, use_kernel)
-        if redundancy != 1 or alive_schedule is not None:
-            use_mesh = self._dispatch_mesh(backend, use_kernel, mesh)
-            if use_kernel:
-                raise ValueError(
-                    "use_kernel=True is not supported with redundant "
-                    "execution (the Pallas path has no replicated layout)")
-            factors, params = self._store_factors(store, sys, factors,
-                                                  params, resume=resume)
+        plan = _coerce_plan(plan, dict(
+            use_kernel=use_kernel, precision=precision,
+            warm_state=warm_state, factors=factors, store=store,
+            backend=backend, mesh=mesh, worker_axes=worker_axes,
+            model_axis=model_axis, redundancy=redundancy,
+            alive_schedule=alive_schedule), context="solve")
+        plan = resolve_plan(self, sys, plan, context="solve")
+        resume = plan.warm_state is not None
+        if plan.is_redundant:
+            factors, params = self._store_factors(
+                plan.store, sys, plan.factors, params, resume=resume)
             from . import redundant as red_backend
             return red_backend.solve_redundant(
-                self, sys, r=redundancy, iters=iters, tol=tol,
-                alive_schedule=alive_schedule, warm_state=warm_state,
-                factors=factors, backend="mesh" if use_mesh else "local",
-                mesh=mesh, worker_axes=worker_axes, model_axis=model_axis,
+                self, sys, r=plan.redundancy, iters=iters, tol=tol,
+                alive_schedule=plan.alive_schedule,
+                warm_state=plan.warm_state, factors=factors,
+                backend=plan.backend, mesh=plan.mesh,
+                worker_axes=plan.worker_axes, model_axis=plan.model_axis,
                 **params)
-        if self._dispatch_mesh(backend, use_kernel, mesh):
+        if plan.backend == "mesh":
             # the store is threaded INTO the backend: a miss there runs
             # the on-mesh sharded mesh_prepare (no host factorization)
             # and inserts the result, so hits flow both ways
             from . import mesh as mesh_backend
             return mesh_backend.solve_mesh(
-                self, sys, mesh=mesh, iters=iters, tol=tol,
-                worker_axes=worker_axes, model_axis=model_axis,
-                warm_state=warm_state, factors=factors, store=store,
-                use_kernel=use_kernel, precision=precision, **params)
-        self._check_kernel(use_kernel)
+                self, sys, mesh=plan.mesh, iters=iters, tol=tol,
+                worker_axes=plan.worker_axes, model_axis=plan.model_axis,
+                warm_state=plan.warm_state, factors=plan.factors,
+                store=plan.store, use_kernel=plan.kernel,
+                precision=plan.precision, **params)
+        use_kernel, precision = plan.kernel, plan.precision
+        warm_state, factors, store = plan.warm_state, plan.factors, plan.store
         prm = self.resolve_params(sys, **params)
         if factors is None:
             if store is not None:
@@ -573,39 +658,40 @@ class Solver:
         return residual_fn
 
     def solve_many(self, sys: BlockSystem, B, *, iters: int = 1000,
-                   tol: float = 1e-6, use_kernel: bool = False,
-                   precision: str = "default",
-                   factors: Any = None, store: Any = None,
-                   backend: str = "local",
-                   mesh: Any = None, worker_axes=("data",),
-                   model_axis: Optional[str] = "model",
-                   redundancy: int = 1, alive_schedule: Any = None,
+                   tol: float = 1e-6,
+                   plan: Optional[ExecutionPlan] = None,
+                   use_kernel: Any = _UNSET, precision: Any = _UNSET,
+                   factors: Any = _UNSET, store: Any = _UNSET,
+                   backend: Any = _UNSET,
+                   mesh: Any = _UNSET, worker_axes: Any = _UNSET,
+                   model_axis: Any = _UNSET,
+                   redundancy: Any = _UNSET, alive_schedule: Any = _UNSET,
                    **params) -> SolveResult:
         """Batched multi-RHS solve sharing ONE ``prepare`` factorization.
 
         ``B`` is (k, N) — k right-hand sides for the same A.  Returns a
         batched SolveResult: x (k, n), residuals (k, T), errors None.
-        ``factors``/``store`` and ``backend``/``mesh`` behave as in
-        ``solve``.
+        The ``plan=`` surface behaves as in ``solve`` (redundancy is
+        rejected at plan resolution — run redundant solves per RHS); the
+        loose kwargs are the same deprecated shim.
         """
-        if redundancy != 1 or alive_schedule is not None:
-            # fail loudly rather than let the kwargs fall into **params and
-            # run the batch withOUT the straggler tolerance it asked for
-            raise ValueError(
-                "redundant execution is not supported by solve_many; run "
-                "solve(redundancy=..., alive_schedule=...) per right-hand "
-                "side, or batch without redundancy")
-        check_capability(self, sys, context="solve_many")
-        use_kernel = resolve_use_kernel(self, sys, use_kernel)
-        self._check_precision(precision, use_kernel)
-        if self._dispatch_mesh(backend, use_kernel, mesh):
+        plan = _coerce_plan(plan, dict(
+            use_kernel=use_kernel, precision=precision, factors=factors,
+            store=store, backend=backend, mesh=mesh,
+            worker_axes=worker_axes, model_axis=model_axis,
+            redundancy=redundancy, alive_schedule=alive_schedule),
+            context="solve_many")
+        plan = resolve_plan(self, sys, plan, context="solve_many")
+        if plan.backend == "mesh":
             from . import mesh as mesh_backend
             return mesh_backend.solve_many_mesh(
-                self, sys, B, mesh=mesh, iters=iters, tol=tol,
-                worker_axes=worker_axes, model_axis=model_axis,
-                factors=factors, store=store, use_kernel=use_kernel,
-                precision=precision, **params)
-        self._check_kernel(use_kernel)
+                self, sys, B, mesh=plan.mesh, iters=iters, tol=tol,
+                worker_axes=plan.worker_axes, model_axis=plan.model_axis,
+                factors=plan.factors, store=plan.store,
+                use_kernel=plan.kernel, precision=plan.precision,
+                **params)
+        use_kernel, precision = plan.kernel, plan.precision
+        factors, store = plan.factors, plan.store
         B = jnp.asarray(B)
         if B.ndim == 1:
             B = B[None, :]

@@ -1,4 +1,5 @@
-"""Per-solver capability declarations, checked at dispatch.
+"""Per-solver capability declarations and the ExecutionPlan, both
+checked ONCE at dispatch.
 
 Every solver declares the system classes it supports::
 
@@ -10,19 +11,38 @@ solver handed a least-squares system raises a :class:`CapabilityError`
 naming the solver and the mode instead of silently diverging — the
 failure the paper's consistency assumption would otherwise hide.
 
+The execution surface that accreted across PRs (``backend=``, ``mesh=``,
+``use_kernel=``, ``redundancy=``, ``alive_schedule=``, ``store=``,
+``precision=``, ``warm_state=``, ``factors=``, axis names) is one
+validated object now::
+
+    plan = ExecutionPlan(backend="mesh", kernel=True, precision="mixed")
+    res = solvers.get("apc").solve(sys, plan=plan, iters=500)
+
+:func:`resolve_plan` performs EVERY dispatch check in one place —
+capability, kernel resolution, precision, backend/mesh consistency,
+redundancy conflicts — and returns the resolved plan the drivers then
+execute without re-validating per branch.  The legacy loose kwargs keep
+working through a thin shim in ``Solver.solve``/``solve_many`` that
+builds the plan and emits exactly one ``DeprecationWarning`` (lint rule
+R009 keeps internal call sites off the shim).
+
 ``use_kernel=True`` on a sparse system dispatches the fused sparse
 Pallas pair (compressed-support gather/scatter — see ``kernels/ops``)
 silently, exactly like the dense engine: :func:`resolve_use_kernel`
 only downgrades the flag — loudly, with a ``RuntimeWarning`` plus a log
 line — on the genuinely unsupported cells (a kernel-capable solver in a
 mode its kernels do not cover, or a solver with no kernel engine at
-all).  ``redundancy=`` + kernel stays a hard ``ValueError`` in
-``solve`` (the coded-block path has no kernel layout).
+all).  ``kernel=True`` + ``redundancy=`` is a :class:`CapabilityError`
+at plan resolution (the coded-block path has no kernel layout) naming
+the solver, the conflicting plan fields, and the supported ways out.
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import warnings
+from typing import Any, Optional, Tuple
 
 log = logging.getLogger("repro.solvers")
 
@@ -77,3 +97,103 @@ def resolve_use_kernel(solver, sys, use_kernel: bool) -> bool:
         log.warning(msg)
         return False
     return use_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The validated execution surface of one solve.
+
+    Dispatch-identity fields (``backend``, ``kernel``, ``precision``,
+    ``redundancy``, axis names) decide WHAT compiled program runs and
+    together form :meth:`signature`, the hashable key the serving layer
+    caches executors under.  Payload fields (``mesh``, ``store``,
+    ``warm_state``, ``factors``, ``alive_schedule``) carry run-specific
+    objects and stay out of the signature.
+
+    Plans are frozen: derive variants with :meth:`replace` (e.g. the
+    elastic runtime swaps ``alive_schedule``/``warm_state`` per segment
+    while the dispatch identity — hence the compiled program — is
+    unchanged).
+    """
+
+    backend: str = "local"
+    kernel: bool = False
+    precision: str = "default"
+    redundancy: int = 1
+    worker_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+    # payload (unhashable / per-run) fields
+    mesh: Any = None
+    alive_schedule: Any = None
+    store: Any = None
+    warm_state: Any = None
+    factors: Any = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "worker_axes", tuple(self.worker_axes))
+        object.__setattr__(self, "kernel", bool(self.kernel))
+        if not isinstance(self.redundancy, (int,)) or self.redundancy < 1:
+            raise ValueError(
+                f"ExecutionPlan.redundancy must be an int >= 1, got "
+                f"{self.redundancy!r}")
+
+    def replace(self, **changes) -> "ExecutionPlan":
+        """A copy with ``changes`` applied (plans are immutable)."""
+        return dataclasses.replace(self, **changes)
+
+    def signature(self) -> tuple:
+        """Hashable dispatch identity: what compiled program this plan
+        selects.  Payload fields (mesh/store/warm_state/factors and the
+        schedule values) are deliberately excluded — only whether a
+        schedule exists matters for dispatch."""
+        return (self.backend, self.kernel, self.precision,
+                int(self.redundancy), self.alive_schedule is not None,
+                self.worker_axes, self.model_axis)
+
+    @property
+    def is_redundant(self) -> bool:
+        return self.redundancy != 1 or self.alive_schedule is not None
+
+
+def resolve_plan(solver, sys, plan: ExecutionPlan, *,
+                 context: str = "solve") -> ExecutionPlan:
+    """Validate ``plan`` against ``solver``/``sys`` and resolve it ONCE.
+
+    This is the single dispatch gate: capability check, kernel-flag
+    resolution (sparse downgrade), precision check, backend/mesh
+    consistency, kernel validity, and the redundancy conflicts all
+    happen here — the drivers downstream execute the returned plan
+    without re-validating per branch.  Returns the plan with ``kernel``
+    resolved to the flag that actually runs.
+    """
+    check_capability(solver, sys, context=context)
+    kernel = resolve_use_kernel(solver, sys, plan.kernel)
+    solver._check_precision(plan.precision, kernel)
+    if plan.backend == "local":
+        if plan.mesh is not None:
+            raise ValueError("a mesh was passed but backend is 'local' "
+                             "— did you mean backend='mesh'?")
+    elif plan.backend != "mesh":
+        raise ValueError(f"unknown backend {plan.backend!r}; "
+                         "expected 'local' or 'mesh'")
+    solver._check_kernel(kernel)
+    if plan.is_redundant:
+        if context.startswith("solve_many"):
+            # fail loudly rather than let the fields run the batch
+            # withOUT the straggler tolerance it asked for
+            raise ValueError(
+                "redundant execution is not supported by solve_many; run "
+                "solve(redundancy=..., alive_schedule=...) per right-hand "
+                "side, or batch without redundancy")
+        if kernel:
+            fields = [f"redundancy={plan.redundancy}"]
+            if plan.alive_schedule is not None:
+                fields.append("alive_schedule=<set>")
+            raise CapabilityError(
+                f"solver {solver.name!r} cannot run kernel=True "
+                f"(use_kernel=True) together with {', '.join(fields)}: "
+                f"the coded replicated (m, r, p, n) layout has no Pallas "
+                f"kernel. Drop kernel=True to keep the straggler "
+                f"tolerance, or drop redundancy=/alive_schedule= to keep "
+                f"the fused kernels.")
+    return plan if kernel == plan.kernel else plan.replace(kernel=kernel)

@@ -1,0 +1,434 @@
+"""Elastic runtime: membership-aware driving of the unified solve lifecycle.
+
+``ElasticRuntime`` wraps one solver + one global system and keeps a solve
+making progress while the worker fleet CHANGES underneath it.  It owns the
+loop the paper's synchronous taskmaster only sketches: solve in short
+warm-started segments, poll the ``HeartbeatMonitor``'s membership-event
+stream between segments, and react:
+
+  * **permanent death** (``mark_dead`` / ``sweep`` timeout) — the row
+    partition is KEPT and the redundant selection-weight schedule is
+    re-lowered over the survivors (``RedundantEngine.lower``); replicas of
+    the dead worker's blocks answer for it, so the iterate continues from
+    the live global-shape state, bit-exactly (see solvers/redundant.py).
+    If the survivors cannot cover every block (>= r cyclically-adjacent
+    holders lost) the runtime fails LOUDLY with a ``RuntimeError`` — a
+    silent wrong answer is never on the menu.
+
+  * **join / rejoin that grows the fleet** — the global system is
+    repartitioned over the alive workers (``pad_to_blocks`` +
+    ``partition``), the new assignment is warm-started by LIFTING the
+    current global iterate into the new block layout
+    (``Solver.lift_state``), and per-block factorizations are reused
+    through the ``FactorStore`` block tier wherever a block's (content,
+    slice, dtype, solver, params) fingerprint is unchanged —
+    ``reused_blocks`` / ``prepared_blocks`` report reuse vs
+    refactorization.  A returnee to the CURRENT fleet size is just a
+    reassignment: replicas resynced by the rejoin handshake, state and
+    compiled scan untouched.
+
+  * **taskmaster loss** — ``checkpoint()`` persists the in-flight global
+    iterate after every segment (atomic, versioned: checkpoint/ckpt.py);
+    ``ElasticRuntime.recover`` rebuilds a fresh runtime on a new process
+    from the store's DISK tier (factors come back as block-tier hits,
+    counted as reuse) plus the checkpointed iterate.
+
+Retrace discipline: one ``RedundantEngine`` is cached per fleet size, and
+every segment re-enters its compiled scan with a freshly lowered schedule
+of identical shape — membership changes cost a host-side lowering (death)
+or one engine build (first visit to a fleet size), never a steady-state
+retrace.  ``engine_cache_sizes()`` exposes the jit caches so benchmarks
+(benchmarks/chaos.py) can gate on exactly that.
+
+    from repro import solvers
+    from repro.runtime.fault import HeartbeatMonitor
+    rt = solvers.ElasticRuntime(
+        solvers.get("apc"), sys,
+        plan=solvers.ExecutionPlan(redundancy=2),
+        monitor=HeartbeatMonitor(n_workers=sys.m))
+    rt.monitor.mark_dead(2)          # death -> re-lower, keep iterating
+    rep = rt.run(iters=600)          # rep.reused_blocks / rep.events
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import partition as partition_lib
+from repro.core.partition import BlockSystem
+from repro.runtime.fault import HeartbeatMonitor, MembershipEvent, covering_ok
+
+from .api import SolveResult, iters_to_tolerance
+from .capability import CapabilityError, ExecutionPlan, resolve_plan
+from .redundant import RedundantEngine
+from .store import FactorStore
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticReport:
+    """What one ``ElasticRuntime.run`` segment-loop did and produced.
+
+    ``result`` is the ordinary ``SolveResult`` (final x, plain
+    global-shape state, residual/error history of THIS call); the elastic
+    bookkeeping rides alongside: the membership events absorbed, factor
+    reuse vs refactorization counts, and how often the runtime re-lowered
+    the schedule (deaths) or repartitioned (fleet growth).  ``iters`` is
+    CUMULATIVE across run calls and recoveries — the chaos benchmark
+    compares it against the oracle's uninterrupted count.
+    """
+    result: SolveResult
+    events: Tuple[MembershipEvent, ...]
+    iters: int
+    segments: int
+    reused_blocks: int
+    prepared_blocks: int
+    repartitions: int
+    relowerings: int
+    fleet: Tuple[int, ...]          # holder worker-ids after the run
+
+    # convenience mirrors so ``rep.x`` / ``rep.residuals`` read naturally
+    @property
+    def x(self):
+        return self.result.x
+
+    @property
+    def residuals(self):
+        return self.result.residuals
+
+    @property
+    def errors(self):
+        return self.result.errors
+
+    @property
+    def state(self):
+        return self.result.state
+
+    @property
+    def iters_to_tol(self):
+        return self.result.iters_to_tol
+
+
+@dataclasses.dataclass
+class _Partition:
+    """One fleet size's compiled world: system, factors, params, engine."""
+    sys: BlockSystem
+    prm: Dict[str, Any]
+    factors: Any
+    engine: RedundantEngine
+
+
+class ElasticRuntime:
+    """Drive a solve across fleet membership changes (see module docstring).
+
+    Parameters
+    ----------
+    solver:   a registry solver with redundant hooks (projection family).
+    sys:      the ``BlockSystem`` — its initial ``m`` must equal the
+              monitor's ``n_workers``.
+    plan:     an ``ExecutionPlan``; ``redundancy`` sets the death budget,
+              ``store`` supplies (or a fresh in-memory ``FactorStore``
+              replaces) the per-block factor cache, ``backend``/``mesh``
+              pick local vs shard_map execution, ``warm_state`` seeds the
+              first segment.  ``kernel=True`` and ``alive_schedule=`` are
+              rejected: the replicated layout has no fused kernel, and
+              elastic masks come from the monitor, not a fixed schedule.
+    monitor:  the ``HeartbeatMonitor`` whose event stream is polled
+              between segments.  The runtime drives beats itself (it IS
+              the driver loop), so membership truth is the explicit
+              death/rejoin/join transitions.
+    segment:  iterations per compiled segment — the reaction latency to a
+              membership event, and the shape the engine caches compile
+              against.
+    checkpoint_dir: when set, ``checkpoint()`` runs after every segment so
+              ``recover`` can rebuild after taskmaster loss.
+    """
+
+    def __init__(self, solver, sys: BlockSystem, *,
+                 plan: Optional[ExecutionPlan] = None,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 segment: int = 25, tol: float = 1e-6,
+                 checkpoint_dir: Optional[str] = None, **params):
+        if plan is None:
+            plan = ExecutionPlan()
+        if not isinstance(plan, ExecutionPlan):
+            raise TypeError(f"plan must be an ExecutionPlan, got "
+                            f"{type(plan).__name__}")
+        if plan.alive_schedule is not None:
+            raise ValueError(
+                "ExecutionPlan.alive_schedule is for fixed-schedule "
+                "solve(); the elastic runtime derives alive masks from "
+                "its HeartbeatMonitor")
+        plan = resolve_plan(solver, sys, plan, context="elastic")
+        if plan.kernel:
+            raise CapabilityError(
+                f"solver {solver.name!r} cannot run the elastic runtime "
+                f"with kernel=True: the replicated (m, r, p, n) layout "
+                f"has no Pallas kernel (same limit as redundancy= + "
+                f"use_kernel=True); drop kernel=True")
+        self.solver, self.plan = solver, plan
+        self.tol = float(tol)
+        self.segment = int(segment)
+        if self.segment < 1:
+            raise ValueError(f"segment must be >= 1, got {segment}")
+        self.checkpoint_dir = checkpoint_dir
+        self.params = dict(params)
+        self.monitor = (HeartbeatMonitor(n_workers=sys.m)
+                        if monitor is None else monitor)
+        if self.monitor.n_workers != sys.m:
+            raise ValueError(
+                f"HeartbeatMonitor tracks {self.monitor.n_workers} workers "
+                f"but the system has m={sys.m} blocks — build the monitor "
+                f"for the initial fleet")
+        self.store = plan.store if plan.store is not None else FactorStore()
+        self.base_sys = sys
+        self._A_global, self._b_global = sys.dense()
+        self._x_true = sys.x_true
+        self._dtype = jnp.asarray(sys.A_blocks).dtype
+
+        self._parts: Dict[int, _Partition] = {}
+        self.reused_blocks = 0
+        self.prepared_blocks = 0
+        self.repartitions = 0
+        self.relowerings = 0
+        self.segments = 0
+        self.events: List[MembershipEvent] = []
+        self._iters_done = 0
+        self._state = None              # replicated state of current engine
+        self._warm_x = None             # recovered global iterate (if any)
+        self._holders = np.arange(sys.m)
+        self._current = self._partition_for(sys.m)
+        self._beat_alive()
+
+    # ------------------------------------------------------------------
+    # partitions & engines
+    # ------------------------------------------------------------------
+    @property
+    def sys(self) -> BlockSystem:
+        """The CURRENT partition's system (m tracks the fleet size)."""
+        return self._current.sys
+
+    @property
+    def engine(self) -> RedundantEngine:
+        return self._current.engine
+
+    def engine_cache_sizes(self) -> Dict[int, int]:
+        """jit-cache entries per fleet size — flat across steady-state
+        segments; the chaos benchmark gates on the post-change delta."""
+        return {m: part.engine.cache_size()
+                for m, part in sorted(self._parts.items())}
+
+    def _partition_for(self, m_new: int) -> _Partition:
+        """The compiled world for fleet size ``m_new`` (built once)."""
+        part = self._parts.get(m_new)
+        if part is not None:
+            return part
+        if m_new == self.base_sys.m:
+            sys2 = self.base_sys
+        else:
+            A2, b2 = partition_lib.pad_to_blocks(
+                self._A_global, self._b_global, m_new)
+            sys2 = partition_lib.partition(
+                A2, b2, m_new, x_true=self._x_true, mode=self.base_sys.mode)
+        prm2 = self.solver.resolve_params(sys2, **self.params)
+        if (getattr(self.solver, "supports_block_store", False)
+                and not sys2.is_sparse):
+            factors2, reuse = self.store.blockwise_factors(
+                self.solver, sys2, precision=self.plan.precision,
+                **self.params)
+            self.reused_blocks += reuse.reused
+            self.prepared_blocks += reuse.prepared
+        else:
+            factors2 = self.solver.prepare(sys2.A_blocks, prm2)
+            self.prepared_blocks += sys2.m
+        engine = RedundantEngine(
+            self.solver, sys2, r=min(self.plan.redundancy, m_new),
+            backend=self.plan.backend, mesh=self.plan.mesh,
+            worker_axes=self.plan.worker_axes,
+            model_axis=self.plan.model_axis, factors=factors2,
+            **self.params)
+        part = _Partition(sys=sys2, prm=prm2, factors=factors2,
+                          engine=engine)
+        self._parts[m_new] = part
+        return part
+
+    # ------------------------------------------------------------------
+    # membership
+    # ------------------------------------------------------------------
+    def _alive_holder_mask(self) -> np.ndarray:
+        """(m,) bool: is the holder of block-slot i alive right now?"""
+        dead = self.monitor.dead
+        return np.array([w not in dead for w in self._holders], dtype=bool)
+
+    def _beat_alive(self):
+        dead = self.monitor.dead
+        for w in range(self.monitor.n_workers):
+            if w not in dead:
+                self.monitor.beat(w)
+
+    def _require_covered(self, alive: np.ndarray):
+        r = self.engine.r
+        if not covering_ok(alive, r):
+            lost = [int(w) for w, a in zip(self._holders, alive) if not a]
+            raise RuntimeError(
+                f"elastic fleet uncoverable: dead workers {lost} include "
+                f">= r={r} cyclically-adjacent holders over m={self.sys.m} "
+                f"blocks — no survivor holds a replica of every block.  "
+                f"Add workers (monitor.join / rejoin) or recover from the "
+                f"last checkpoint onto a fresh fleet")
+
+    def _absorb_events(self):
+        """Drain the monitor stream and react (see module docstring)."""
+        events = self.monitor.poll_events()
+        if not events:
+            return
+        self.events.extend(events)
+        deaths = [e for e in events if e.kind == "died"]
+        growth = [e for e in events if e.kind in ("joined", "rejoined")]
+        if growth:
+            self._repartition()
+        if deaths:
+            # the partition is kept; the NEXT segment lowers the schedule
+            # over the survivors — fail loudly now if they can't cover
+            self._require_covered(self._alive_holder_mask())
+            self.relowerings += 1
+
+    def _repartition(self):
+        dead = self.monitor.dead
+        holders = np.array([w for w in range(self.monitor.n_workers)
+                            if w not in dead], dtype=int)
+        if holders.size == 0:
+            raise RuntimeError("elastic fleet has no alive workers left")
+        m_new = int(holders.size)
+        if m_new == self.sys.m:
+            # same fleet size: a returnee slots into the existing layout
+            # (replicas resynced by the join/rejoin handshake); the state
+            # and the compiled scan are untouched.
+            self._holders = holders
+            return
+        x = self._global_x()
+        part = self._partition_for(m_new)
+        self._current = part
+        self._holders = holders
+        lifted = self.solver.lift_state(part.factors, part.sys.b_blocks,
+                                        part.prm, x)
+        self._state = part.engine.init_state(lifted)
+        self.repartitions += 1
+
+    # ------------------------------------------------------------------
+    # state plumbing
+    # ------------------------------------------------------------------
+    def _global_x(self) -> jnp.ndarray:
+        """The current global iterate (n,) — partition-independent."""
+        if self._state is not None:
+            return self.solver.extract(self.engine.collapse(self._state))
+        if self._warm_x is not None:
+            return jnp.asarray(self._warm_x)
+        if self.plan.warm_state is not None:
+            return jnp.asarray(self.solver.extract(self.plan.warm_state))
+        return jnp.zeros((self.sys.n,), self._dtype)
+
+    def _initial_state(self):
+        part = self._current
+        if self._warm_x is not None:        # taskmaster recovery
+            lifted = self.solver.lift_state(
+                part.factors, part.sys.b_blocks, part.prm,
+                jnp.asarray(self._warm_x))
+            self._warm_x = None
+            return part.engine.init_state(lifted)
+        return part.engine.init_state(self.plan.warm_state)
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def run(self, iters: int = 1000, *, tol: Optional[float] = None
+            ) -> ElasticReport:
+        """Run ``iters`` more iterations, absorbing membership events at
+        segment boundaries.  Returns an ``ElasticReport``; call again to
+        keep going — state, counters and engine caches persist."""
+        tol = self.tol if tol is None else float(tol)
+        remaining = int(iters)
+        events_before = len(self.events)
+        segments_before = self.segments
+        self._absorb_events()
+        if self._state is None:
+            self._state = self._initial_state()
+        res_parts, err_parts = [], []
+        while remaining > 0:
+            self._absorb_events()
+            T = min(self.segment, remaining)
+            alive = self._alive_holder_mask()
+            self._require_covered(alive)
+            W_seq = self.engine.lower(
+                np.broadcast_to(alive, (T, self.sys.m)))
+            self._state, res, err = self.engine.run(self._state, W_seq)
+            res_parts.append(np.asarray(res))
+            err_parts.append(np.asarray(err))
+            remaining -= T
+            self._iters_done += T
+            self.segments += 1
+            self._beat_alive()
+            if self.checkpoint_dir is not None:
+                self.checkpoint()
+        residuals = (np.concatenate(res_parts) if res_parts
+                     else np.zeros((0,)))
+        errors = (np.concatenate(err_parts) if err_parts
+                  else np.zeros((0,)))
+        state = self.engine.collapse(self._state)
+        result = SolveResult(
+            name=self.solver.name, x=self.solver.extract(state),
+            state=state, residuals=residuals,
+            errors=errors if self._x_true is not None else None,
+            params=self._current.prm,
+            iters_to_tol=iters_to_tolerance(residuals, tol), tol=tol)
+        return ElasticReport(
+            result=result, events=tuple(self.events[events_before:]),
+            iters=self._iters_done,
+            segments=self.segments - segments_before,
+            reused_blocks=self.reused_blocks,
+            prepared_blocks=self.prepared_blocks,
+            repartitions=self.repartitions,
+            relowerings=self.relowerings,
+            fleet=tuple(int(w) for w in self._holders))
+
+    # ------------------------------------------------------------------
+    # taskmaster loss
+    # ------------------------------------------------------------------
+    def checkpoint(self, directory: Optional[str] = None) -> str:
+        """Atomically persist the in-flight global iterate (+ iteration
+        count).  Together with the store's disk tier this is the full
+        serving state a replacement taskmaster needs."""
+        d = directory or self.checkpoint_dir
+        if d is None:
+            raise ValueError(
+                "no checkpoint directory: pass checkpoint_dir= at "
+                "construction or directory= here")
+        tree = {"iters": jnp.asarray(self._iters_done, jnp.int32),
+                "x": jnp.asarray(self._global_x(), self._dtype)}
+        return ckpt.save(d, self._iters_done, tree)
+
+    @classmethod
+    def recover(cls, solver, sys: BlockSystem, directory: str, *,
+                plan: Optional[ExecutionPlan] = None,
+                monitor: Optional[HeartbeatMonitor] = None,
+                segment: int = 25, tol: float = 1e-6,
+                **params) -> "ElasticRuntime":
+        """Rebuild a runtime after taskmaster loss.
+
+        A FRESH process constructs the runtime (factors flow back through
+        the store's disk tier — point ``plan.store`` at the same
+        ``FactorStore`` directory and the rebuild counts as
+        ``reused_blocks``), then restores the checkpointed iterate, which
+        the first segment lifts into the current fleet's partition.
+        """
+        rt = cls(solver, sys, plan=plan, monitor=monitor, segment=segment,
+                 tol=tol, checkpoint_dir=directory, **params)
+        like = {"iters": jnp.zeros((), jnp.int32),
+                "x": jnp.zeros((sys.n,), rt._dtype)}
+        tree = ckpt.restore(directory, like)
+        rt._warm_x = tree["x"]
+        rt._iters_done = int(tree["iters"])
+        return rt

@@ -529,3 +529,109 @@ def solve_many_mesh(solver, sys: BlockSystem, B, *,
     return SolveResult(
         name=solver.name, x=X, state=states, residuals=res, errors=None,
         params=prm, iters_to_tol=iters_to_tolerance(res, tol), tol=tol)
+
+
+class RedundantRunner:
+    """Compile-once mesh runner for the r-redundant scan.
+
+    Built by ``redundant.RedundantEngine`` on ``backend="mesh"``: all
+    placement and both jits (on-mesh replicated prepare/init plus the
+    segment scan) are constructed ONCE here, and ``run`` re-enters the
+    SAME compiled shard_map scan with a freshly lowered selection-weight
+    schedule of identical shape.  A membership change that keeps the
+    partition (a worker death under r-redundancy) therefore costs a
+    schedule re-lowering, never a retrace — the property the elastic
+    runtime's benchmarks gate on.
+    """
+
+    def __init__(self, solver, sys: BlockSystem, assign, prm, *,
+                 mesh: Optional[Mesh] = None,
+                 worker_axes: Sequence[str] = ("data",),
+                 model_axis: Optional[str] = "model",
+                 factors: Any = None):
+        from . import redundant as red  # lazy: redundant.py imports us
+
+        if mesh is None:
+            mesh = _default_mesh(sys.m)
+        ctx = make_context(mesh, sys, worker_axes=worker_axes,
+                           model_axis=model_axis)
+        self.solver, self.assign = solver, assign
+        self.mesh, self.ctx, self.prm = mesh, ctx, prm
+        A_spec, b_spec = P(ctx.w, None, ctx.n), P(ctx.w, None)
+        Arep_spec = P(ctx.w, None, None, ctx.n)
+        brep_spec = P(ctx.w, None, None)
+        self._W_spec, self._Wseq_spec = P(ctx.w, None), P(None, ctx.w, None)
+        fspecs = solver.red_factor_specs(ctx)
+        self._sspecs = sspecs = solver.red_state_specs(ctx)
+
+        put = lambda v, s: jax.device_put(v, NamedSharding(mesh, s))
+        A_rep, b_rep = red.replicate_system(sys, assign)
+        self._A, self._b = put(sys.A_blocks, A_spec), put(sys.b_blocks, b_spec)
+        A_rep, self._b_rep = put(A_rep, Arep_spec), put(b_rep, brep_spec)
+
+        if factors is None:
+            prep = jax.jit(shard_map(
+                lambda Ar: red._red_mesh_prepare(solver, Ar, prm, ctx),
+                mesh=mesh, in_specs=(Arep_spec,), out_specs=fspecs))
+            self._frep = prep(A_rep)
+        else:
+            self._frep = _put_tree(
+                solver.red_factors(solver.mesh_factors(factors), assign),
+                fspecs, mesh)
+
+        self._init = jax.jit(shard_map(
+            lambda f, br, W0: solver.red_init(f, br, prm, W0, ctx),
+            mesh=mesh, in_specs=(fspecs, brep_spec, self._W_spec),
+            out_specs=sspecs))
+
+        xt = sys.x_true
+        self._xt = () if xt is None else (put(xt, P(ctx.n)),)
+        in_specs = (A_spec, b_spec, brep_spec, fspecs, sspecs,
+                    self._Wseq_spec)
+        if xt is not None:
+            in_specs += (P(ctx.n),)
+
+        def run_body(A_, b_, br_, f_, s_, Ws_, *rest):
+            b_norm = jnp.sqrt(ctx.psum_workers(jnp.sum(b_ * b_)))
+            xt_ = rest[0] if rest else None
+            xt_norm = (jnp.sqrt(ctx.psum_model(jnp.sum(xt_ * xt_)))
+                       if xt_ is not None else None)
+
+            def body(st, Wt):
+                st = solver.red_step(f_, br_, st, prm, Wt, ctx)
+                x = solver.extract(st)
+                res = residual_shard(A_, b_, x, b_norm, ctx)
+                if xt_ is not None:
+                    dx = x - xt_
+                    err = jnp.sqrt(ctx.psum_model(jnp.sum(dx * dx))) / xt_norm
+                else:
+                    err = res
+                return st, (res, err)
+
+            s_, (res, err) = jax.lax.scan(body, s_, Ws_)
+            return s_, res, err
+
+        self._run = jax.jit(shard_map(run_body, mesh=mesh, in_specs=in_specs,
+                                      out_specs=(sspecs, P(), P())))
+
+    def init_state(self, warm_state, W_all):
+        """Fresh ``red_init`` (warm_state None) or a placed ``red_expand``
+        of a GLOBAL-shape warm state."""
+        if warm_state is None:
+            W_all = jax.device_put(W_all,
+                                   NamedSharding(self.mesh, self._W_spec))
+            return self._init(self._frep, self._b_rep, W_all)
+        return _put_tree(self.solver.red_expand(warm_state, self.assign),
+                         self._sspecs, self.mesh)
+
+    def run(self, state, W_seq):
+        """One segment: re-enters the compiled scan with a new schedule."""
+        W_seq = jax.device_put(W_seq,
+                               NamedSharding(self.mesh, self._Wseq_spec))
+        return self._run(self._A, self._b, self._b_rep, self._frep, state,
+                         W_seq, *self._xt)
+
+    def cache_size(self) -> int:
+        sizes = [getattr(f, "_cache_size", lambda: -1)()
+                 for f in (self._init, self._run)]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)

@@ -130,6 +130,8 @@ class AsyncLinsysServer(LinsysServer):
                 f"admit_capacity must be >= 1, got {admit_capacity}")
         self.pipeline_depth = pipeline_depth
         self.admit_capacity = admit_capacity
+        self._admit_base = admit_capacity   # full-fleet capacity; see
+                                            # on_membership()
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)   # assembly wakeups
         self._idle = threading.Condition(self._lock)   # drain/close wakeups
@@ -227,6 +229,30 @@ class AsyncLinsysServer(LinsysServer):
         """Requests admitted and not yet completed (queued + in flight)."""
         with self._lock:
             return self._in_system
+
+    def on_membership(self, alive: int, total: int) -> int:
+        """Scale admission to the live fraction of the worker fleet.
+
+        The elastic integration point: when the fleet shrinks (deaths
+        reported by a ``HeartbeatMonitor`` / ``ElasticRuntime`` event
+        stream), per-batch latency rises — so admission must shrink with
+        it or queueing delay grows unboundedly.  Overload under a
+        shrunken fleet therefore degrades AVAILABILITY (explicit ``Shed``
+        at admission), never correctness or the latency of admitted work.
+        Capacity recovers automatically when the fleet does (call again
+        with the new alive count); it never drops below 1, so the server
+        keeps serving as long as any worker lives.  Returns the new
+        ``admit_capacity``.
+        """
+        if total < 1:
+            raise ValueError(f"total workers must be >= 1, got {total}")
+        if not 0 <= alive <= total:
+            raise ValueError(
+                f"alive={alive} must be within [0, total={total}]")
+        with self._lock:
+            self.admit_capacity = max(
+                1, int(self._admit_base * alive / total))
+            return self.admit_capacity
 
     # ----- stage 2: batch assembly (host thread) ----------------------------
     def _next_group(self):

@@ -531,6 +531,22 @@ class APCSolver(Solver):
     def red_state_specs(self, ctx):
         return APCState(x=P(ctx.w, None, ctx.n), xbar=P(ctx.n), t=P())
 
+    # ----- cross-partition warm start (solvers/elastic.py) ------------------
+    # APC states are partition-specific: each x_i must satisfy A_i x_i =
+    # b_i for THIS partition's blocks.  The lift projects the global
+    # estimate onto every new block's feasible set — x_i = x + A_iᵀ
+    # G_i⁻¹(b_i − A_i x) — so the invariant the step relies on holds from
+    # the first post-repartition iteration, with x̄ carrying x verbatim.
+    supports_lift = True
+    supports_block_store = True    # per-block Gram Cholesky, leading m axis
+
+    def lift_state(self, factors, b, params, x):
+        x = jnp.asarray(x)
+        v = b - blockops.bmatvec(factors.A, x)            # (m, p)
+        w = _cho_solve_workers(factors.chol, v)
+        xi = x[None, :] + blockops.brmatvec(factors.A, w)
+        return APCState(x=xi, xbar=x, t=jnp.zeros((), jnp.int32))
+
 
 @register("consensus")
 class ConsensusSolver(APCSolver):
@@ -888,3 +904,12 @@ class CimminoSolver(Solver):
         s = ctx.psum_workers(jnp.einsum("mr,mrn->n", W, r))
         return CimminoState(xbar=state.xbar + params["nu"] * s,
                             t=state.t + 1)
+
+    # ----- cross-partition warm start (solvers/elastic.py) ------------------
+    # The state is the master estimate alone and carries no per-block
+    # invariant, so it lifts across any repartition verbatim.
+    supports_lift = True
+    supports_block_store = True    # per-block Gram Cholesky, leading m axis
+
+    def lift_state(self, factors, b, params, x):
+        return CimminoState(xbar=jnp.asarray(x), t=jnp.zeros((), jnp.int32))

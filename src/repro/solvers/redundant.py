@@ -48,7 +48,6 @@ from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 import numpy as np
 
 from repro.core.partition import BlockSystem
@@ -184,6 +183,118 @@ def _check_solver(solver, sys: BlockSystem, r: int):
         raise ValueError(f"redundancy r={r} must be in [1, m={sys.m}]")
 
 
+class RedundantEngine:
+    """Compile-once, re-enterable segment runner for redundant execution.
+
+    An engine binds the FIXED part of a redundant solve — solver, system
+    partition, r, resolved params, backend, mesh placement, replicated
+    factors — and compiles the scan ONCE.  Segments then re-enter the
+    SAME jitted computation with a new ``(state, W_seq)`` pair: as long
+    as shapes match (same partition, same segment length), a membership
+    change costs one host-side schedule re-lowering (``lower``) and zero
+    retraces.  That is exactly the death path of
+    ``solvers.elastic.ElasticRuntime``, which also caches one engine per
+    partition signature so a rejoin to a previously-seen fleet size
+    reuses the compiled scan too.
+
+    ``solve_redundant`` is a thin wrapper over one engine + one segment,
+    so every existing redundant test exercises this code path.
+    """
+
+    def __init__(self, solver, sys: BlockSystem, *, r: int,
+                 backend: str = "local", mesh: Any = None,
+                 worker_axes: Sequence[str] = ("data",),
+                 model_axis: Optional[str] = "model",
+                 factors: Any = None, **params):
+        _check_solver(solver, sys, r)
+        self.solver, self.sys = solver, sys
+        self.r = int(r)
+        self.assign = Assignment(m=sys.m, r=self.r)
+        self.backend = backend
+        self.prm = solver.resolve_params(sys, **params)
+        self.dtype = jnp.asarray(sys.A_blocks).dtype
+        self.W_all = jnp.asarray(
+            selection_weights(np.ones(sys.m, bool), sys.m, self.r),
+            dtype=self.dtype)
+        if backend == "mesh":
+            from . import mesh as mesh_backend
+            self._mesh_runner = mesh_backend.RedundantRunner(
+                solver, sys, self.assign, self.prm, mesh=mesh,
+                worker_axes=worker_axes, model_axis=model_axis,
+                factors=factors)
+        else:
+            self._mesh_runner = None
+            if factors is None:
+                factors = solver.prepare(sys.A_blocks, self.prm)
+            # strip host-only fields (e.g. kernel pinv factors) before
+            # replicating
+            self._frep = solver.red_factors(solver.mesh_factors(factors),
+                                            self.assign)
+            _, self._b_rep = replicate_system(sys, self.assign)
+            xt = sys.x_true
+            self._xt = () if xt is None else (jnp.asarray(xt),)
+            self._run = jax.jit(self._segment)
+
+    def _segment(self, frep, b_rep, A, b, state, W_seq, *rest):
+        solver, prm = self.solver, self.prm
+        b_norm = jnp.sqrt(jnp.sum(b * b))
+        xt = rest[0] if rest else None
+        xt_norm = None if xt is None else jnp.linalg.norm(xt)
+
+        def body(st, Wt):
+            st = solver.red_step(frep, b_rep, st, prm, Wt, _LOCAL)
+            x = solver.extract(st)
+            rr = jnp.einsum("mpn,n->mp", A, x) - b
+            res = jnp.sqrt(jnp.sum(rr * rr)) / b_norm
+            err = (jnp.linalg.norm(x - xt) / xt_norm) if xt is not None \
+                else res
+            return st, (res, err)
+
+        state, (res, err) = jax.lax.scan(body, state, W_seq)
+        return state, res, err
+
+    def lower(self, alive) -> jnp.ndarray:
+        """(T, m) alive masks -> (T, m, r) selection weights.  Raises the
+        loud ``unrecoverable`` RuntimeError if a block has no alive
+        holder — the caller then repartitions or gives up."""
+        return jnp.asarray(
+            schedule_weights(np.asarray(alive, dtype=bool), self.r),
+            dtype=self.dtype)
+
+    def init_state(self, warm_state: Any = None):
+        """Fresh ``red_init`` or a replicated expansion of a GLOBAL-shape
+        warm state (any backend/redundancy produced it)."""
+        if self._mesh_runner is not None:
+            return self._mesh_runner.init_state(warm_state, self.W_all)
+        if warm_state is None:
+            return self.solver.red_init(self._frep, self._b_rep, self.prm,
+                                        self.W_all, _LOCAL)
+        return self.solver.red_expand(warm_state, self.assign)
+
+    def run(self, state, W_seq):
+        """One segment: scan ``red_step`` over ``W_seq`` from ``state``;
+        returns ``(state, residuals, errors)``.  Re-entering with a
+        same-shaped pair hits the jit cache."""
+        if self._mesh_runner is not None:
+            return self._mesh_runner.run(state, W_seq)
+        return self._run(self._frep, self._b_rep,
+                         jnp.asarray(self.sys.A_blocks),
+                         jnp.asarray(self.sys.b_blocks), state, W_seq,
+                         *self._xt)
+
+    def collapse(self, state):
+        """Replicated -> plain GLOBAL-shape state."""
+        return self.solver.red_collapse(state, self.assign)
+
+    def cache_size(self) -> int:
+        """Total jit-cache entries across the engine's compiled callables
+        (-1 when the runtime does not expose cache introspection) — the
+        zero-steady-state-retrace benchmarks assert this stays flat."""
+        if self._mesh_runner is not None:
+            return self._mesh_runner.cache_size()
+        return getattr(self._run, "_cache_size", lambda: -1)()
+
+
 def solve_redundant(solver, sys: BlockSystem, *, r: int, iters: int = 1000,
                     tol: float = 1e-6, alive_schedule=None,
                     warm_state: Any = None, factors: Any = None,
@@ -194,125 +305,27 @@ def solve_redundant(solver, sys: BlockSystem, *, r: int, iters: int = 1000,
     """Shared driver for ``solve(..., redundancy=r, alive_schedule=...)``.
 
     Lowers the alive schedule to per-iteration selection weights once, then
-    runs the solver's ``red_step`` in a single jitted scan over them —
-    locally or under shard_map on ``backend="mesh"``.  The returned
-    ``SolveResult`` carries the plain GLOBAL-shape state.
+    runs one ``RedundantEngine`` segment over them — locally or under
+    shard_map on ``backend="mesh"``.  The returned ``SolveResult`` carries
+    the plain GLOBAL-shape state.
     """
     _check_solver(solver, sys, r)
-    assign = Assignment(m=sys.m, r=r)
     alive = resolve_schedule(alive_schedule, sys.m, iters)
-    dtype = jnp.asarray(sys.A_blocks).dtype
-    W_seq = jnp.asarray(schedule_weights(alive, r), dtype=dtype)
-    W_all = jnp.asarray(selection_weights(np.ones(sys.m, bool), sys.m, r),
-                        dtype=dtype)
-    prm = solver.resolve_params(sys, **params)
-    run = _run_mesh if backend == "mesh" else _run_local
-    state, res, err = run(solver, sys, assign, W_seq, W_all, prm,
-                          warm_state, factors, mesh, worker_axes, model_axis)
-    state = solver.red_collapse(state, assign)
+    # lower BEFORE the (expensive) engine build so an uncoverable schedule
+    # fails loudly without paying for prepare/compile
+    W_host = schedule_weights(alive, r)
+    engine = RedundantEngine(solver, sys, r=r, backend=backend, mesh=mesh,
+                             worker_axes=worker_axes, model_axis=model_axis,
+                             factors=factors, **params)
+    state = engine.init_state(warm_state)
+    state, res, err = engine.run(state,
+                                 jnp.asarray(W_host, dtype=engine.dtype))
+    state = engine.collapse(state)
     return SolveResult(
         name=solver.name, x=solver.extract(state), state=state,
         residuals=res, errors=err if sys.x_true is not None else None,
-        params=prm, iters_to_tol=iters_to_tolerance(res, tol), tol=tol)
-
-
-def _run_local(solver, sys, assign, W_seq, W_all, prm, warm_state, factors,
-               mesh, worker_axes, model_axis):
-    if factors is None:
-        factors = solver.prepare(sys.A_blocks, prm)
-    # strip host-only fields (e.g. kernel pinv factors) before replicating
-    frep = solver.red_factors(solver.mesh_factors(factors), assign)
-    _, b_rep = replicate_system(sys, assign)
-    state = (solver.red_init(frep, b_rep, prm, W_all, _LOCAL)
-             if warm_state is None else solver.red_expand(warm_state, assign))
-    A, b = sys.A_blocks, sys.b_blocks
-    b_norm = jnp.sqrt(jnp.sum(b * b))
-    xt = sys.x_true
-    xt_norm = None if xt is None else jnp.linalg.norm(xt)
-
-    def body(st, Wt):
-        st = solver.red_step(frep, b_rep, st, prm, Wt, _LOCAL)
-        x = solver.extract(st)
-        rr = jnp.einsum("mpn,n->mp", A, x) - b
-        res = jnp.sqrt(jnp.sum(rr * rr)) / b_norm
-        err = (jnp.linalg.norm(x - xt) / xt_norm) if xt is not None else res
-        return st, (res, err)
-
-    state, (res, err) = jax.lax.scan(body, state, W_seq)
-    return state, res, err
-
-
-def _run_mesh(solver, sys, assign, W_seq, W_all, prm, warm_state, factors,
-              mesh, worker_axes, model_axis):
-    from . import mesh as mesh_backend
-
-    if mesh is None:
-        mesh = mesh_backend._default_mesh(sys.m)
-    ctx = mesh_backend.make_context(mesh, sys, worker_axes=worker_axes,
-                                    model_axis=model_axis)
-    A_spec, b_spec = P(ctx.w, None, ctx.n), P(ctx.w, None)
-    Arep_spec, brep_spec = P(ctx.w, None, None, ctx.n), P(ctx.w, None, None)
-    W_spec, Wseq_spec = P(ctx.w, None), P(None, ctx.w, None)
-    fspecs = solver.red_factor_specs(ctx)
-    sspecs = solver.red_state_specs(ctx)
-
-    put = lambda v, s: jax.device_put(v, NamedSharding(mesh, s))
-    A_rep, b_rep = replicate_system(sys, assign)
-    A, b = put(sys.A_blocks, A_spec), put(sys.b_blocks, b_spec)
-    A_rep, b_rep = put(A_rep, Arep_spec), put(b_rep, brep_spec)
-    W_seq, W_all = put(W_seq, Wseq_spec), put(W_all, W_spec)
-
-    shard_map = mesh_backend.shard_map
-    if factors is None:
-        prep = jax.jit(shard_map(
-            lambda Ar: _red_mesh_prepare(solver, Ar, prm, ctx), mesh=mesh,
-            in_specs=(Arep_spec,), out_specs=fspecs))
-        frep = prep(A_rep)
-    else:
-        frep = mesh_backend._put_tree(
-            solver.red_factors(solver.mesh_factors(factors), assign),
-            fspecs, mesh)
-
-    if warm_state is None:
-        init_fn = jax.jit(shard_map(
-            lambda f, br, W0: solver.red_init(f, br, prm, W0, ctx),
-            mesh=mesh, in_specs=(fspecs, brep_spec, W_spec),
-            out_specs=sspecs))
-        state = init_fn(frep, b_rep, W_all)
-    else:
-        state = mesh_backend._put_tree(
-            solver.red_expand(warm_state, assign), sspecs, mesh)
-
-    xt = sys.x_true
-    args = (A, b, b_rep, frep, state, W_seq)
-    in_specs = (A_spec, b_spec, brep_spec, fspecs, sspecs, Wseq_spec)
-    if xt is not None:
-        args += (put(xt, P(ctx.n)),)
-        in_specs += (P(ctx.n),)
-
-    def run_body(A_, b_, br_, f_, s_, Ws_, *rest):
-        b_norm = jnp.sqrt(ctx.psum_workers(jnp.sum(b_ * b_)))
-        xt_ = rest[0] if rest else None
-        xt_norm = (jnp.sqrt(ctx.psum_model(jnp.sum(xt_ * xt_)))
-                   if xt_ is not None else None)
-
-        def body(st, Wt):
-            st = solver.red_step(f_, br_, st, prm, Wt, ctx)
-            x = solver.extract(st)
-            res = mesh_backend.residual_shard(A_, b_, x, b_norm, ctx)
-            if xt_ is not None:
-                dx = x - xt_
-                err = jnp.sqrt(ctx.psum_model(jnp.sum(dx * dx))) / xt_norm
-            else:
-                err = res
-            return st, (res, err)
-
-        s_, (res, err) = jax.lax.scan(body, s_, Ws_)
-        return s_, res, err
-
-    run = jax.jit(shard_map(run_body, mesh=mesh, in_specs=in_specs,
-                            out_specs=(sspecs, P(), P())))
-    return run(*args)
+        params=engine.prm, iters_to_tol=iters_to_tolerance(res, tol),
+        tol=tol)
 
 
 def _red_mesh_prepare(solver, A_rep, prm, ctx):

@@ -47,7 +47,8 @@ from jax.sharding import NamedSharding
 from repro.core.partition import BlockSystem
 
 from .api import LOCAL_PSUM, _history_scan_many, iters_to_tolerance
-from .capability import check_capability, resolve_use_kernel
+from .capability import (ExecutionPlan, check_capability,
+                         resolve_use_kernel)
 from .store import FactorStore
 
 
@@ -227,11 +228,44 @@ class LinsysServer:
 
     def __init__(self, store: Optional[FactorStore] = None, *,
                  solver="apc", iters: int = 500, tol: float = 1e-6,
-                 batch: int = 4, backend: str = "local", mesh=None,
+                 batch: int = 4, plan: Optional[ExecutionPlan] = None,
+                 backend: str = "local", mesh=None,
                  warm_start: bool = False, use_kernel: bool = False,
                  precision: str = "default",
                  worker_axes: Sequence[str] = ("data",),
                  model_axis: Optional[str] = "model", **params):
+        if plan is not None:
+            if not isinstance(plan, ExecutionPlan):
+                raise TypeError(f"plan must be an ExecutionPlan, got "
+                                f"{type(plan).__name__}")
+            if (backend != "local" or mesh is not None or use_kernel
+                    or precision != "default"
+                    or tuple(worker_axes) != ("data",)
+                    or model_axis != "model"):
+                raise ValueError(
+                    "pass the execution surface EITHER on plan= OR as "
+                    "loose kwargs, not both")
+            if plan.is_redundant:
+                raise ValueError(
+                    "redundant execution is not servable: the coalesced "
+                    "solve_many batches have no coded replicated layout; "
+                    "run solve(plan=ExecutionPlan(redundancy=..., "
+                    "alive_schedule=...)) per right-hand side")
+            if plan.warm_state is not None or plan.factors is not None:
+                raise ValueError(
+                    "a server plan cannot carry warm_state=/factors= — "
+                    "warm starts are per-system (warm_start=True) and "
+                    "factors flow through the FactorStore")
+            if store is None and plan.store is not None:
+                store = plan.store
+            backend, mesh = plan.backend, plan.mesh
+            use_kernel, precision = plan.kernel, plan.precision
+            worker_axes, model_axis = plan.worker_axes, plan.model_axis
+        else:
+            plan = ExecutionPlan(backend=backend, kernel=use_kernel,
+                                 precision=precision, mesh=mesh,
+                                 worker_axes=tuple(worker_axes),
+                                 model_axis=model_axis)
         if backend not in ("local", "mesh"):
             raise ValueError(f"unknown backend {backend!r}; "
                              "expected 'local' or 'mesh'")
@@ -242,6 +276,7 @@ class LinsysServer:
         self.solver = get(solver) if isinstance(solver, str) else solver
         self.solver._check_kernel(use_kernel)
         self.solver._check_precision(precision, use_kernel)
+        self.plan = plan
         self.iters, self.tol, self.batch = iters, tol, batch
         self.backend, self.mesh = backend, mesh
         self.warm_start = warm_start
@@ -276,10 +311,15 @@ class LinsysServer:
         fp = self.store.key(self.solver, sys, precision=self.precision,
                             **prm)
         dtype = sys.A_blocks.dtype
+        # the dispatch identity is the PLAN's signature (backend, kernel,
+        # precision, worker/model axes...) with the per-system kernel
+        # resolution folded in — plus the shape/params/batch dimensions
+        # the compiled executor closes over
         executor_key = (self.solver.name, sys.m, sys.p, sys.n, str(dtype),
                         sys.structure, sys.mode,
-                        tuple(sorted(prm.items())), self.backend,
-                        self.batch, self.iters, use_kernel, self.precision)
+                        tuple(sorted(prm.items())),
+                        self.plan.replace(kernel=use_kernel).signature(),
+                        self.batch, self.iters)
         self._systems[fp] = _System(sys=sys, prm=prm, dtype=dtype,
                                     executor_key=executor_key,
                                     use_kernel=use_kernel)

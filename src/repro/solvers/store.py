@@ -46,7 +46,7 @@ import logging
 import os
 import shutil
 from collections import OrderedDict
-from typing import Any, Dict, Optional
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -113,10 +113,48 @@ class StoreStats:
     disk_writes: int = 0    # entries persisted
     resume_misses: int = 0  # misses during a warm-start resume (visible
                             # cost that used to be silent — see api.solve)
+    block_hits: int = 0     # per-block reuses (``blockwise_factors``)
+    block_misses: int = 0   # per-block refactorizations
 
     @property
     def total_hits(self) -> int:
         return self.hits + self.disk_hits
+
+
+class BlockReuse(NamedTuple):
+    """What a ``blockwise_factors`` assembly reused vs refactorized —
+    the number the elastic runtime reports after a repartition."""
+    reused: int
+    prepared: int
+
+
+def block_fingerprint(solver_name: str, A_block: np.ndarray,
+                      params: Dict[str, Any],
+                      precision: str = "default") -> str:
+    """Content hash of ONE row block's factorization inputs.
+
+    Mirrors :func:`fingerprint` at block granularity: solver, the block's
+    partition slice shape (p, n), dtype, resolved params, the block's
+    bytes, and a non-default precision.  Two partitions that happen to
+    cut identical (content, shape) blocks therefore share entries — that
+    is the point: a worker rejoining a previously-seen partition reuses
+    every unchanged block's factors instead of re-preparing them.
+    """
+    A_block = np.asarray(A_block)
+    h = hashlib.sha256()
+    h.update(f"block-solver={solver_name}".encode())
+    h.update(f"slice={tuple(A_block.shape)}".encode())
+    h.update(f"dtype={A_block.dtype}".encode())
+    for k in sorted(params):
+        try:
+            v = repr(float(params[k]))
+        except (TypeError, ValueError):
+            v = repr(params[k])
+        h.update(f"param:{k}={v}".encode())
+    h.update(np.ascontiguousarray(A_block).tobytes())
+    if precision != "default":
+        h.update(f"precision={precision}".encode())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -175,13 +213,19 @@ class FactorStore:
     """
 
     def __init__(self, capacity: int = 8,
-                 directory: Optional[str] = None) -> None:
+                 directory: Optional[str] = None,
+                 block_capacity: int = 256) -> None:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if block_capacity < 1:
+            raise ValueError(
+                f"block_capacity must be >= 1, got {block_capacity}")
         self.capacity = capacity
+        self.block_capacity = block_capacity
         self.directory = directory
         self.stats = StoreStats()
         self._mem: "OrderedDict[str, Any]" = OrderedDict()
+        self._block_mem: "OrderedDict[str, Any]" = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._mem)
@@ -314,6 +358,156 @@ class FactorStore:
         while len(self._mem) > self.capacity:
             self._mem.popitem(last=False)
             self.stats.evictions += 1
+
+    # ----- block tier (per-block reuse across repartitions) -----------------
+    # A repartition (elastic join/rejoin) changes the system fingerprint,
+    # so the whole-system tiers above always miss — but any block whose
+    # (content, slice shape, dtype, solver, params) is unchanged has the
+    # SAME factorization.  ``blockwise_factors`` assembles the full factor
+    # pytree from cached per-block slices plus ONE stacked ``prepare``
+    # over the missing blocks, and reports reuse vs refactorization.
+    # Valid only for solvers whose ``prepare`` is per-block independent
+    # and whose factor leaves all carry a leading worker axis
+    # (``supports_block_store`` — the projection family).
+
+    def blockwise_factors(self, solver, sys: BlockSystem, *,
+                          use_kernel: bool = False,
+                          precision: str = "default", **params):
+        """``(factors, BlockReuse)`` for ``sys`` with per-block caching.
+
+        Counts one ``block_hit`` per reused block and one ``block_miss``
+        per refactorized one; the missing blocks are prepared in ONE
+        stacked ``solver.prepare`` call (they are just fewer worker
+        blocks).  The assembled full-system entry is also written to the
+        whole-system tiers, so later same-partition solves hit there.
+        """
+        solver = self._as_solver(solver)
+        if not getattr(solver, "supports_block_store", False):
+            raise ValueError(
+                f"solver {solver.name!r} does not declare a per-block-"
+                f"independent prepare (supports_block_store=False); "
+                f"blockwise reuse would assemble wrong factors")
+        if sys.is_sparse:
+            raise ValueError(
+                "blockwise factor reuse is dense-only: sparse operands "
+                "carry a shared column support that a per-block cache "
+                "cannot slice; densify() or use the whole-system tiers")
+        prm = solver.resolve_params(sys, **params)
+        A = np.asarray(jax.device_get(sys.A_blocks))
+        keys = [block_fingerprint(solver.name, A[i], prm, precision)
+                for i in range(sys.m)]
+        blocks: Dict[int, Any] = {}
+        for i, bk in enumerate(keys):
+            blk = self._block_lookup(bk)
+            if blk is not None:
+                blocks[i] = blk
+        missing = [i for i in range(sys.m) if i not in blocks]
+        self.stats.block_hits += sys.m - len(missing)
+        self.stats.block_misses += len(missing)
+        if missing:
+            sub = solver.prepare(jnp.asarray(A[np.array(missing)]), prm)
+            for j, i in enumerate(missing):
+                blk = jax.tree.map(lambda leaf: leaf[j], sub)
+                self._block_insert(keys[i], solver, prm, blk)
+                blocks[i] = blk
+        factors = jax.tree.map(
+            lambda *leaves: jnp.stack(leaves, axis=0),
+            *[blocks[i] for i in range(sys.m)])
+        reuse = BlockReuse(reused=sys.m - len(missing),
+                           prepared=len(missing))
+        # seed the whole-system tiers so same-partition callers hit there
+        # (NOT through ``insert`` — an assembly is neither a system-level
+        # hit nor a miss; only the per-block counters moved).  Transforms
+        # apply to the RETURNED factors on every path, seeded or not.
+        sys_key = fingerprint(solver.name, sys, prm, precision)
+        if use_kernel:
+            factors = (self._augment(solver, sys_key, factors)
+                       if sys_key in self._mem
+                       else solver.kernel_factors(factors))
+        if precision != "default":
+            factors = solver.cast_factors(factors, precision)
+        if sys_key not in self._mem:
+            self._disk_store(sys_key, solver, sys, prm, factors)
+            self._insert(sys_key, factors)
+        return factors, reuse
+
+    def _block_lookup(self, key: str):
+        blk = self._block_mem.get(key)
+        if blk is not None:
+            self._block_mem.move_to_end(key)
+            return blk
+        blk = self._block_disk_load(key)
+        if blk is not None:
+            self._block_mem[key] = blk
+            self._trim_blocks()
+        return blk
+
+    def _block_insert(self, key: str, solver, prm: Dict[str, Any],
+                      blk: Any) -> None:
+        self._block_mem[key] = blk
+        self._block_mem.move_to_end(key)
+        self._trim_blocks()
+        self._block_disk_store(key, solver, prm, blk)
+
+    def _trim_blocks(self) -> None:
+        while len(self._block_mem) > self.block_capacity:
+            self._block_mem.popitem(last=False)
+            self.stats.evictions += 1
+
+    def _block_dir(self, key: str) -> str:
+        return os.path.join(self.directory, "blocks", key)
+
+    def _block_disk_store(self, key: str, solver, prm: Dict[str, Any],
+                          blk: Any) -> None:
+        if self.directory is None:
+            return
+        root = os.path.join(self.directory, "blocks")
+        os.makedirs(root, exist_ok=True)
+        tmp = os.path.join(root, f"tmp.{key}")
+        final = self._block_dir(key)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves: list = []
+        structure = _encode(blk, leaves)
+        manifest = {
+            "key": key,
+            "solver": solver.name,
+            "params": {k: float(v) for k, v in prm.items()},
+            "structure": structure,
+            "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                       for l in leaves],
+        }
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, COMMIT), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self.stats.disk_writes += 1
+
+    def _block_disk_load(self, key: str) -> Any:
+        if self.directory is None:
+            return None
+        path = self._block_dir(key)
+        if not os.path.exists(os.path.join(path, COMMIT)):
+            return None
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves = []
+        for i, ref in enumerate(manifest["leaves"]):
+            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            if list(arr.shape) != list(ref["shape"]) \
+                    or str(arr.dtype) != ref["dtype"]:
+                raise ValueError(
+                    f"factor-store block entry corrupt at {path}: leaf "
+                    f"{i} is {arr.shape}/{arr.dtype}, manifest says "
+                    f"{ref['shape']}/{ref['dtype']}")
+            leaves.append(arr)
+        return _decode(manifest["structure"], leaves)
 
     # ----- disk tier --------------------------------------------------------
     def _entry_dir(self, key: str) -> str:

@@ -1,0 +1,9 @@
+"""R009 violations: internal code leaning on the deprecated kwarg shim."""
+
+
+def run(solver, sys_, mesh, store):
+    res = solver.solve(sys_, iters=100, backend="mesh", mesh=mesh,
+                       use_kernel=True)
+    many = solver.solve_many(sys_, [sys_.b_blocks], store=store,
+                             precision="mixed")
+    return res, many

@@ -1,0 +1,11 @@
+"""R009 conforming: the execution surface travels on ONE plan."""
+from repro.solvers import ExecutionPlan
+
+
+def run(solver, sys_, mesh, store):
+    plan = ExecutionPlan(backend="mesh", mesh=mesh, kernel=True,
+                         store=store)
+    res = solver.solve(sys_, iters=100, plan=plan)
+    many = solver.solve_many(sys_, [sys_.b_blocks],
+                             plan=plan.replace(kernel=False))
+    return res, many

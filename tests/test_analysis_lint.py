@@ -23,6 +23,7 @@ RULE_CASES = [
     ("R006", "r006_bad.py", "r006_ok.py"),
     ("R007", "r007_bad.py", "r007_ok.py"),
     ("R008", "r008_bad.py", "r008_ok.py"),
+    ("R009", "repro/r009_bad.py", "repro/r009_ok.py"),
 ]
 
 

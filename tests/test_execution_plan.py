@@ -1,0 +1,143 @@
+"""ExecutionPlan consolidation (repro.solvers.capability).
+
+PR 10's api_redesign contract: the loose execution-surface kwargs of
+``solve`` / ``solve_many`` (``backend=``, ``mesh=``, ``use_kernel=``,
+``precision=``, ``redundancy=``, ``alive_schedule=``, ``warm_state=``,
+``factors=``, ``store=``, ``worker_axes=``, ``model_axis=``) survive
+only as a deprecation shim that builds the SAME plan —
+
+  * the plan path is BIT-IDENTICAL to the legacy-kwarg path for every
+    combination of solver x backend x kernel x redundancy exercised
+    here (same jit cache keys, same numerics, no epsilon);
+  * a legacy call emits exactly ONE DeprecationWarning, however many
+    loose kwargs it passes; the plan path emits none;
+  * mixing ``plan=`` with loose kwargs is an error, never a silent
+    merge (the plan must not lie about what runs).
+
+Internal call sites are held to the plan surface by lint rule R009.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.data import linsys
+from repro.launch import mesh as mesh_lib
+from repro.solvers.capability import ExecutionPlan
+
+PROJ = ["apc", "consensus", "cimmino"]
+ITERS = 80
+
+
+@pytest.fixture(scope="module")
+def sys_():
+    return linsys.conditioned_gaussian(n=64, m=4, cond=10.0, seed=3)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return mesh_lib.solver_mesh(1, 1)
+
+
+def _legacy(call, **kw):
+    """Run a legacy-kwarg call asserting the one-warning contract."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = call(**kw)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "ExecutionPlan" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    return out
+
+
+def _combos(sys_, mesh):
+    sched = np.stack([np.array([i != (t % sys_.m) for i in range(sys_.m)])
+                      for t in range(ITERS)])
+    return {
+        "local": {},
+        "kernel": {"use_kernel": True},
+        "mesh": {"backend": "mesh", "mesh": mesh},
+        "mesh_kernel": {"backend": "mesh", "mesh": mesh,
+                        "use_kernel": True},
+        "redundant": {"redundancy": 2, "alive_schedule": sched},
+    }
+
+
+_KEYMAP = {"use_kernel": "kernel"}
+
+
+def _plan_of(legacy_kw):
+    return ExecutionPlan(**{_KEYMAP.get(k, k): v
+                            for k, v in legacy_kw.items()})
+
+
+@pytest.mark.parametrize("combo", ["local", "kernel", "mesh",
+                                   "mesh_kernel", "redundant"])
+@pytest.mark.parametrize("name", PROJ)
+def test_plan_bit_identical_to_legacy_kwargs(sys_, mesh, name, combo):
+    legacy_kw = _combos(sys_, mesh)[combo]
+    s = solvers.get(name)
+    prm = s.resolve_params(sys_)
+    r_old = _legacy(s.solve, sys=sys_, iters=ITERS, **legacy_kw, **prm) \
+        if legacy_kw else s.solve(sys_, iters=ITERS, **prm)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        r_new = s.solve(sys_, iters=ITERS, plan=_plan_of(legacy_kw), **prm)
+    assert np.array_equal(np.asarray(r_new.x), np.asarray(r_old.x))
+    assert np.array_equal(np.asarray(r_new.residuals),
+                          np.asarray(r_old.residuals))
+
+
+def test_solve_many_plan_bit_identical(sys_):
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    B = np.linspace(-1.0, 1.0, 3 * sys_.N).reshape(3, sys_.N)
+    r_old = _legacy(s.solve_many, sys=sys_, B=B, iters=ITERS,
+                    use_kernel=True, **prm)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        r_new = s.solve_many(sys_, B, iters=ITERS,
+                             plan=ExecutionPlan(kernel=True), **prm)
+    assert np.array_equal(np.asarray(r_new.x), np.asarray(r_old.x))
+    assert np.array_equal(np.asarray(r_new.residuals),
+                          np.asarray(r_old.residuals))
+
+
+def test_warm_start_kwarg_shim_matches_plan(sys_):
+    s = solvers.get("apc")
+    prm = s.resolve_params(sys_)
+    half = s.solve(sys_, iters=40, **prm)
+    r_old = _legacy(s.solve, sys=sys_, iters=40, warm_state=half.state,
+                    **prm)
+    r_new = s.solve(sys_, iters=40,
+                    plan=ExecutionPlan(warm_state=half.state), **prm)
+    assert np.array_equal(np.asarray(r_new.x), np.asarray(r_old.x))
+
+
+def test_one_warning_however_many_kwargs(sys_, mesh):
+    """Three loose kwargs, one warning — the shim warns per CALL."""
+    s = solvers.get("apc")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        s.solve(sys_, iters=5, backend="mesh", mesh=mesh, use_kernel=True,
+                precision="default")
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    msg = str(dep[0].message)
+    assert "ExecutionPlan" in msg and "plan=" in msg
+
+
+def test_plan_plus_legacy_kwargs_is_an_error(sys_, mesh):
+    s = solvers.get("apc")
+    with pytest.raises(ValueError, match="both plan="):
+        s.solve(sys_, iters=5, plan=ExecutionPlan(), backend="mesh",
+                mesh=mesh)
+    with pytest.raises(ValueError, match="both plan="):
+        s.solve_many(sys_, np.ones((2, sys_.N)), iters=5,
+                     plan=ExecutionPlan(), use_kernel=True)
+
+
+def test_plan_type_checked(sys_):
+    with pytest.raises(TypeError, match="ExecutionPlan"):
+        solvers.get("apc").solve(sys_, iters=5, plan={"kernel": True})
